@@ -1,0 +1,61 @@
+"""Shared benchmark helpers: timing, CSV rows, benchmark DFA zoo."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+ROWS: list[tuple[str, float, float]] = []
+
+
+def emit(name: str, us_per_call: float, derived: float) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived:.6g}")
+
+
+def time_us(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def suite_cached(kind: str):
+    """Membership-semantics suites (paper's |Q| regime; see EXPERIMENTS.md)."""
+    from repro.core import compile_pattern_suite
+    return compile_pattern_suite(kind, search=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _zoo_cached(max_states: int, seed: int):
+    from repro.core import random_dfa
+    rng = np.random.default_rng(seed)
+    zoo = []
+    for name, dfa in list(suite_cached("pcre").items())[:6]:
+        zoo.append((f"pcre:{name}", dfa))
+    for name, dfa in list(suite_cached("prosite").items())[:6]:
+        zoo.append((f"prosite:{name}", dfa))
+    # random DFAs extend |Q| to the paper's PROSITE range (up to 1288)
+    for q in (16, 64, 128, 256, max_states, 1288):
+        zoo.append((f"random:q{q}", random_dfa(q, 16, rng=rng)))
+    return zoo
+
+
+def dfa_zoo(max_states: int = 512, seed: int = 0):
+    """(name, DFA) pairs spanning |Q| like the paper's suites."""
+    return list(_zoo_cached(max_states, seed))
+
+
+def random_input(dfa, n: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=n, dtype=np.uint8)

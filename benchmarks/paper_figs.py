@@ -1,0 +1,245 @@
+"""Benchmarks reproducing each paper table/figure.
+
+One function per figure; all emit CSV rows ``name,us_per_call,derived``.
+Wall-clock numbers are single-host CPU (this container); the paper's *model*
+quantities (work-based speedup, gamma, I_max reduction) are hardware-
+independent and are the reproduction targets.  See EXPERIMENTS.md
+§Paper-validation for the comparison against the paper's claims.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (SpecDFAEngine, compile_pattern_suite, i_max_r,
+                        random_dfa, sequential_state, weighted_partition)
+from repro.core.engine import match_chunks_lanes
+
+from .common import dfa_zoo, emit, random_input, suite_cached, time_us
+
+N_INPUT = 200_000
+
+
+# --------------------------------------------------------------------------
+# Fig. 10 / Fig. 15: speedup vs |Q|, with and without I_max optimization
+# --------------------------------------------------------------------------
+
+def bench_speedup_vs_states(p: int = 40) -> None:
+    for name, dfa in dfa_zoo():
+        data = random_input(dfa, N_INPUT)
+        eng_look = SpecDFAEngine(dfa, num_chunks=p, mode="lookahead")
+        eng_basic = SpecDFAEngine(dfa, num_chunks=p, mode="basic")
+        res_l = eng_look.membership(data)
+        res_b = eng_basic.membership(data)
+        assert res_l.final_state == res_b.final_state
+        us = time_us(lambda: eng_look.membership(data))
+        q = dfa.n_states
+        predicted = 1 + (p - 1) / max(q, 1)           # Eq. 15 (basic)
+        emit(f"fig10/lookahead/{name}/P{p}", us, res_l.model_speedup)
+        if dfa.n_classes ** 2 * q <= 2_000_000:       # runtime r=2 tables
+            eng_r2 = SpecDFAEngine(dfa, num_chunks=p, mode="lookahead",
+                                   lookahead_r=2)
+            res_r2 = eng_r2.membership(data)
+            assert res_r2.final_state == res_l.final_state
+            emit(f"fig10/lookahead_r2/{name}/P{p}", 0.0, res_r2.model_speedup)
+        emit(f"fig15/basic/{name}/P{p}", 0.0, res_b.model_speedup)
+        emit(f"fig15/predicted/{name}/P{p}", 0.0, predicted)
+        # Fig 10(b)/(d): Imax optimization gain over matching all |Q|
+        emit(f"fig10b/imax_gain/{name}", 0.0,
+             res_l.model_speedup / max(res_b.model_speedup, 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Fig. 11: Holub–Stekr [19] baseline (speed-down when |Q| > |P|)
+# --------------------------------------------------------------------------
+
+def bench_holub_stekr(p: int = 40) -> None:
+    for name, dfa in dfa_zoo():
+        data = random_input(dfa, N_INPUT // 4)
+        eng = SpecDFAEngine(dfa, num_chunks=p, mode="holub")
+        res = eng.membership(data)
+        # paper plots speed-downs as negative values
+        s = res.model_speedup
+        emit(f"fig11/holub/{name}/P{p}", 0.0, s if s >= 1 else -1.0 / s)
+
+
+# --------------------------------------------------------------------------
+# Fig. 12: ScanProsite-style backtracking baseline vs our matcher
+# --------------------------------------------------------------------------
+
+def _backtrack_search(pattern_ast, data: bytes) -> int:
+    """Perl-style backtracking matcher (the ScanProsite stand-in).
+
+    findall = ScanProsite's find-every-signature mode: forces a full scan,
+    matching our engine's whole-input membership semantics (search would
+    early-exit on the first hit and measure nothing).
+    """
+    import re as _re  # python re IS a backtracking engine, like Perl's
+    return len(_re.findall(pattern_ast, data))
+
+
+def bench_scanprosite() -> None:
+    from repro.core.regex import prosite_to_regex
+    from repro.core import PROSITE_PATTERNS
+    rng = np.random.default_rng(0)
+    residues = np.frombuffer(b"ACDEFGHIKLMNPQRSTVWY", np.uint8)
+    data = rng.choice(residues, size=N_INPUT).tobytes()
+    for name, pat in list(PROSITE_PATTERNS.items())[:6]:
+        regex = prosite_to_regex(pat)
+        us_bt = time_us(lambda: _backtrack_search(regex.encode(), data),
+                        repeats=3)
+        dfa = suite_cached("prosite")[name]
+        eng = SpecDFAEngine(dfa, num_chunks=8, mode="lookahead")
+        arr = np.frombuffer(data, np.uint8)
+        us_spec = time_us(lambda: eng.membership(arr))
+        emit(f"fig12/backtrack/{name}", us_bt, 0.0)
+        emit(f"fig12/speculative/{name}", us_spec, us_bt / max(us_spec, 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Fig. 13: vectorized matching (lanes) vs scalar sequential
+# --------------------------------------------------------------------------
+
+def bench_vectorization() -> None:
+    rng = np.random.default_rng(0)
+    dfa = random_dfa(128, 16, rng=rng)
+    table = jnp.asarray(dfa.table)
+    n = 131_072
+    classes = jnp.asarray(rng.integers(0, 16, size=n, dtype=np.int32))
+    us_scalar = time_us(
+        lambda: sequential_state(table, classes, jnp.int32(0)).block_until_ready())
+    lanes = 8  # the AVX2 lane count of Listing 2
+    chunks = classes.reshape(lanes, n // lanes)
+    init = jnp.zeros((lanes, 1), jnp.int32)
+    import jax
+    matcher = jax.jit(match_chunks_lanes)
+    us_vec = time_us(
+        lambda: matcher(table, chunks, init).block_until_ready())
+    # throughput ratio per symbol: scalar does n symbols, vector n/lanes steps
+    emit("fig13/scalar_us", us_scalar, n / max(us_scalar, 1e-9))
+    emit("fig13/vector8_us", us_vec, n / max(us_vec, 1e-9))
+    emit("fig13/vector_speedup", 0.0, us_scalar / max(us_vec, 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Fig. 16 / Table 4: I_max,r reduction rates
+# --------------------------------------------------------------------------
+
+def bench_imax_reduction() -> None:
+    for suite_name in ("pcre", "prosite"):
+        suite = suite_cached(suite_name)
+        ratios = {r: [] for r in (1, 2, 3, 4)}
+        for name, dfa in suite.items():
+            qeff = max(dfa.n_states - (1 if dfa.sink >= 0 else 0), 1)
+            vals = i_max_r(dfa, 4)
+            for r, v in enumerate(vals, start=1):
+                ratios[r].append(v / qeff)
+        for r in (1, 2, 3, 4):
+            emit(f"table4/{suite_name}/r{r}", 0.0, float(np.mean(ratios[r])))
+
+
+# --------------------------------------------------------------------------
+# Fig. 17: I_max,r computation overhead (paper enum vs our dedup BFS)
+# --------------------------------------------------------------------------
+
+def bench_lookahead_overhead() -> None:
+    """Fig 17: Algorithm 4 is O(|Sigma|^r·|Q|); the dedup BFS cost follows the
+    number of inclusion-maximal image sets instead.
+
+    Finding (recorded in EXPERIMENTS.md): on *structured* pattern DFAs the
+    image lattice collapses and dedup wins asymptotically in r; on *random*
+    DFAs images stay incomparable and Algorithm 4's enumeration is faster —
+    the structure the paper exploits (Sec. 4.2) is also what makes the
+    improved analysis cheap."""
+    # structured: the two largest PROSITE membership DFAs
+    suite = suite_cached("prosite")
+    for name in ("PS00018_EF_HAND_1", "PS00135_TRYPSIN_SER"):
+        dfa = suite[name]
+        q, ncls = dfa.n_states, dfa.n_classes
+        for r in (2, 3, 4):
+            us_dedup = time_us(lambda: i_max_r(dfa, r, method="dedup"),
+                               repeats=2)
+            emit(f"fig17/structured_dedup/{name}/r{r}", us_dedup, 0.0)
+            if ncls ** r * q <= 3_000_000:
+                us_enum = time_us(lambda: i_max_r(dfa, r, method="enum"),
+                                  repeats=2)
+                emit(f"fig17/structured_enum/{name}/r{r}", us_enum,
+                     us_enum / max(us_dedup, 1e-9))
+    # random worst case: enum wins (dedup prune finds nothing to prune)
+    rng = np.random.default_rng(3)
+    dfa = random_dfa(64, 8, rng=rng)
+    for r in (2, 3):
+        us_dedup = time_us(lambda: i_max_r(dfa, r, method="dedup"), repeats=2)
+        us_enum = time_us(lambda: i_max_r(dfa, r, method="enum"), repeats=2)
+        emit(f"fig17/random_dedup/q64/r{r}", us_dedup, 0.0)
+        emit(f"fig17/random_enum/q64/r{r}", us_enum,
+             us_enum / max(us_dedup, 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Fig. 18/19: input-size scaling
+# --------------------------------------------------------------------------
+
+def bench_input_scaling() -> None:
+    rng = np.random.default_rng(4)
+    dfa = random_dfa(128, 16, rng=rng)
+    eng = SpecDFAEngine(dfa, num_chunks=40, mode="lookahead")
+    for n in (100_000, 1_000_000, 10_000_000):
+        data = rng.integers(0, 256, size=n, dtype=np.uint8)
+        res = eng.membership(data)
+        us = time_us(lambda: eng.membership(data), repeats=2)
+        emit(f"fig18/n{n}", us, res.model_speedup)  # speedup ~ const in n
+        emit(f"fig18/throughput_msym_s/n{n}", 0.0, n / max(us, 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Table 3: load balancing on inhomogeneous workers
+# --------------------------------------------------------------------------
+
+def bench_load_balance() -> None:
+    rng = np.random.default_rng(5)
+    n = 1_000_000
+    m = 8
+    for fast, slow in ((0, 5), (2, 3), (5, 0)):
+        speeds = np.array([1.41] * fast + [1.0] * slow)  # paper's 1.41 ratio
+        w = speeds / speeds.mean()
+        part = weighted_partition(n, w, m)
+        work = part.work()
+        times = work / speeds
+        cv_weighted = float(times.std() / times.mean())
+        # uniform baseline
+        from repro.core import uniform_partition
+        pu = uniform_partition(n, len(speeds), m)
+        tu = pu.work() / speeds
+        cv_uniform = float(tu.std() / tu.mean())
+        emit(f"table3/weighted/f{fast}s{slow}", 0.0, cv_weighted)
+        emit(f"table3/uniform/f{fast}s{slow}", 0.0, cv_uniform)
+
+
+# --------------------------------------------------------------------------
+# Sec. 5.2: merge strategy cost model (sequential vs tree vs 2-tier)
+# --------------------------------------------------------------------------
+
+def bench_merge_strategies() -> None:
+    # the paper's measured latencies: 2.68us intra-node, 362us inter-node
+    intra, inter = 2.68, 362.0
+    for p, cores in ((288, 15), (512, 256)):
+        nodes = max(p // cores, 1)
+        seq = p * inter / nodes + p * intra  # master pulls every L-vector
+        import math
+        tree_steps = math.ceil(math.log2(p))
+        tree = tree_steps * inter            # >=1 inter-node hop per level
+        two_tier = intra * math.ceil(math.log2(max(cores, 2))) + inter
+        emit(f"sec52/sequential/P{p}", seq, 0.0)
+        emit(f"sec52/tree/P{p}", tree, 0.0)
+        emit(f"sec52/two_tier/P{p}", two_tier, tree / max(two_tier, 1e-9))
+    # measured on-device composition cost (leaf fold)
+    from repro.kernels import ref
+    import jax
+    rng = np.random.default_rng(6)
+    maps = jnp.asarray(rng.integers(0, 512, size=(256, 512), dtype=np.int32))
+    fold = jax.jit(ref.lvec_compose_ref)
+    us = time_us(lambda: fold(maps).block_until_ready())
+    emit("sec52/local_fold_256x512", us, 0.0)

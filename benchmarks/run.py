@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+``derived`` is the figure's model quantity (speedup, gamma, reduction rate,
+CV, ...); wall-clock is single-host CPU and serves as a relative measure.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the 10M-symbol scaling points")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import paper_figs as pf
+
+    benches = [
+        ("speedup_vs_states", pf.bench_speedup_vs_states),   # Fig 10 + 15
+        ("holub_stekr", pf.bench_holub_stekr),               # Fig 11
+        ("scanprosite", pf.bench_scanprosite),               # Fig 12
+        ("vectorization", pf.bench_vectorization),           # Fig 13
+        ("imax_reduction", pf.bench_imax_reduction),         # Fig 16 / Table 4
+        ("lookahead_overhead", pf.bench_lookahead_overhead), # Fig 17
+        ("input_scaling", pf.bench_input_scaling),           # Fig 18/19
+        ("load_balance", pf.bench_load_balance),             # Table 3
+        ("merge_strategies", pf.bench_merge_strategies),     # Sec 5.2
+    ]
+    if args.only:
+        names = set(args.only.split(","))
+        benches = [(n, f) for n, f in benches if n in names]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches:
+        sys.stderr.write(f"[bench] {name}\n")
+        if args.quick and name == "input_scaling":
+            continue
+        fn()
+    sys.stderr.write(f"[bench] total {time.time() - t0:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

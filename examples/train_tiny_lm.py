@@ -1,0 +1,16 @@
+"""End-to-end training of a small LM through the full production path
+(filtered data pipeline -> sharded train step -> checkpoints -> restart).
+
+  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 200]
+"""
+
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "tinyllama-1.1b", "--smoke",
+                "--steps", "200", "--batch", "8", "--seq", "256",
+                "--microbatches", "2"] + sys.argv[1:]
+    train_main()

@@ -1,0 +1,3 @@
+"""repro: speculative parallel DFA membership testing as a multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+"""llama3-8b [arXiv:2407.21783]."""
+
+from .base import ModelConfig, register
+
+
+@register("llama3-8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b", family="dense", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_ff=14336, vocab_size=128256,
+        rope_theta=500_000.0)

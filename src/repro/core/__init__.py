@@ -1,0 +1,25 @@
+"""Core library: the paper's speculative parallel DFA membership test."""
+
+from .automata import DFA, NFA, make_search_dfa, random_dfa
+from .determinize import compile_prosite, compile_regex, minimize, nfa_to_dfa
+from .engine import MatchResult, SpecDFAEngine, match_chunks_lanes, sequential_state
+from .lookahead import LookaheadTables, build_lookahead_tables, i_max_r, i_sigma_sets
+from .lvector import (compose, compose_jnp, identity_lvec, merge_compressed,
+                      merge_scan_jnp, merge_sequential, merge_tree)
+from .partition import Partition, capacity_weights, uniform_partition, weighted_partition
+from .patterns import PCRE_PATTERNS, PROSITE_PATTERNS, compile_pattern_suite
+from .profiling import profile_capacity, profile_workers
+from .regex import parse_regex, prosite_to_regex, regex_to_nfa
+
+__all__ = [
+    "DFA", "NFA", "make_search_dfa", "random_dfa",
+    "compile_regex", "compile_prosite", "minimize", "nfa_to_dfa",
+    "MatchResult", "SpecDFAEngine", "match_chunks_lanes", "sequential_state",
+    "LookaheadTables", "build_lookahead_tables", "i_max_r", "i_sigma_sets",
+    "compose", "compose_jnp", "identity_lvec", "merge_compressed",
+    "merge_scan_jnp", "merge_sequential", "merge_tree",
+    "Partition", "capacity_weights", "uniform_partition", "weighted_partition",
+    "PCRE_PATTERNS", "PROSITE_PATTERNS", "compile_pattern_suite",
+    "profile_capacity", "profile_workers",
+    "parse_regex", "prosite_to_regex", "regex_to_nfa",
+]

@@ -1,0 +1,157 @@
+"""Finite-automata data structures.
+
+The DFA representation mirrors the paper's flattened ``SBase`` layout (Fig. 8c):
+a dense row-major transition table ``table[Q, n_classes]`` of ``int32`` state ids,
+plus a byte->class map (``byte_to_class``, the paper's ``IBase`` symbol mapping,
+Fig. 8d) so that arbitrary byte inputs index a compressed alphabet.  Alphabet
+compression (merging byte columns with identical behaviour) is standard lexer
+practice (RE2/flex) and is what makes the transition table small enough to pin
+in TPU VMEM; the paper uses the same idea when it maps characters to integers.
+
+States are integers ``0..Q-1``.  ``sink`` is the unique error state q_e: a
+non-accepting state whose every outgoing transition is a self-loop.  Every DFA
+built by this package is *complete* (total transition function) so the matching
+loop is branch-free, exactly as in the paper's Listing 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = ["NFA", "DFA", "make_search_dfa", "random_dfa"]
+
+
+@dataclasses.dataclass
+class NFA:
+    """Thompson-construction NFA over compressed byte classes.
+
+    ``transitions[s]`` is a list of ``(cls, target)`` with ``cls == -1`` for
+    epsilon moves.  ``n_classes`` byte classes; ``byte_to_class`` maps raw bytes
+    to class ids.
+    """
+
+    n_states: int
+    start: int
+    accepts: frozenset[int]
+    transitions: list[list[tuple[int, int]]]
+    n_classes: int
+    byte_to_class: np.ndarray  # [256] int32
+
+    def eps_closure(self, states: Iterable[int]) -> frozenset[int]:
+        stack = list(states)
+        seen = set(stack)
+        while stack:
+            s = stack.pop()
+            for cls, t in self.transitions[s]:
+                if cls == -1 and t not in seen:
+                    seen.add(t)
+                    stack.append(t)
+        return frozenset(seen)
+
+    def step(self, states: Iterable[int], cls: int) -> frozenset[int]:
+        out: set[int] = set()
+        for s in states:
+            for c, t in self.transitions[s]:
+                if c == cls:
+                    out.add(t)
+        return self.eps_closure(out)
+
+
+@dataclasses.dataclass
+class DFA:
+    """Complete DFA with a dense transition table (paper Fig. 8c layout)."""
+
+    table: np.ndarray  # [Q, n_classes] int32, complete
+    accepting: np.ndarray  # [Q] bool
+    start: int
+    sink: int  # error state q_e; -1 if the DFA has no dead state
+    byte_to_class: np.ndarray  # [256] int32
+
+    @property
+    def n_states(self) -> int:
+        return int(self.table.shape[0])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.table.shape[1])
+
+    def __post_init__(self) -> None:
+        self.table = np.asarray(self.table, dtype=np.int32)
+        self.accepting = np.asarray(self.accepting, dtype=bool)
+        self.byte_to_class = np.asarray(self.byte_to_class, dtype=np.int32)
+        q, c = self.table.shape
+        if not ((0 <= self.table).all() and (self.table < q).all()):
+            raise ValueError("transition table references out-of-range states")
+        if self.byte_to_class.shape != (256,):
+            raise ValueError("byte_to_class must have shape [256]")
+        if not ((0 <= self.byte_to_class).all() and (self.byte_to_class < c).all()):
+            raise ValueError("byte_to_class references out-of-range classes")
+
+    # -- host-side reference semantics (the paper's Algorithm 1) ------------
+
+    def classes_of(self, data: bytes | np.ndarray) -> np.ndarray:
+        arr = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) else np.asarray(data)
+        return self.byte_to_class[arr.astype(np.int64)]
+
+    def run(self, data: bytes | np.ndarray, state: int | None = None) -> int:
+        """delta*(state, data) computed sequentially on host (oracle)."""
+        s = self.start if state is None else state
+        for cls in self.classes_of(data):
+            s = int(self.table[s, cls])
+        return s
+
+    def accepts(self, data: bytes | np.ndarray) -> bool:
+        return bool(self.accepting[self.run(data)])
+
+    def flat_table(self) -> np.ndarray:
+        """Paper's SBase: 1-D flattened table; state ids pre-scaled by n_classes.
+
+        ``flat[s * n_classes + cls]`` already contains ``next_state * n_classes``
+        so the matching loop is a single add + gather per symbol (Listing 1).
+        """
+        return (self.table.astype(np.int64) * self.n_classes).astype(np.int32).reshape(-1)
+
+    def find_sink(self) -> int:
+        """Locate the error state if present (non-accepting, all self-loops)."""
+        for s in range(self.n_states):
+            if not self.accepting[s] and (self.table[s] == s).all():
+                return s
+        return -1
+
+
+def make_search_dfa(dfa: DFA) -> DFA:
+    """Convert membership semantics to search semantics (paper Sec. 6 usage).
+
+    Algorithm 1 returns *true* as soon as a final state is entered — i.e. it
+    tests whether any prefix matches.  Making accepting states absorbing gives
+    the identical result while preserving the clean L-vector algebra (a sticky
+    accept is just an absorbing accept state).
+    """
+    table = dfa.table.copy()
+    for s in np.flatnonzero(dfa.accepting):
+        table[s, :] = s
+    return DFA(table=table, accepting=dfa.accepting.copy(), start=dfa.start,
+               sink=dfa.sink, byte_to_class=dfa.byte_to_class.copy())
+
+
+def random_dfa(n_states: int, n_classes: int, *, rng: np.random.Generator,
+               accept_frac: float = 0.2, with_sink: bool = True) -> DFA:
+    """Random complete DFA for property tests and capacity profiling."""
+    if n_states < 2:
+        raise ValueError("need at least 2 states")
+    table = rng.integers(0, n_states, size=(n_states, n_classes), dtype=np.int32)
+    accepting = rng.random(n_states) < accept_frac
+    sink = -1
+    if with_sink:
+        sink = n_states - 1
+        table[sink, :] = sink
+        accepting[sink] = False
+    accepting[0] = False  # start state non-accepting keeps tests interesting
+    byte_to_class = rng.integers(0, n_classes, size=256, dtype=np.int32)
+    # Guarantee every class is reachable from some byte so inputs exercise all.
+    byte_to_class[:n_classes] = np.arange(n_classes, dtype=np.int32)
+    return DFA(table=table, accepting=accepting, start=0, sink=sink,
+               byte_to_class=byte_to_class)

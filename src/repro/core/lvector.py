@@ -1,0 +1,100 @@
+"""L-vector algebra (paper Sec. 4.1, Eqs. 8–9) and merge strategies.
+
+An L-vector for chunk i is the map ``L_i[j] = delta*(q_j, chunk_i)``.  L-vectors
+compose associatively: ``(L_i ; L_j)[q] = L_j[L_i[q]]`` (function composition,
+Eq. 9), with identity ``L_id[q] = q``.  This monoid is what makes every merge
+strategy — sequential (Eq. 8), binary-tree reduction, the paper's 2-tier
+hierarchical EC2 scheme, and ``jax.lax.associative_scan`` — produce the same
+result; associativity is property-tested in tests/.
+
+Two representations:
+  * full maps   [Q]        — compose with a gather; used by merges.
+  * compressed  [I_max]    — per-chunk result for candidate initial states only
+                              (the lookahead-optimized matcher's output).
+Compressed vectors merge with ``merge_compressed`` which walks chunks carrying
+one state, using the candidate inverse index (sink-safe).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "identity_lvec", "compose", "compose_jnp", "merge_sequential",
+    "merge_tree", "merge_scan_jnp", "merge_compressed",
+]
+
+
+def identity_lvec(q: int) -> np.ndarray:
+    return np.arange(q, dtype=np.int32)
+
+
+def compose(l1: np.ndarray, l2: np.ndarray) -> np.ndarray:
+    """Eq. 9: first apply l1 then l2 (numpy host form)."""
+    return l2[l1]
+
+
+def compose_jnp(l1: jnp.ndarray, l2: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 9 on device; supports leading batch dims on both operands."""
+    return jnp.take_along_axis(l2, l1, axis=-1)
+
+
+def merge_sequential(lvecs: np.ndarray, start: int) -> int:
+    """Eq. 8: fold full maps left-to-right from the known start state."""
+    s = int(start)
+    for i in range(lvecs.shape[0]):
+        s = int(lvecs[i, s])
+    return s
+
+
+def merge_tree(lvecs: np.ndarray) -> np.ndarray:
+    """Binary-tree reduction of full maps (the parallel reduction of [19])."""
+    maps = [lvecs[i] for i in range(lvecs.shape[0])]
+    if not maps:
+        raise ValueError("no maps")
+    while len(maps) > 1:
+        nxt = []
+        for i in range(0, len(maps) - 1, 2):
+            nxt.append(compose(maps[i], maps[i + 1]))
+        if len(maps) % 2:
+            nxt.append(maps[-1])
+        maps = nxt
+    return maps[0]
+
+
+def merge_scan_jnp(lvecs: jnp.ndarray) -> jnp.ndarray:
+    """All-prefix composition via associative scan: out[i] = L_0;...;L_i.
+
+    out[-1] is the whole-input map.  This is the TPU-native replacement for
+    the paper's binary tree, and doubles as the parallel-scan primitive shared
+    with the RG-LRU / mLSTM recurrences (DESIGN.md §3.3).
+    """
+    return jax.lax.associative_scan(lambda a, b: compose_jnp(a, b), lvecs, axis=0)
+
+
+def merge_compressed(
+    lvecs: np.ndarray,        # [C, I_max] final state per candidate lane
+    cand_index: np.ndarray,   # [n_classes, Q] inverse candidate map
+    lookahead_cls: np.ndarray,  # [C] reverse-lookahead class per chunk (c>=1)
+    start: int,
+    sink: int,
+) -> int:
+    """Fold compressed per-chunk results from the known start state.
+
+    Chunk 0's result lives in lane 0.  For chunk i>0 the carried state q is
+    located inside the chunk's candidate list via cand_index; by construction
+    (Eq. 11) q is always a candidate unless q is the sink, which is absorbing.
+    """
+    s = int(lvecs[0, 0]) if lvecs.shape[0] else int(start)
+    for i in range(1, lvecs.shape[0]):
+        if sink >= 0 and s == sink:
+            return sink
+        lane = int(cand_index[int(lookahead_cls[i]), s])
+        if lane < 0:
+            raise AssertionError(
+                "carried state not in candidate set — lookahead tables are wrong")
+        s = int(lvecs[i, lane])
+    return s

@@ -1,0 +1,74 @@
+"""Benchmark pattern libraries standing in for the paper's suites.
+
+The paper evaluates 299 PCRE-library regexes and 110 PROSITE protein patterns.
+Those exact corpora are not redistributable here, so we ship representative
+public patterns of both families: the PROSITE entries below are real database
+patterns (prosite.expasy.org accession ids noted), and the PCRE-style set
+covers the usual syntactic range (classes, alternation, bounded repeats).
+Benchmarks sweep these libraries plus random DFAs to reach the paper's |Q|
+ranges (up to ~1288 states).
+"""
+
+from __future__ import annotations
+
+from .automata import DFA, make_search_dfa
+from .determinize import compile_prosite, compile_regex
+
+__all__ = ["PROSITE_PATTERNS", "PCRE_PATTERNS", "compile_pattern_suite"]
+
+# Real PROSITE patterns (public database, accession in comment).
+PROSITE_PATTERNS: dict[str, str] = {
+    "PS00001_ASN_GLYCOSYLATION": "N-{P}-[ST]-{P}",
+    "PS00004_CAMP_PHOSPHO_SITE": "[RK](2)-x-[ST]",
+    "PS00005_PKC_PHOSPHO_SITE": "[ST]-x-[RK]",
+    "PS00006_CK2_PHOSPHO_SITE": "[ST]-x(2)-[DE]",
+    "PS00007_TYR_PHOSPHO_SITE": "[RK]-x(2,3)-[DE]-x(2,3)-Y",
+    "PS00008_MYRISTYL": "G-{EDRKHPFYW}-x(2)-[STAGCN]-{P}",
+    "PS00009_AMIDATION": "x-G-[RK]-[RK]",
+    "PS00016_RGD": "R-G-D",
+    "PS00017_ATP_GTP_A": "[AG]-x(4)-G-K-[ST]",
+    "PS00018_EF_HAND_1": "D-x-[DNS]-{ILVFYW}-[DENSTG]-[DNQGHRK]-{GP}-[LIVMC]-[DENQSTAGC]-x(2)-[DE]-[LIVMFYW]",
+    "PS00028_ZINC_FINGER_C2H2": "C-x(2,4)-C-x(3)-[LIVMFYWC]-x(8)-H-x(3,5)-H",
+    "PS00029_LEUCINE_ZIPPER": "L-x(6)-L-x(6)-L-x(6)-L",
+    "PS00134_TRYPSIN_HIS": "[LIVM]-[ST]-A-[STAG]-H-C",
+    "PS00135_TRYPSIN_SER": "[DNSTAGC]-[GSTAPIMVQH]-x(2)-G-[DE]-S-G-[GS]-[SAPHV]-[LIVMFYWH]-[LIVMFYSTANQH]",
+}
+
+# PCRE-style regex suite (classes, alternation, bounded repeats, escapes).
+PCRE_PATTERNS: dict[str, str] = {
+    "ipv4": r"\d{1,3}\.\d{1,3}\.\d{1,3}\.\d{1,3}",
+    "email": r"[a-zA-Z0-9_.]+@[a-zA-Z0-9]+\.[a-z]{2,4}",
+    "iso_date": r"\d{4}-\d{2}-\d{2}",
+    "hex_color": r"#[0-9a-fA-F]{6}",
+    "float": r"[0-9]+\.[0-9]+([eE][+\-]?[0-9]+)?",
+    "uri_scheme": r"(http|https|ftp)://[a-zA-Z0-9./_\-]+",
+    "c_ident": r"[a-zA-Z_][a-zA-Z0-9_]{3,8}",
+    "quoted": r'"[^"]*"',
+    "html_tag": r"<[a-z]{1,6}( [a-z]+=[a-z0-9]+)*>",
+    "uuid_like": r"[0-9a-f]{8}-[0-9a-f]{4}-[0-9a-f]{4}",
+    "phone": r"\+?[0-9]{1,3}[ \-][0-9]{2,4}[ \-][0-9]{4,6}",
+    "keyword_alt": r"(for|while|if|else|return|break|continue)",
+    "base64ish": r"[A-Za-z0-9+/]{12,16}=?=?",
+    "repeat_ab": r"(ab|ba){2,6}",
+}
+
+
+def compile_pattern_suite(kind: str = "prosite", *, search: bool = True) -> dict[str, DFA]:
+    """Compile a suite name -> minimal DFA map; search semantics by default."""
+    if kind == "prosite":
+        items = {k: compile_prosite(v) for k, v in PROSITE_PATTERNS.items()}
+    elif kind == "pcre":
+        items = {k: compile_regex(v) for k, v in PCRE_PATTERNS.items()}
+    else:
+        raise ValueError(f"unknown suite {kind!r}")
+    if search:
+        # search semantics: Sigma* R — prefix the DFA by allowing restarts.
+        # Implemented by compiling .*(pattern) directly for correctness.
+        if kind == "prosite":
+            from .regex import prosite_to_regex
+            items = {k: compile_regex(".*(" + prosite_to_regex(v) + ")")
+                     for k, v in PROSITE_PATTERNS.items()}
+        else:
+            items = {k: compile_regex(".*(" + v + ")") for k, v in PCRE_PATTERNS.items()}
+        items = {k: make_search_dfa(d) for k, d in items.items()}
+    return items

@@ -1,0 +1,49 @@
+"""Offline capacity profiling (paper Sec. 4.1 step 1, Eq. 1).
+
+On heterogeneous fleets (the paper's EC2 scenario; for us, mixed-generation
+TPU pods or cloud VMs) the partitioner needs per-worker matching capacities
+``m_k`` (symbols/us).  The paper measures several partial matching runs and
+takes the *median* — we do the same, against a benchmark DFA, using the jit'd
+sequential matcher.  Profiling is re-run at cluster (re)start, which is also
+our straggler-mitigation hook: a persistently slow host simply receives a
+proportionally smaller shard (Eq. 5).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .automata import DFA, random_dfa
+from .engine import sequential_state
+from .partition import capacity_weights
+
+__all__ = ["profile_capacity", "profile_workers"]
+
+
+def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
+                     repeats: int = 5, seed: int = 0) -> float:
+    """Median symbols/us of the sequential matcher on this host."""
+    rng = np.random.default_rng(seed)
+    if dfa is None:
+        dfa = random_dfa(64, 16, rng=rng)
+    table = jnp.asarray(dfa.table)
+    classes = jnp.asarray(rng.integers(0, dfa.n_classes, size=n_symbols, dtype=np.int32))
+    start = jnp.int32(dfa.start)
+    sequential_state(table, classes, start).block_until_ready()  # warmup/compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        sequential_state(table, classes, start).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    med = float(np.median(times))
+    return n_symbols / (med * 1e6)
+
+
+def profile_workers(capacities: np.ndarray | list[float]) -> np.ndarray:
+    """Eq. 1 weights from measured capacities (one entry per worker)."""
+    return capacity_weights(np.asarray(capacities, dtype=np.float64))

@@ -1,0 +1,10 @@
+"""Data pipeline: tokenizer, synthetic corpus, DFA filter, packed loader."""
+
+from .corpus import CorpusConfig, generate_bytes, generate_documents
+from .filter import CorpusFilter, FilterStats
+from .loader import LoaderConfig, PackedBatcher, data_stream, host_shard
+from .tokenizer import ByteTokenizer
+
+__all__ = ["CorpusConfig", "generate_bytes", "generate_documents",
+           "CorpusFilter", "FilterStats", "LoaderConfig", "PackedBatcher",
+           "data_stream", "host_shard", "ByteTokenizer"]

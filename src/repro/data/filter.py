@@ -1,0 +1,71 @@
+"""DFA corpus filtering — the paper's technique as a data-pipeline stage.
+
+Quality/PII filtering of LM training corpora is regex scanning at TB scale:
+exactly the "single long-running membership test" workload the paper targets.
+``CorpusFilter`` compiles the block-list patterns to search DFAs and runs the
+speculative chunked matcher over each document; at fleet scale the byte
+stream is split across hosts with the paper's weighted partitioning
+(loader.py) and per-host scans use the SpecDFAEngine.
+
+A document is dropped when any pattern's search DFA reaches an accepting
+(absorbing) state anywhere in the document.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from ..core import SpecDFAEngine, compile_regex, make_search_dfa
+
+__all__ = ["CorpusFilter", "FilterStats"]
+
+
+@dataclasses.dataclass
+class FilterStats:
+    scanned: int = 0
+    dropped: int = 0
+    bytes_scanned: int = 0
+    work_parallel: int = 0
+    work_sequential: int = 0
+
+    @property
+    def model_speedup(self) -> float:
+        return self.work_sequential / max(self.work_parallel, 1)
+
+
+class CorpusFilter:
+    """Block-list regex filter backed by the speculative DFA engine."""
+
+    def __init__(self, patterns: Iterable[str], *, num_chunks: int = 8,
+                 mode: str = "lookahead", partition: str = "balanced",
+                 lookahead_r: int = 1):
+        self.engines = []
+        for pat in patterns:
+            dfa = make_search_dfa(compile_regex(".*(" + pat + ")"))
+            self.engines.append(
+                SpecDFAEngine(dfa, num_chunks=num_chunks, mode=mode,
+                              partition=partition, lookahead_r=lookahead_r))
+        self.stats = FilterStats()
+
+    def document_ok(self, doc: bytes) -> bool:
+        self.stats.scanned += 1
+        self.stats.bytes_scanned += len(doc)
+        hit = False
+        for eng in self.engines:
+            res = eng.membership(np.frombuffer(doc, np.uint8))
+            self.stats.work_parallel += res.work_parallel
+            self.stats.work_sequential += res.work_sequential
+            if res.accepted:
+                hit = True
+                break
+        if hit:
+            self.stats.dropped += 1
+        return not hit
+
+    def filter(self, docs: Iterable[bytes]) -> Iterator[bytes]:
+        for doc in docs:
+            if self.document_ok(doc):
+                yield doc

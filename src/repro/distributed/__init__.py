@@ -1,0 +1,6 @@
+"""Distribution layer: sharding rules, hierarchical collectives, PP, FT."""
+
+from . import collectives, compression, fault_tolerance, pipeline, sharding
+
+__all__ = ["collectives", "compression", "fault_tolerance", "pipeline",
+           "sharding"]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's perf-critical matching loops."""
+
+from . import ops, ref
+from .ops import (flash_attn, lvec_compose, onehot_block_maps, spec_match,
+                  token_mask)
+
+__all__ = ["ops", "ref", "spec_match", "lvec_compose", "onehot_block_maps",
+           "token_mask", "flash_attn"]

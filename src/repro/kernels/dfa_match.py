@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: vectorized speculative DFA chunk matching.
+
+TPU adaptation of the paper's AVX2 gather loop (Listing 2).  Design:
+
+  * The flattened transition table (the paper's ``SBase``, with next-state
+    values *pre-scaled* by n_classes so the hot loop is add+gather, Listing 1)
+    is pinned whole in **VMEM** — grammar/scan DFAs are small (Q·n_cls·4B;
+    1288 states x 32 classes = 165 KiB, far under the ~16 MiB working-set
+    budget in DESIGN.md §2.1).
+  * Lanes = chunks x speculative candidate states.  AVX2 gave the paper 8
+    lanes; one TPU core's VPU is 8x128 int32 lanes, so a (8, 128) block of
+    (chunk, state-lane) pairs advances per step.
+  * The symbol dimension is a sequential recurrence, so it rides the grid's
+    trailing ("arbitrary") dimension with the state carried in VMEM scratch;
+    chunk blocks ride the leading ("parallel") dimension.
+
+Grid: ``(C / c_blk, L / l_blk)``; BlockSpecs stream symbol blocks HBM->VMEM
+while the carry stays resident.  On real Mosaic the in-kernel ``jnp.take``
+lowers to the TPU dynamic-gather unit; correctness is validated against
+``ref.spec_match_ref`` in interpret mode (this container is CPU-only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["spec_match_kernel", "spec_match_pallas"]
+
+
+def spec_match_kernel(table_ref, chunks_ref, init_ref, out_ref, carry_ref, *,
+                      n_classes: int, l_blocks: int):
+    """One (chunk-block, symbol-block) grid step.
+
+    table_ref : [Q * n_classes] int32, pre-scaled flat table (VMEM, whole)
+    chunks_ref: [c_blk, l_blk] int32 symbol classes for this block
+    init_ref  : [c_blk, S] int32 candidate initial states
+    out_ref   : [c_blk, S] int32 final states (written on the last l-block)
+    carry_ref : [c_blk, S] int32 VMEM scratch carrying pre-scaled states
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = init_ref[...] * n_classes
+
+    table = table_ref[...]            # resident VMEM vector [Q * n_classes]
+    syms = chunks_ref[...]            # [c_blk, l_blk]
+    states = carry_ref[...]           # [c_blk, S] pre-scaled
+
+    def body(l, states):
+        # idx = state * n_classes + class  (the paper's 1-D SBase lookup);
+        # values are already pre-scaled so no multiply in the loop.
+        idx = states + jax.lax.dynamic_slice_in_dim(syms, l, 1, axis=1)
+        return jnp.take(table, idx, axis=0)
+
+    states = jax.lax.fori_loop(0, syms.shape[1], body, states)
+    carry_ref[...] = states
+
+    @pl.when(j == l_blocks - 1)
+    def _done():
+        out_ref[...] = carry_ref[...] // n_classes
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "l_blk", "interpret"))
+def spec_match_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
+                      init_states: jnp.ndarray, *, c_blk: int = 8,
+                      l_blk: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Pallas-backed equivalent of ``ref.spec_match_ref``.
+
+    table [Q, n_cls] int32; chunks [C, L]; init_states [C, S].
+    C must divide by c_blk and L by l_blk (ops.py pads/chooses blocks).
+    """
+    q, n_cls = table.shape
+    c, l = chunks.shape
+    s = init_states.shape[1]
+    assert c % c_blk == 0 and l % l_blk == 0, (c, l, c_blk, l_blk)
+    flat = (table.astype(jnp.int32) * n_cls).reshape(-1)  # pre-scaled SBase
+    l_blocks = l // l_blk
+
+    kernel = functools.partial(spec_match_kernel, n_classes=n_cls,
+                               l_blocks=l_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(c // c_blk, l_blocks),
+        in_specs=[
+            pl.BlockSpec((q * n_cls,), lambda i, j: (0,)),       # whole table
+            pl.BlockSpec((c_blk, l_blk), lambda i, j: (i, j)),   # symbol block
+            pl.BlockSpec((c_blk, s), lambda i, j: (i, 0)),       # init states
+        ],
+        out_specs=pl.BlockSpec((c_blk, s), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, s), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((c_blk, s), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(flat, chunks.astype(jnp.int32), init_states.astype(jnp.int32))

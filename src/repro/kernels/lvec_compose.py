@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: L-vector composition (paper Eq. 9 reduction leaf).
+
+Composes a block of full state maps left-to-right:
+``acc <- m_i[acc]`` — one VMEM gather per map.  This is the leaf reduction of
+the hierarchical 2-tier merge (DESIGN.md §2): each device folds its local
+chunk maps with this kernel, then the cross-device composition runs over the
+``("pod", "data")`` mesh axes in distributed/collectives.py.
+
+The map dimension is sequential (grid "arbitrary"); the carry map lives in
+VMEM scratch.  Q rides the lane dimension (pad to 128 on hardware).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lvec_compose_kernel", "lvec_compose_pallas"]
+
+
+def lvec_compose_kernel(maps_ref, out_ref, carry_ref, *, c_blocks: int):
+    """maps_ref [c_blk, Q]; carry/out [Q] — fold maps into the carry."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = jax.lax.broadcasted_iota(
+            jnp.int32, (carry_ref.shape[0],), 0)
+
+    maps = maps_ref[...]
+    acc = carry_ref[...]
+
+    def body(i, acc):
+        row = jax.lax.dynamic_slice_in_dim(maps, i, 1, axis=0)[0]
+        return jnp.take(row, acc, axis=0)
+
+    acc = jax.lax.fori_loop(0, maps.shape[0], body, acc)
+    carry_ref[...] = acc
+
+    @pl.when(j == c_blocks - 1)
+    def _done():
+        out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "interpret"))
+def lvec_compose_pallas(maps: jnp.ndarray, *, c_blk: int = 8,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Pallas-backed equivalent of ``ref.lvec_compose_ref``.
+
+    maps [C, Q] int32 with C % c_blk == 0; returns the composed map [Q].
+    """
+    c, q = maps.shape
+    assert c % c_blk == 0, (c, c_blk)
+    c_blocks = c // c_blk
+    kernel = functools.partial(lvec_compose_kernel, c_blocks=c_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(c_blocks,),
+        in_specs=[pl.BlockSpec((c_blk, q), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((q,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((q,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(maps.astype(jnp.int32))

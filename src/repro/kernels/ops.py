@@ -1,0 +1,137 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op pads/blocks its inputs to kernel-legal shapes, dispatches to the
+Pallas kernel (interpret mode off-TPU, compiled on TPU), and exposes the same
+semantics as its ``ref.py`` oracle.  ``spec_match`` additionally implements
+the gather-vs-MXU crossover (DESIGN.md §2, beyond-paper): wide speculation
+(S approaching Q) on small-Q DFAs is cheaper as one-hot matmuls with
+log-depth composition than as an L-deep serial gather chain.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dfa_match import spec_match_pallas
+from .flash_attn import flash_attn_pallas
+from .lvec_compose import lvec_compose_pallas
+from .onehot_match import onehot_block_maps_pallas
+from .token_mask import token_mask_pallas
+
+__all__ = ["on_tpu", "spec_match", "lvec_compose", "onehot_block_maps",
+           "token_mask", "mxu_profitable", "flash_attn"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (>=1)."""
+    best = 1
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            for cand in (d, n // d):
+                if cand <= target and cand > best:
+                    best = cand
+    return best
+
+
+def mxu_profitable(q: int, s: int, *, vpu_lanes: int = 1024,
+                   mxu_dim: int = 128) -> bool:
+    """Roofline crossover for gather vs one-hot-matmul matching.
+
+    Gather path: per symbol, ceil(S / vpu_lanes) VPU gather steps.
+    MXU path: per symbol, (Q/128)^2 MXU issue slots, but removes the L-deep
+    serial chain (blocks compose in log depth).  Profitable when the DFA is
+    small enough that a [Q, Q] matmul costs about one issue slot and the
+    speculation is wide (S close to Q) — i.e. gamma ~ 1 DFAs, where the
+    paper's lookahead optimization helps least.  Heuristic, tuned in §Perf.
+    """
+    return q <= mxu_dim * 2 and s >= q // 2 and s > vpu_lanes // mxu_dim
+
+
+def spec_match(table: jnp.ndarray, chunks: jnp.ndarray,
+               init_states: jnp.ndarray, *, use_mxu: bool | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Match [C] chunks x [S] lanes; semantics of ``ref.spec_match_ref``."""
+    interpret = _interpret() if interpret is None else interpret
+    c, l = chunks.shape
+    q = table.shape[0]
+    s = init_states.shape[1]
+    if use_mxu is None:
+        use_mxu = mxu_profitable(q, s)
+    if use_mxu:
+        l_blk = _pick_block(l, 256)
+        def per_chunk(syms):
+            maps = onehot_block_maps_pallas(table, syms, l_blk=l_blk,
+                                            interpret=interpret)
+            full = lvec_compose(maps, interpret=interpret)  # [Q]
+            return full
+        full_maps = jax.vmap(per_chunk)(chunks)             # [C, Q]
+        return jnp.take_along_axis(full_maps, init_states.astype(jnp.int32), axis=1)
+    c_blk = _pick_block(c, 8)
+    l_blk = _pick_block(l, 512)
+    return spec_match_pallas(table, chunks, init_states, c_blk=c_blk,
+                             l_blk=l_blk, interpret=interpret)
+
+
+def lvec_compose(maps: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Compose [C, Q] maps left-to-right -> [Q]; see ``ref.lvec_compose_ref``."""
+    interpret = _interpret() if interpret is None else interpret
+    c = maps.shape[0]
+    c_blk = _pick_block(c, 8)
+    return lvec_compose_pallas(maps, c_blk=c_blk, interpret=interpret)
+
+
+def onehot_block_maps(table: jnp.ndarray, symbols: jnp.ndarray, *,
+                      block_l: int = 256,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Block maps via the MXU formulation; see ``ref.onehot_block_maps_ref``."""
+    interpret = _interpret() if interpret is None else interpret
+    l = symbols.shape[0]
+    block_l = _pick_block(l, block_l)
+    return onehot_block_maps_pallas(table, symbols, l_blk=block_l,
+                                    interpret=interpret)
+
+
+def token_mask(states: jnp.ndarray, allowed: jnp.ndarray, logits: jnp.ndarray,
+               *, neg: float = -1e30,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Fused grammar mask; see ``ref.token_mask_ref``.  Pads V to the tile."""
+    interpret = _interpret() if interpret is None else interpret
+    b, v = logits.shape
+    v_blk = 2048 if v % 2048 == 0 else _pick_block(v, 2048)
+    if v_blk < 128 and v >= 128:  # ragged vocab: pad to the tile boundary
+        pad = (-v) % 2048
+        logits_p = jnp.pad(logits, ((0, 0), (0, pad)))
+        allowed_p = jnp.pad(allowed.astype(jnp.uint8), ((0, 0), (0, pad)))
+        out = token_mask_pallas(states, allowed_p, logits_p, v_blk=2048,
+                                neg=neg, interpret=interpret)
+        return out[:, :v]
+    return token_mask_pallas(states, allowed, logits, v_blk=v_blk, neg=neg,
+                             interpret=interpret)
+
+
+def flash_attn(q, k, v, *, causal: bool = True, window: int = 0,
+               q_blk: int = 256, kv_blk: int = 256,
+               interpret: bool | None = None):
+    """Fused flash-attention forward; see ``ref.flash_attn_ref``.
+
+    The TPU deployment path for the attention memory bottleneck identified in
+    EXPERIMENTS.md §Perf (tiles stay in VMEM).  The XLA path
+    (models.attention_core.flash_attention) remains the autodiff/dry-run path.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    t, st = q.shape[1], k.shape[1]
+    return flash_attn_pallas(q, k, v, q_blk=_pick_block(t, q_blk),
+                             kv_blk=_pick_block(st, kv_blk), causal=causal,
+                             window=window, interpret=interpret)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the exact semantics its kernel must reproduce;
+tests sweep shapes/dtypes and assert exact equality (all outputs are integer /
+boolean, so tolerance is zero).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spec_match_ref", "lvec_compose_ref", "onehot_block_maps_ref",
+           "token_mask_ref"]
+
+
+def spec_match_ref(table: jnp.ndarray, chunks: jnp.ndarray,
+                   init_states: jnp.ndarray) -> jnp.ndarray:
+    """Match [C] chunks x [S] speculative lanes; table [Q, n_cls] int32.
+
+    chunks [C, L] int32 class ids; init_states [C, S] int32.
+    Returns [C, S] final states — the semantics of paper Listing 2.
+    """
+
+    def step(states, cls_row):  # states [C, S], cls_row [C]
+        return table[states, cls_row[:, None]], None
+
+    final, _ = jax.lax.scan(step, init_states.astype(jnp.int32), chunks.T)
+    return final
+
+
+def lvec_compose_ref(maps: jnp.ndarray) -> jnp.ndarray:
+    """Left-to-right composition of full maps: out = m_{C-1} o ... o m_0.
+
+    maps [C, Q] int32; out [Q] with out[q] = delta*(q, chunk_0 ... chunk_{C-1}).
+    """
+
+    def step(acc, m):
+        return m[acc], None
+
+    acc0 = jnp.arange(maps.shape[1], dtype=jnp.int32)
+    out, _ = jax.lax.scan(step, acc0, maps)
+    return out
+
+
+def onehot_block_maps_ref(table: jnp.ndarray, symbols: jnp.ndarray,
+                          block_l: int) -> jnp.ndarray:
+    """Per-block transition maps for the MXU formulation.
+
+    symbols [L] (L divisible by block_l).  Block b's map is
+    delta*(q, symbols[b*block_l:(b+1)*block_l]) for every q — returned as
+    int32 [L // block_l, Q].
+    """
+    q = table.shape[0]
+    blocks = symbols.reshape(-1, block_l)
+
+    def one_block(syms):
+        def step(acc, s):
+            return table[acc, s], None
+        out, _ = jax.lax.scan(step, jnp.arange(q, dtype=jnp.int32), syms)
+        return out
+
+    return jax.vmap(one_block)(blocks)
+
+
+def token_mask_ref(states: jnp.ndarray, allowed: jnp.ndarray,
+                   logits: jnp.ndarray, neg: float = -1e30) -> jnp.ndarray:
+    """Constrained-decoding logit masking.
+
+    states [B] int32 DFA states; allowed [Q, V] bool; logits [B, V] float.
+    Returns logits with disallowed tokens set to ``neg``.
+    """
+    mask = allowed[states]  # [B, V]
+    return jnp.where(mask, logits, jnp.asarray(neg, logits.dtype))
+
+
+def flash_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Oracle for the fused flash-attention kernel: q/k/v [BH, T|S, D]."""
+    d = q.shape[-1]
+    logits = jnp.einsum("htd,hsd->hts", q, k).astype(jnp.float32) * d ** -0.5
+    t, s = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(t)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    ok = jnp.ones((t, s), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    logits = jnp.where(ok[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("hts,hsd->htd", probs, v)

@@ -1,0 +1,239 @@
+"""Trip-count-weighted census of a partitioned HLO module.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so for a
+scan-over-layers + scan-over-microbatches program it under-reports flops by
+``n_layers * num_microbatches`` (verified empirically; see EXPERIMENTS.md
+§Dry-run methodology).  This module re-derives roofline inputs from
+``compiled.as_text()``:
+
+  * dot flops        — 2 * |out| * K per dot, K = prod(lhs contracting dims)
+  * approx HBM bytes — per top-level op: output bytes (+ operand bytes for
+                       dot/fusion/collective), a standard post-fusion proxy
+  * collective bytes — per kind, with ring-cost factors applied later in
+                       roofline.py (group sizes recorded here)
+
+All quantities are multiplied by the product of enclosing while-loop trip
+counts (extracted from each loop's condition constant).  Shapes in
+partitioned HLO are per-device, so every number is per-device.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["hlo_census"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "u64": 8,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast", "while",
+    "conditional", "copy-start", "copy-done", "after-all", "iota",
+    "partition-id", "replica-id",
+}
+
+_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_OPLINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\],{}]+))\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_elems_bytes(shape_txt: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for m in _SHAPE.finditer(shape_txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _split(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _HEADER.match(line)
+            if m and "=" not in line.split("(")[0]:
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+        else:
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def hlo_census(hlo: str, n_devices: int) -> dict:
+    comps = _split(hlo)
+
+    # per-computation op tables
+    tables: dict[str, list[tuple[str, str, str, str]]] = {}
+    shapes: dict[str, dict[str, str]] = {}
+    for name, lines in comps.items():
+        rows = []
+        smap = {}
+        for line in lines:
+            m = _OPLINE.match(line)
+            if not m:
+                continue
+            var, shape_txt, op = m.group(1), m.group(2), m.group(3)
+            smap[var] = shape_txt
+            rows.append((var, shape_txt, op, line))
+        tables[name] = rows
+        shapes[name] = smap
+
+    # fusion-parameter slice analysis: if a fused computation consumes its
+    # parameter N only through dynamic-slice ops, the fusion reads just the
+    # slice from HBM — charging the full operand would bill a 32K-step scan
+    # for the whole loop-carried array at every step (census v2 fix).
+    param_read_bytes: dict[str, dict[int, int]] = {}
+    for name, lines in comps.items():
+        pmap: dict[str, int] = {}
+        reads: dict[int, int] = {}
+        body = lines
+        for line in body:
+            m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\S+)\s+parameter\((\d+)\)",
+                         line)
+            if m:
+                pmap[m.group(1)] = int(m.group(3))
+        for var, ordinal in pmap.items():
+            uses = [ln for ln in body
+                    if re.search(r"[(,]\s*%?" + re.escape(var) + r"[),]", ln)
+                    and not re.search(r"%?" + re.escape(var) + r"\s*=", ln)]
+            if uses and all("dynamic-slice(" in u for u in uses):
+                sliced = 0
+                for u in uses:
+                    mm = _OPLINE.match(u)
+                    if mm:
+                        sliced += _shape_elems_bytes(mm.group(2))[1]
+                reads[ordinal] = sliced
+        if reads:
+            param_read_bytes[name] = reads
+
+    # while edges with trip counts
+    edges: dict[str, list[tuple[str, int]]] = {n: [] for n in comps}
+    for name, lines in comps.items():
+        body_txt = "\n".join(lines)
+        for m in re.finditer(
+                r"while\(%?[\w.\-]+\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+                body_txt):
+            cond, wbody = m.group(1), m.group(2)
+            cond_txt = "\n".join(comps.get(cond, []))
+            consts = [int(c) for c in
+                      re.findall(r"s32\[\]\s+constant\((\d+)\)", cond_txt)]
+            trip = max(consts) if consts else 1
+            edges[name].append((wbody, trip))
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        entry = next(iter(comps), None)
+
+    mult: dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps or mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for child, trip in edges.get(name, []):
+            visit(child, m * max(trip, 1))
+
+    if entry:
+        visit(entry, 1)
+
+    out = {
+        "dot_flops": 0.0,
+        "approx_hbm_bytes": 0.0,
+        "collectives": {k: {"bytes": 0.0, "count": 0, "static_count": 0,
+                            "group_sizes": set()} for k in _COLLECTIVES},
+        "n_computations": len(comps),
+        "n_while": sum(len(e) for e in edges.values()),
+        "max_multiplier": max(mult.values(), default=1),
+        "bytes_by_op": {},
+    }
+
+    for name, rows in tables.items():
+        m = mult.get(name)
+        if m is None:
+            continue  # unreached (fusion bodies handled via their call sites)
+        smap = shapes[name]
+        for var, shape_txt, op, line in rows:
+            _, out_bytes = _shape_elems_bytes(shape_txt)
+            if op == "dot":
+                out_elems, _ = _shape_elems_bytes(shape_txt)
+                lhs = re.search(r"dot\(%?([\w.\-]+)", line)
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                k_total = 1
+                if lhs and cdims and lhs.group(1) in smap:
+                    lhs_dims = _SHAPE.search(smap[lhs.group(1)])
+                    if lhs_dims:
+                        dims = [int(d) for d in lhs_dims.group(2).split(",") if d]
+                        for ci in cdims.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                k_total *= dims[int(ci)]
+                out["dot_flops"] += 2.0 * out_elems * k_total * m
+            if op in _COLLECTIVES:
+                gsz = n_devices
+                g = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+                if g:
+                    gsz = len(g.group(1).split(","))
+                else:
+                    g = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+                    if g:
+                        gsz = int(g.group(2))
+                    elif op == "collective-permute":
+                        gsz = 2
+                c = out["collectives"][op]
+                c["bytes"] += out_bytes * m
+                c["count"] += m
+                c["static_count"] += 1
+                c["group_sizes"].add(gsz)
+            if op not in _SKIP_BYTES_OPS:
+                total = out_bytes
+                if op == "dynamic-update-slice":
+                    # in-place slice write: count the update operand, not the
+                    # whole buffer (carry/accumulator updates)
+                    args = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*?\)|\S+)\s+[\w\-]+\(([^)]*)\)", line)
+                    if args:
+                        ops_list = re.findall(r"%?([\w.\-]+)", args.group(1))
+                        if len(ops_list) >= 2 and ops_list[1] in smap:
+                            total = _shape_elems_bytes(smap[ops_list[1]])[1]
+                elif op in ("fusion", "dot") or op in _COLLECTIVES:
+                    args = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*?\)|\S+)\s+[\w\-]+\(([^)]*)\)", line)
+                    callee = re.search(r"calls=%?([\w.\-]+)", line)
+                    reads = param_read_bytes.get(callee.group(1), {}) if callee else {}
+                    if args:
+                        for ordinal, a in enumerate(
+                                re.findall(r"%?([\w.\-]+)", args.group(1))):
+                            if a in smap:
+                                total += reads.get(
+                                    ordinal, _shape_elems_bytes(smap[a])[1])
+                out["approx_hbm_bytes"] += total * m
+                hist = out["bytes_by_op"]
+                hist[op] = hist.get(op, 0.0) + total * m
+
+    for k in out["collectives"]:
+        out["collectives"][k]["group_sizes"] = \
+            sorted(out["collectives"][k]["group_sizes"])
+    return out

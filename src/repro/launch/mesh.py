@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Axis semantics (DESIGN.md §5):
+  pod    — inter-pod data parallelism (DCI links; gradients all-reduced here)
+  data   — intra-pod DP/FSDP + DFA chunk groups
+  model  — TP/SP/EP (tensor, sequence, and expert sharding)
+
+``make_production_mesh`` is a function, not a module constant, so importing
+this module never touches jax device state (the dry-run must set XLA_FLAGS
+before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "dp_axes", "mesh_info"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (host) devices exist — tests and smoke."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"mesh {data}x{model} needs {data * model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The data-parallel axes present in this mesh (pod first)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_info(mesh: jax.sharding.Mesh) -> dict:
+    return {
+        "axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": int(mesh.devices.size),
+        "dp": int(
+            __import__("math").prod(mesh.shape[a] for a in dp_axes(mesh))),
+        "tp": int(mesh.shape.get("model", 1)),
+    }

@@ -1,0 +1,9 @@
+"""Model zoo: dense/MoE transformers, RG-LRU hybrid, xLSTM, enc-dec, VLM."""
+
+from . import api, attention_core, encdec, layers, moe, recurrent, transformer, xlstm
+from .api import (decode, init, input_specs, lm_loss, make_inputs, prefill,
+                  train_logits)
+
+__all__ = ["api", "attention_core", "encdec", "layers", "moe", "recurrent",
+           "transformer", "xlstm", "init", "train_logits", "prefill", "decode",
+           "make_inputs", "input_specs", "lm_loss"]

@@ -1,0 +1,197 @@
+"""Unified model API: one entry point per phase, dispatched on cfg.family.
+
+  init(cfg, key)                      -> params
+  train_logits(params, cfg, batch)    -> (logits, aux_loss)
+  prefill(params, cfg, batch)         -> (logits, cache)
+  decode(params, cfg, batch)          -> (logits, new_cache/state)
+  make_inputs(cfg, shape, seed)       -> concrete batch (smoke tests)
+  input_specs(cfg, shape)             -> ShapeDtypeStruct batch (dry-run)
+
+Batch layouts per family are documented in input_specs.  The modality
+frontends ([audio] seamless, [vlm] internvl) are stubs per the assignment:
+batches carry precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import encdec as ED
+from . import recurrent as RG
+from . import transformer as TF
+from . import xlstm as XL
+from .layers import Compute
+from .transformer import lm_loss
+
+__all__ = ["init", "train_logits", "prefill", "decode", "make_inputs",
+           "input_specs", "lm_loss"]
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TF.init_lm(cfg, key)
+    if cfg.family == "hybrid":
+        return RG.init_hybrid(cfg, key)
+    if cfg.family == "ssm":
+        return XL.init_xlstm(cfg, key)
+    if cfg.family == "encdec":
+        return ED.init_encdec(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def train_logits(params, cfg: ModelConfig, batch: dict, *,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+    if cfg.family in ("dense", "moe"):
+        logits, _, aux = TF.forward(params, cfg, batch["tokens"], mesh=mesh)
+        return logits, aux
+    if cfg.family == "vlm":
+        logits, _, aux = TF.forward(params, cfg, batch["tokens"],
+                                    prefix_embeds=batch["patches"], mesh=mesh)
+        return logits[:, batch["patches"].shape[1]:], aux  # text positions only
+    if cfg.family == "hybrid":
+        logits, _, aux = RG.forward_hybrid(params, cfg, batch["tokens"], mesh=mesh)
+        return logits, aux
+    if cfg.family == "ssm":
+        logits, _, aux = XL.forward_xlstm(params, cfg, batch["tokens"], mesh=mesh)
+        return logits, aux
+    if cfg.family == "encdec":
+        logits, _, aux = ED.forward_encdec(params, cfg, batch["frames"],
+                                           batch["tokens"], mesh=mesh)
+        return logits, aux
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, *, mesh=None,
+            last_only: bool = True):
+    """Prompt ingestion.  ``last_only`` (production default, §Perf iteration
+    3) emits logits for the final position only — materializing [B, T, V]
+    prompt logits is pure waste (a 537 GB tensor for recurrentgemma's 256K
+    vocab at 32K context) since decoding continues from the last position."""
+    if cfg.family in ("dense", "moe"):
+        t = batch["tokens"].shape[1]
+        cache = TF.init_cache(cfg, batch["tokens"].shape[0], t)
+        logits, cache, _ = TF.forward(params, cfg, batch["tokens"], cache=cache,
+                                      mesh=mesh, last_only=last_only)
+        return logits, cache
+    if cfg.family == "vlm":
+        b = batch["tokens"].shape[0]
+        t = batch["tokens"].shape[1] + batch["patches"].shape[1]
+        cache = TF.init_cache(cfg, b, t)
+        logits, cache, _ = TF.forward(params, cfg, batch["tokens"],
+                                      prefix_embeds=batch["patches"],
+                                      cache=cache, mesh=mesh,
+                                      last_only=last_only)
+        return logits, cache
+    if cfg.family == "hybrid":
+        logits, _, _ = RG.forward_hybrid(params, cfg, batch["tokens"],
+                                         mesh=mesh, last_only=last_only)
+        return logits, None
+    if cfg.family == "ssm":
+        logits, _, _ = XL.forward_xlstm(params, cfg, batch["tokens"],
+                                        mesh=mesh, last_only=last_only)
+        return logits, None
+    if cfg.family == "encdec":
+        b, t = batch["tokens"].shape
+        cache = ED.init_encdec_cache(cfg, b, t)
+        logits, cache, _ = ED.forward_encdec(params, cfg, batch["frames"],
+                                             batch["tokens"], cache=cache,
+                                             mesh=mesh, last_only=last_only)
+        return logits, cache
+    raise ValueError(cfg.family)
+
+
+def decode(params, cfg: ModelConfig, batch: dict, *, mesh=None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TF.decode_step(params, cfg, batch["cache"], batch["tokens"],
+                              batch["pos"], mesh=mesh)
+    if cfg.family == "hybrid":
+        return RG.decode_step_hybrid(params, cfg, batch["state"],
+                                     batch["tokens"], batch["pos"], mesh=mesh)
+    if cfg.family == "ssm":
+        return XL.decode_step_xlstm(params, cfg, batch["state"],
+                                    batch["tokens"], batch["pos"], mesh=mesh)
+    if cfg.family == "encdec":
+        return ED.decode_step_encdec(params, cfg, batch["cache"],
+                                     batch["memory"], batch["tokens"],
+                                     batch["pos"], mesh=mesh)
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# Inputs: concrete (smoke) and symbolic (dry-run)
+# --------------------------------------------------------------------------
+
+def _token_split(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """How a shape's seq_len budget maps to this family's streams."""
+    t, b = shape.seq_len, shape.global_batch
+    if cfg.family == "encdec":
+        return {"enc": t // 2, "dec": t // 2, "batch": b}
+    if cfg.family == "vlm":
+        npatch = cfg.n_patches or 256
+        return {"patches": npatch, "text": t - npatch, "batch": b}
+    return {"text": t, "batch": b}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sd = jax.ShapeDtypeStruct
+    sp = _token_split(cfg, shape)
+    b = sp["batch"]
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            out = {"frames": sd((b, sp["enc"], cfg.d_model), Compute),
+                   "tokens": sd((b, sp["dec"]), i32)}
+            if shape.kind == "train":
+                out["labels"] = sd((b, sp["dec"]), i32)
+            return out
+        out = {"tokens": sd((b, sp["text"]), i32)}
+        if cfg.family == "vlm":
+            out["patches"] = sd((b, sp["patches"], cfg.d_model), Compute)
+        if shape.kind == "train":
+            out["labels"] = sd((b, sp["text"]), i32)
+        return out
+
+    # decode shapes: one new token against a seq_len-deep cache/state
+    t_cache = shape.seq_len
+    out = {"tokens": sd((b, 1), i32), "pos": sd((), i32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        cshape = (cfg.n_layers, b, t_cache, cfg.n_kv_heads, cfg.hd)
+        out["cache"] = {"k": sd(cshape, Compute), "v": sd(cshape, Compute)}
+    elif cfg.family == "encdec":
+        cshape = (cfg.n_layers, b, t_cache, cfg.n_kv_heads, cfg.hd)
+        out["cache"] = {"k": sd(cshape, Compute), "v": sd(cshape, Compute)}
+        out["memory"] = sd((b, cfg.enc_frames_decode, cfg.d_model), Compute)
+    elif cfg.family == "hybrid":
+        out["state"] = jax.eval_shape(lambda: RG.init_hybrid_state(cfg, b))
+    elif cfg.family == "ssm":
+        out["state"] = jax.eval_shape(lambda: XL.init_xlstm_state(cfg, b))
+    return out
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (for smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def concrete(path_leaf):
+        if isinstance(path_leaf, jax.ShapeDtypeStruct):
+            if jnp.issubdtype(path_leaf.dtype, jnp.integer):
+                hi = max(cfg.vocab_size - 1, 1)
+                return jnp.asarray(rng.integers(0, hi, size=path_leaf.shape),
+                                   path_leaf.dtype)
+            return jnp.asarray(rng.normal(0, 0.02, size=path_leaf.shape)
+                               .astype(np.float32), path_leaf.dtype)
+        return path_leaf
+
+    batch = jax.tree.map(concrete, specs)
+    if "pos" in batch:
+        # decode smoke tests write at a mid-cache position
+        batch["pos"] = jnp.asarray(min(7, shape.seq_len - 2), jnp.int32)
+    return batch

@@ -1,0 +1,142 @@
+"""Encoder-decoder backbone (seamless-m4t-medium assignment entry).
+
+Per the assignment, the audio/multimodal frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings [B, T_enc, D] directly to the encoder.
+The decoder is a standard causal stack with cross-attention to the encoder
+memory.  Shape convention for LM shapes (DESIGN.md): for train/prefill the
+seq_len budget is split evenly between encoder frames and decoder tokens; for
+decode shapes the decoder KV cache has seq_len slots and the encoder memory
+length is config.enc_frames_decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+__all__ = ["init_encdec", "forward_encdec", "encode", "init_encdec_cache",
+           "decode_step_encdec"]
+
+
+def init_enc_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.hd),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_dec_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "self": L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.hd),
+        "ln_x": L.init_rmsnorm(cfg.d_model),
+        "cross": L.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.hd),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "enc": jax.vmap(functools.partial(init_enc_layer, cfg))(
+            jax.random.split(ks[1], n_enc)),
+        "dec": jax.vmap(functools.partial(init_dec_layer, cfg))(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "head": L.init_dense(ks[3], cfg.d_model, cfg.padded_vocab),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames [B, T_enc, D] (stubbed frontend output) -> memory [B, T_enc, D]."""
+    x = frames.astype(L.Compute)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, p):
+        h, _ = L.attention(p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                           positions=positions, rope_theta=cfg.rope_theta,
+                           causal=False)
+        x = x + h
+        x = x + L.swiglu_mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat_policy != "none" else body
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(cfg, p, x, memory, *, positions, cache=None, cache_index=None):
+    h, new_cache = L.attention(p["self"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                               positions=positions, rope_theta=cfg.rope_theta,
+                               cache=cache, cache_index=cache_index)
+    x = x + h
+    h, _ = L.attention(p["cross"], L.rms_norm(p["ln_x"], x, cfg.norm_eps),
+                       positions=positions, rope_theta=cfg.rope_theta,
+                       memory=memory, causal=False)
+    x = x + h
+    x = x + L.swiglu_mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def forward_encdec(params: dict, cfg: ModelConfig, frames: jnp.ndarray,
+                   dec_tokens: jnp.ndarray, *, cache: Optional[dict] = None,
+                   mesh=None, last_only: bool = False):
+    """Teacher-forced training / prefill.  Returns (logits, cache', aux)."""
+    memory = encode(params, cfg, frames)
+    x = L.embed(params["embed"], dec_tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, xs):
+        p, c = xs
+        x, nc = _dec_layer(cfg, p, x, memory, positions=positions, cache=c,
+                           cache_index=0 if c is not None else None)
+        return x, nc
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat_policy != "none" else body
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return L.dense(params["head"], x), new_cache, jnp.float32(0)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, L.Compute), "v": jnp.zeros(shape, L.Compute)}
+
+
+def decode_step_encdec(params: dict, cfg: ModelConfig, cache: dict,
+                       memory: jnp.ndarray, tokens: jnp.ndarray, pos, *,
+                       mesh=None):
+    """One-token decode against self cache + precomputed encoder memory."""
+    x = L.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(x.shape[1])[None, :]
+
+    def body(x, xs):
+        p, ck, cv = xs
+        x, nc = _dec_layer(cfg, p, x, memory, positions=positions,
+                           cache={"k": ck, "v": cv}, cache_index=pos)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache["k"], cache["v"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return L.dense(params["head"], x), new_cache

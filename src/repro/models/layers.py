@@ -1,0 +1,186 @@
+"""Functional NN layers: GQA attention (+RoPE, windows, KV cache), SwiGLU,
+RMSNorm, embeddings.
+
+Everything is pure-functional over param pytrees (nested dicts of jnp arrays).
+Matmuls are einsums with legible axis names; sharding is applied from the
+outside via path-based PartitionSpec rules (distributed/sharding.py), so these
+layers contain no mesh-specific code.  Compute dtype is bf16 with fp32 params
+(cast at use) and fp32 softmax/norm accumulation.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_dense", "dense", "init_rmsnorm", "rms_norm", "init_embedding",
+    "embed", "unembed", "rope", "init_attention", "attention",
+    "init_kv_cache_layer", "init_mlp", "swiglu_mlp", "truncated_normal",
+]
+
+Compute = jnp.bfloat16
+
+
+def truncated_normal(key, shape, scale: float, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+
+
+def init_dense(key, d_in: int, d_out: int, *, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": truncated_normal(key, (d_in, d_out), scale)}
+
+
+def dense(p, x):
+    return jnp.einsum("...i,io->...o", x, p["w"].astype(Compute))
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(Compute)
+
+
+def init_embedding(key, vocab: int, d: int):
+    return {"table": truncated_normal(key, (vocab, d), 1.0)}
+
+
+def embed(p, tokens):
+    return p["table"].astype(Compute)[tokens]
+
+
+def unembed(p, x):
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(Compute))
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x [..., T, H, D]; positions [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # [..., T, 1, half]
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA; full-causal, local-window, or cross)
+# --------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": truncated_normal(ks[0], (d_model, n_heads, head_dim), d_model ** -0.5),
+        "wk": truncated_normal(ks[1], (d_model, n_kv, head_dim), d_model ** -0.5),
+        "wv": truncated_normal(ks[2], (d_model, n_kv, head_dim), d_model ** -0.5),
+        "wo": truncated_normal(ks[3], (n_heads, head_dim, d_model),
+                               (n_heads * head_dim) ** -0.5),
+    }
+
+
+def init_kv_cache_layer(batch: int, n_kv: int, max_len: int, head_dim: int):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), Compute),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), Compute),
+    }
+
+
+def attention(p, x, *, positions, rope_theta: float, window: int = 0,
+              cache: Optional[dict] = None, cache_index=None,
+              memory: Optional[jnp.ndarray] = None, causal: bool = True,
+              q_block: int = 512, kv_block: int = 1024):
+    """GQA attention.
+
+    x [B, T, D].  Modes:
+      * self-attention over x (causal or bidirectional),
+      * cross-attention to ``memory`` [B, S, D] (causal=False, no rope),
+      * incremental decode when ``cache``/``cache_index`` are given: x is the
+        new token block, K/V are written at cache_index.
+    Long queries run the blockwise flash path; short (decode) queries run the
+    direct path.  Returns (out [B, T, D], new_cache).
+    """
+    from .attention_core import direct_attention, flash_attention
+
+    # Fused Pallas attention for inference prefill (no autodiff through it):
+    # "auto" enables it on TPU; "1" forces it (interpret mode off-TPU, used by
+    # tests).  Training keeps the XLA path (differentiable).
+    pallas_mode = os.environ.get("REPRO_PALLAS_ATTN", "auto")
+
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(Compute))
+    src = memory if memory is not None else x
+    k = jnp.einsum("bsd,dkh->bskh", src, p["wk"].astype(Compute))
+    v = jnp.einsum("bsd,dkh->bskh", src, p["wv"].astype(Compute))
+
+    if memory is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+
+    new_cache = None
+    kv_valid = None
+    q_offset = 0
+    if cache is not None:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, axis=1)
+        new_cache = {"k": k, "v": v}
+        kv_valid = cache_index + t
+        q_offset = cache_index
+
+    n_heads = q.shape[2]
+    n_kv = k.shape[2]
+    group = n_heads // n_kv
+    qg = q.reshape(b, t, n_kv, group, q.shape[-1])
+    is_causal = causal and memory is None
+    use_pallas = (cache is not None and t > 16 and t == k.shape[1]
+                  and (pallas_mode == "1"
+                       or (pallas_mode == "auto"
+                           and jax.default_backend() == "tpu")))
+    if use_pallas:
+        # prefill: full prompt, kv_valid == t -> kernel mask is exact
+        from ..kernels import ops as kops
+        hd = q.shape[-1]
+        qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * n_kv * group, t, hd)
+        kf = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)             .reshape(b * n_kv * group, t, hd)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)             .reshape(b * n_kv * group, t, hd)
+        ctx = kops.flash_attn(qf, kf, vf, causal=is_causal, window=window,
+                              interpret=pallas_mode == "1")
+        ctx = ctx.reshape(b, n_kv, group, t, hd).transpose(0, 3, 1, 2, 4)
+    elif t > 16:
+        ctx = flash_attention(qg, k, v, q_offset=q_offset, causal=is_causal,
+                              window=window, kv_valid=kv_valid,
+                              q_block=q_block, kv_block=kv_block)
+    else:
+        ctx = direct_attention(qg, k, v, q_offset=q_offset, causal=is_causal,
+                               window=window, kv_valid=kv_valid)
+    ctx = ctx.reshape(b, t, n_heads, -1)
+    out = jnp.einsum("btnh,nhd->btd", ctx, p["wo"].astype(Compute))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": truncated_normal(ks[0], (d_model, d_ff), d_model ** -0.5),
+        "wi_up": truncated_normal(ks[1], (d_model, d_ff), d_model ** -0.5),
+        "wo": truncated_normal(ks[2], (d_ff, d_model), d_ff ** -0.5),
+    }
+
+
+def swiglu_mlp(p, x):
+    gate = jnp.einsum("btd,df->btf", x, p["wi_gate"].astype(Compute))
+    up = jnp.einsum("btd,df->btf", x, p["wi_up"].astype(Compute))
+    return jnp.einsum("btf,fd->btd", jax.nn.silu(gate) * up, p["wo"].astype(Compute))

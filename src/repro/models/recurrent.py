@@ -1,0 +1,324 @@
+"""Hybrid RG-LRU + local-attention model (RecurrentGemma / Griffin family).
+
+Block pattern (config.block_pattern, default ("rglru","rglru","attn")) is
+scanned in groups; remainder layers are unrolled.  The RG-LRU training pass
+uses ``jax.lax.associative_scan`` over the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` — the same compose-maps algebra as the paper's
+L-vector merge (DESIGN.md §3.3): elements (a, b) compose as
+``(a2*a1, a2*b1 + b2)``.
+
+Decode state: RG-LRU hidden [B, d_rnn] + causal-conv tail [B, 3, d_rnn] per
+recurrent layer; ring-buffer KV cache of ``attn_window`` slots per attention
+layer, so long_500k decode memory is O(window), not O(T) — this is what makes
+the arch eligible for the 524K shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .attention_core import direct_attention
+
+__all__ = ["init_hybrid", "forward_hybrid", "init_hybrid_state", "decode_step_hybrid"]
+
+CONV_W = 4  # causal temporal-conv width (Griffin)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def init_rglru_block(key, d_model: int, d_rnn: int, d_ff: int):
+    ks = jax.random.split(key, 7)
+    return {
+        "ln2": L.init_rmsnorm(d_model),
+        "mlp": L.init_mlp(ks[6], d_model, d_ff),
+        "ln": L.init_rmsnorm(d_model),
+        "wx": L.truncated_normal(ks[0], (d_model, d_rnn), d_model ** -0.5),
+        "wgate": L.truncated_normal(ks[1], (d_model, d_rnn), d_model ** -0.5),
+        "conv_w": L.truncated_normal(ks[2], (CONV_W, d_rnn), CONV_W ** -0.5),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_r": L.truncated_normal(ks[3], (d_rnn, d_rnn), d_rnn ** -0.5),
+        "w_i": L.truncated_normal(ks[4], (d_rnn, d_rnn), d_rnn ** -0.5),
+        "lam": jnp.linspace(0.9, 0.999, d_rnn).astype(jnp.float32),  # a ~ U
+        "wo": L.truncated_normal(ks[5], (d_rnn, d_model), d_rnn ** -0.5),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """Per-step gate coefficients: h_t = a_t * h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", u, p["w_r"].astype(L.Compute))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btd,de->bte", u, p["w_i"].astype(L.Compute))
+                       .astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * r          # [B,T,d_rnn] fp32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _chunked_linear_scan(a, b, *, chunk: int = 2048):
+    """h_t = a_t * h_{t-1} + b_t via chunked prefix scan (§Perf iteration 2).
+
+    A full-length ``associative_scan`` over T = 32K materializes ~log2(T)
+    levels of [B, T, d_rnn] fp32 intermediates (134 GB/device temp in the
+    baseline dry-run).  Chunking bounds the parallel-scan working set to the
+    chunk while the cross-chunk carry stays sequential — the same
+    parallel-within / compose-across split the paper applies to DFA chunks.
+    """
+    bsz, t, d = a.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    if nc == 1:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h
+
+    a_c = a.reshape(bsz, nc, chunk, d).swapaxes(0, 1)
+    b_c = b.reshape(bsz, nc, chunk, d).swapaxes(0, 1)
+
+    def step(h_in, xs):
+        ac, bc = xs
+        acoef, bcoef = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_out = acoef * h_in[:, None] + bcoef
+        return h_out[:, -1], h_out
+
+    h0 = jnp.zeros((bsz, d), a.dtype)
+    _, hs = jax.lax.scan(step, h0, (a_c, b_c))
+    return hs.swapaxes(0, 1).reshape(bsz, t, d)
+
+
+def _causal_conv(p, u, tail=None):
+    """Depthwise causal conv width CONV_W; tail [B, CONV_W-1, d] for decode."""
+    pad = jnp.zeros((u.shape[0], CONV_W - 1, u.shape[2]), u.dtype) if tail is None \
+        else tail.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)
+    out = sum(ext[:, i : i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+              for i in range(CONV_W))
+    return out + p["conv_b"].astype(u.dtype), ext[:, -(CONV_W - 1):]
+
+
+def rglru_block(p, x, *, eps: float, state=None):
+    """x [B,T,D] -> (y, new_state).  state = {"h": [B,d], "conv": [B,3,d]}."""
+    xn = L.rms_norm(p["ln"], x, eps)
+    u = jnp.einsum("btd,de->bte", xn, p["wx"].astype(L.Compute))
+    gate = jnp.einsum("btd,de->bte", xn, p["wgate"].astype(L.Compute))
+    u, conv_tail = _causal_conv(p, u, None if state is None else state["conv"])
+    a, b = _rglru_coeffs(p, u)
+    if state is None:
+        h = _chunked_linear_scan(a, b, chunk=2048)
+        new_state = None
+    else:
+        h = a[:, 0] * state["h"] + b[:, 0]                # single step (T==1)
+        new_state = {"h": h, "conv": conv_tail}
+        h = h[:, None]
+    y = jnp.einsum("bte,ed->btd", (h.astype(L.Compute) * jax.nn.gelu(gate)),
+                   p["wo"].astype(L.Compute))
+    x = x + y
+    x = x + L.swiglu_mlp(p["mlp"], L.rms_norm(p["ln2"], x, eps))
+    return x, new_state
+
+
+# --------------------------------------------------------------------------
+# Local attention with ring-buffer cache
+# --------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.hd),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def attn_block(p, x, cfg: ModelConfig, *, positions):
+    h, _ = L.attention(p["attn"], L.rms_norm(p["ln"], x, cfg.norm_eps),
+                       positions=positions, rope_theta=cfg.rope_theta,
+                       window=cfg.attn_window)
+    x = x + h
+    return x + L.swiglu_mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+
+
+def init_ring_cache(cfg: ModelConfig, batch: int):
+    w = cfg.attn_window
+    return {
+        "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), L.Compute),
+        "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), L.Compute),
+    }
+
+
+def attn_block_decode(p, x, cfg: ModelConfig, ring: dict, pos):
+    """Single-token local attention against the ring buffer."""
+    w = cfg.attn_window
+    xn = L.rms_norm(p["ln"], x, cfg.norm_eps)
+    ap = p["attn"]
+    q = jnp.einsum("btd,dnh->btnh", xn, ap["wq"].astype(L.Compute))
+    k = jnp.einsum("btd,dkh->btkh", xn, ap["wk"].astype(L.Compute))
+    v = jnp.einsum("btd,dkh->btkh", xn, ap["wv"].astype(L.Compute))
+    q = L.rope(q, pos + jnp.zeros((1, 1), jnp.int32), cfg.rope_theta)
+    k = L.rope(k, pos + jnp.zeros((1, 1), jnp.int32), cfg.rope_theta)
+    slot = pos % w
+    rk = jax.lax.dynamic_update_slice_in_dim(ring["k"], k, slot, axis=1)
+    rv = jax.lax.dynamic_update_slice_in_dim(ring["v"], v, slot, axis=1)
+    # absolute position held by each slot (within the last w writes)
+    idx = jnp.arange(w)
+    slot_pos = pos - (pos - idx) % w
+    b, t = x.shape[0], 1
+    n_kv = k.shape[2]
+    qg = q.reshape(b, t, n_kv, -1, q.shape[-1])
+    # keys were stored post-rope at their absolute positions; mask invalids
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, rk).astype(jnp.float32)
+    logits *= q.shape[-1] ** -0.5
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    logits = jnp.where(ok[None, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(L.Compute)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", probs, rv).reshape(b, t, -1, q.shape[-1])
+    h = jnp.einsum("btnh,nhd->btd", ctx.reshape(b, t, cfg.n_heads, -1),
+                   ap["wo"].astype(L.Compute))
+    x = x + h
+    x = x + L.swiglu_mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x, {"k": rk, "v": rv}
+
+
+# --------------------------------------------------------------------------
+# Model assembly
+# --------------------------------------------------------------------------
+
+def _pattern_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    n_groups = cfg.n_layers // len(pat)
+    tail = cfg.n_layers - n_groups * len(pat)
+    return n_groups, pat[:tail]
+
+
+def init_group(cfg: ModelConfig, key, pattern):
+    ks = jax.random.split(key, len(pattern))
+    d_rnn = cfg.rglru_dim or cfg.d_model
+    out = {}
+    for i, (kind, k) in enumerate(zip(pattern, ks)):
+        out[f"b{i}_{kind}"] = (init_rglru_block(k, cfg.d_model, d_rnn, cfg.d_ff)
+                               if kind == "rglru" else init_attn_block(k, cfg))
+    return out
+
+
+def init_hybrid(cfg: ModelConfig, key) -> dict:
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    n_groups, tail = _pattern_layout(cfg)
+    ks = jax.random.split(key, 4)
+    gkeys = jax.random.split(ks[0], n_groups)
+    params = {
+        "embed": L.init_embedding(ks[1], cfg.padded_vocab, cfg.d_model),
+        "groups": jax.vmap(functools.partial(init_group, cfg, pattern=pat))(gkeys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if tail:
+        params["tail"] = init_group(cfg, ks[2], tail)
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(ks[3], cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+def forward_hybrid(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+                   mesh=None, last_only: bool = False):
+    """Training / prefill forward. Returns (logits, None, aux=0)."""
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    _, tail = _pattern_layout(cfg)
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def run_pattern(x, gp, pattern):
+        for i, kind in enumerate(pattern):
+            p = gp[f"b{i}_{kind}"]
+            if kind == "rglru":
+                x, _ = rglru_block(p, x, eps=cfg.norm_eps)
+            else:
+                x = attn_block(p, x, cfg, positions=positions)
+        return x
+
+    def body(x, gp):
+        return run_pattern(x, gp, pat), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat_policy != "none" else body
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    if tail:
+        x = run_pattern(x, params["tail"], tail)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    head = (L.unembed(params["embed"], x) if cfg.tie_embeddings
+            else L.dense(params["head"], x))
+    return head, None, jnp.float32(0)
+
+
+def _group_state(cfg: ModelConfig, batch: int, pattern) -> dict:
+    d_rnn = cfg.rglru_dim or cfg.d_model
+    st = {}
+    for i, kind in enumerate(pattern):
+        if kind == "rglru":
+            st[f"b{i}_{kind}"] = {
+                "h": jnp.zeros((batch, d_rnn), jnp.float32),
+                "conv": jnp.zeros((batch, CONV_W - 1, d_rnn), L.Compute),
+            }
+        else:
+            st[f"b{i}_{kind}"] = init_ring_cache(cfg, batch)
+    return st
+
+
+def init_hybrid_state(cfg: ModelConfig, batch: int) -> dict:
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    n_groups, tail = _pattern_layout(cfg)
+    state = {"groups": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape),
+        _group_state(cfg, batch, pat))}
+    if tail:
+        state["tail"] = _group_state(cfg, batch, tail)
+    return state
+
+
+def decode_step_hybrid(params: dict, cfg: ModelConfig, state: dict,
+                       tokens: jnp.ndarray, pos, *, mesh=None):
+    """One-token decode: O(window + d_rnn) state, O(1) in sequence length."""
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    _, tail = _pattern_layout(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def run_pattern(x, gp, st, pattern):
+        new = {}
+        for i, kind in enumerate(pattern):
+            key = f"b{i}_{kind}"
+            if kind == "rglru":
+                x, new[key] = rglru_block(gp[key], x, eps=cfg.norm_eps, state=st[key])
+            else:
+                x, new[key] = attn_block_decode(gp[key], x, cfg, st[key], pos)
+        return x, new
+
+    def body(x, xs):
+        gp, st = xs
+        x, new = run_pattern(x, gp, st, pat)
+        return x, new
+
+    x, new_groups = jax.lax.scan(body, x, (params["groups"], state["groups"]))
+    new_state = {"groups": new_groups}
+    if tail:
+        x, new_state["tail"] = run_pattern(x, params["tail"], state["tail"], tail)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (L.unembed(params["embed"], x) if cfg.tie_embeddings
+              else L.dense(params["head"], x))
+    return logits, new_state

@@ -1,0 +1,159 @@
+"""Decoder-only LM: dense, MoE, and vision-prefixed (VLM) variants.
+
+Layer stack is a ``lax.scan`` over stacked per-layer params (compile-time
+O(1) in depth) with configurable rematerialization.  The same ``forward``
+serves training (no cache) and prefill (zero cache passed in, filled and
+returned); ``decode_step`` consumes one token block against the cache.
+
+MoE layers call models.moe which picks local one-hot dispatch or the
+shard_map all-to-all EP path depending on the mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .moe import init_moe, moe_mlp
+
+__all__ = ["init_lm", "forward", "init_cache", "decode_step", "lm_loss"]
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[policy]
+    return jax.checkpoint(fn, policy=pol)
+
+
+def init_layer(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.hd),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.n_experts:
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(functools.partial(init_layer, cfg))(layer_keys)
+    params = {
+        "embed": L.init_embedding(ks[1], cfg.padded_vocab, cfg.d_model),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(ks[2], cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+def _layer_body(cfg: ModelConfig, mesh, x, p, *, positions, cache=None,
+                cache_index=None):
+    h, new_cache = L.attention(
+        p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps), positions=positions,
+        rope_theta=cfg.rope_theta, window=cfg.attn_window, cache=cache,
+        cache_index=cache_index)
+    x = x + h
+    hn = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        h, aux = moe_mlp(p["moe"], hn, top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, mesh=mesh)
+    else:
+        h, aux = L.swiglu_mlp(p["mlp"], hn), jnp.float32(0)
+    return x + h, new_cache, aux
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            cache: Optional[dict] = None,
+            mesh: Optional[jax.sharding.Mesh] = None,
+            last_only: bool = False):
+    """tokens [B, T] -> logits [B, T(+Np), V_pad].
+
+    prefix_embeds [B, Np, D] (VLM patch embeddings) are prepended.
+    If ``cache`` is given (zero-initialized, [L, B, S, K, H] leaves) this is a
+    prefill: the filled cache is returned alongside the logits.
+    Returns (logits, new_cache_or_None, aux_loss).
+    """
+    x = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    t = x.shape[1]
+    positions = jnp.arange(t)[None, :]
+
+    def body(x, xs):
+        p, c = xs
+        x, new_c, aux = _layer_body(cfg, mesh, x, p, positions=positions,
+                                    cache=c, cache_index=0 if c is not None else None)
+        return x, (new_c, aux)
+
+    body = _remat(body, cfg.remat_policy)
+    if cache is not None:
+        x, (new_cache, auxs) = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        x, (new_cache, auxs) = jax.lax.scan(
+            body, x, (params["layers"], None))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["head"], x)
+    return logits, new_cache, jnp.sum(auxs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, L.Compute), "v": jnp.zeros(shape, L.Compute)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jnp.ndarray, pos: jnp.ndarray, *,
+                mesh: Optional[jax.sharding.Mesh] = None):
+    """tokens [B, t] (t small) at position ``pos`` -> (logits, new_cache)."""
+    x = L.embed(params["embed"], tokens)
+    t = x.shape[1]
+    positions = pos + jnp.arange(t)[None, :]
+
+    def body(x, xs):
+        p, ck, cv = xs
+        x, new_c, _ = _layer_body(cfg, mesh, x, p, positions=positions,
+                                  cache={"k": ck, "v": cv}, cache_index=pos)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["head"], x)
+    return logits, new_cache
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean cross entropy in fp32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0 if mask is None else mask & (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

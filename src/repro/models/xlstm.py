@@ -1,0 +1,314 @@
+"""xLSTM (sLSTM + mLSTM) stack — the [ssm] architecture of the assignment.
+
+mLSTM: matrix-memory cell with outer-product updates.  Training/prefill runs
+the **chunkwise-parallel** form (intra-chunk quadratic with decay mask on the
+MXU; inter-chunk recurrent state (C, n) carried by a ``lax.scan``) — the same
+split the paper applies to DFA chunks: parallel within, compose across.
+Decode is the O(1) recurrent step on (C, n).
+
+sLSTM: strictly sequential scalar-memory cell (lax.scan over time).
+
+Numerics note (DESIGN.md deviations): the published exponential input gate is
+used with a clamp (|logit| <= 8) instead of the paper's running-max
+stabilizer; forget gates are sigmoid.  Stable in bf16/fp32 and shape-faithful;
+the stabilizer is orthogonal to the systems content.
+
+Block pattern: 7 mLSTM : 1 sLSTM (config.block_pattern), d_ff = 0 — the cells
+contain their own projections, there is no separate FFN.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+__all__ = ["init_xlstm", "forward_xlstm", "init_xlstm_state", "decode_step_xlstm"]
+
+CHUNK = 256
+GATE_CLAMP = 8.0
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm_block(key, d_model: int, n_heads: int):
+    ks = jax.random.split(key, 7)
+    hd = d_model // n_heads
+    s = d_model ** -0.5
+    return {
+        "ln": L.init_rmsnorm(d_model),
+        "wq": L.truncated_normal(ks[0], (d_model, n_heads, hd), s),
+        "wk": L.truncated_normal(ks[1], (d_model, n_heads, hd), s),
+        "wv": L.truncated_normal(ks[2], (d_model, n_heads, hd), s),
+        "wi": L.truncated_normal(ks[3], (d_model, n_heads), s),
+        "wf": L.truncated_normal(ks[4], (d_model, n_heads), s),
+        "wog": L.truncated_normal(ks[5], (d_model, d_model), s),
+        "wo": L.truncated_normal(ks[6], (d_model, d_model), s),
+    }
+
+
+def _mlstm_gates(p, xn):
+    i_log = jnp.clip(jnp.einsum("btd,dn->btn", xn, p["wi"].astype(L.Compute))
+                     .astype(jnp.float32), -GATE_CLAMP, GATE_CLAMP)
+    f = jax.nn.sigmoid(jnp.einsum("btd,dn->btn", xn, p["wf"].astype(L.Compute))
+                       .astype(jnp.float32))
+    return i_log, f
+
+
+def mlstm_block(p, x, *, n_heads: int, eps: float, state=None):
+    """x [B,T,D].  state = {"C": [B,N,h,h], "n": [B,N,h]} for decode."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    xn = L.rms_norm(p["ln"], x, eps)
+    q = jnp.einsum("btd,dnh->btnh", xn, p["wq"].astype(L.Compute)) * hd ** -0.5
+    k = jnp.einsum("btd,dnh->btnh", xn, p["wk"].astype(L.Compute))
+    v = jnp.einsum("btd,dnh->btnh", xn, p["wv"].astype(L.Compute))
+    i_log, f = _mlstm_gates(p, xn)
+
+    if state is not None:  # single-step decode
+        i = jnp.exp(i_log[:, 0])                                   # [B,N]
+        f0 = f[:, 0]
+        c_new = f0[..., None, None] * state["C"] + \
+            i[..., None, None] * jnp.einsum("bnh,bng->bnhg",
+                                            k[:, 0].astype(jnp.float32),
+                                            v[:, 0].astype(jnp.float32))
+        n_new = f0[..., None] * state["n"] + i[..., None] * k[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bnh,bnhg->bng", q[:, 0].astype(jnp.float32), c_new)
+        den = jnp.abs(jnp.einsum("bnh,bnh->bn", q[:, 0].astype(jnp.float32), n_new))
+        h = (num / jnp.maximum(den, 1.0)[..., None])[:, None]      # [B,1,N,h]
+        new_state = {"C": c_new, "n": n_new}
+    else:  # chunkwise-parallel training/prefill
+        ck = min(CHUNK, t)
+        assert t % ck == 0, (t, CHUNK)
+        nc = t // ck
+        def resh(a):
+            return a.reshape(b, nc, ck, *a.shape[2:]).swapaxes(0, 1)
+        qc, kc, vc = resh(q), resh(k), resh(v)
+        ic, fc = resh(i_log), resh(f)
+
+        def chunk_step(carry, xs):
+            # §Perf iteration 4: bf16 tiles, fp32 gates/state/accumulation.
+            # The [B,K,K,N] decay/score tiles dominated the xlstm prefill
+            # memory term (937 s census) in fp32; bf16 halves them while the
+            # recurrent state (C, n) and the gate log-space math stay fp32.
+            C, n = carry                       # [B,N,h,h], [B,N,h] fp32
+            qj, kj, vj, ij, fj = xs
+            lf = jnp.log(jnp.maximum(fj, 1e-9))          # [B,K,N] fp32 (tiny)
+            cum = jnp.cumsum(lf, axis=1)                  # inclusive
+            total = cum[:, -1:]
+            # intra-chunk decay: D[t,s] = exp(cum_t - cum_s + i_s), s <= t
+            dmat = cum[:, :, None] - cum[:, None, :] + ij[:, None, :]
+            mask = jnp.tril(jnp.ones((ck, ck), bool))
+            dmat = jnp.where(mask[None, :, :, None], dmat, -1e30)
+            dexp = jnp.exp(jnp.minimum(dmat, GATE_CLAMP))
+            # fp32 product, single rounding into the stored bf16 tile
+            scores = (jnp.einsum("btnh,bsnh->btsn", qj, kj,
+                                 preferred_element_type=jnp.float32)
+                      * dexp).astype(L.Compute)           # [B,t,s,N] bf16
+            intra = jnp.einsum("btsn,bsnh->btnh", scores, vj,
+                               preferred_element_type=jnp.float32)
+            # inter-chunk: state decayed to position t
+            qdec = jnp.exp(cum)[..., None] * qj.astype(jnp.float32)
+            inter = jnp.einsum("btnh,bnhg->btng", qdec, C)
+            inter_n = jnp.einsum("btnh,bnh->btn", qdec, n)
+            num = intra + inter
+            # normalizer: q . n_t = sum_s decay_s * (q . k_s)  (= scores summed)
+            den = jnp.abs(scores.astype(jnp.float32).sum(axis=2) + inter_n)
+            h = num / jnp.maximum(den, 1.0)[..., None]
+            # state update: C' = F C + sum_s exp(total - cum_s + i_s) k v^T
+            w = jnp.exp(total - cum + ij).astype(L.Compute)   # [B,K,N]
+            kv = jnp.einsum("bsn,bsnh,bsng->bnhg", w, kj, vj,
+                            preferred_element_type=jnp.float32)
+            ksum = jnp.einsum("bsn,bsnh->bnh", w, kj,
+                              preferred_element_type=jnp.float32)
+            ftot = jnp.exp(total[:, 0])[..., None]
+            C = ftot[..., None] * C + kv
+            n = ftot * n + ksum
+            return (C, n), h
+
+        c0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+        (_, _), hs = jax.lax.scan(chunk_step, (c0, n0), (qc, kc, vc, ic, fc))
+        h = hs.swapaxes(0, 1).reshape(b, t, n_heads, hd)
+        new_state = None
+
+    og = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xn, p["wog"].astype(L.Compute)))
+    y = jnp.einsum("bte,ed->btd", h.reshape(b, -1, d).astype(L.Compute) * og,
+                   p["wo"].astype(L.Compute))
+    return x + y, new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm_block(key, d_model: int):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "ln": L.init_rmsnorm(d_model),
+        "wz": L.truncated_normal(ks[0], (d_model, d_model), s),
+        "wi": L.truncated_normal(ks[1], (d_model, d_model), s),
+        "wf": L.truncated_normal(ks[2], (d_model, d_model), s),
+        "wo_gate": L.truncated_normal(ks[3], (d_model, d_model), s),
+        "wo": L.truncated_normal(ks[4], (d_model, d_model), s),
+    }
+
+
+def slstm_block(p, x, *, eps: float, state=None):
+    """Sequential scalar-memory cell.  state = {"c": [B,D], "n": [B,D]}."""
+    xn = L.rms_norm(p["ln"], x, eps)
+    z = jnp.tanh(jnp.einsum("btd,de->bte", xn, p["wz"].astype(L.Compute))
+                 .astype(jnp.float32))
+    i = jnp.exp(jnp.clip(jnp.einsum("btd,de->bte", xn, p["wi"].astype(L.Compute))
+                         .astype(jnp.float32), -GATE_CLAMP, GATE_CLAMP))
+    f = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xn, p["wf"].astype(L.Compute))
+                       .astype(jnp.float32))
+    o = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xn, p["wo_gate"].astype(L.Compute)))
+
+    if state is not None:
+        c = f[:, 0] * state["c"] + i[:, 0] * z[:, 0]
+        n = f[:, 0] * state["n"] + i[:, 0]
+        h = (c / jnp.maximum(n, 1.0))[:, None]
+        new_state = {"c": c, "n": n}
+    else:
+        def step(carry, xs):
+            c, n = carry
+            zt, it, ft = xs
+            c = ft * c + it * zt
+            n = ft * n + it
+            return (c, n), c / jnp.maximum(n, 1.0)
+        b, t, d = x.shape
+        c0 = jnp.zeros((b, d), jnp.float32)
+        (_, _), hs = jax.lax.scan(step, (c0, c0),
+                                  (z.swapaxes(0, 1), i.swapaxes(0, 1), f.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+        new_state = None
+    y = jnp.einsum("bte,ed->btd", h.astype(L.Compute) * o, p["wo"].astype(L.Compute))
+    return x + y, new_state
+
+
+# --------------------------------------------------------------------------
+# Stack assembly (pattern groups, like recurrent.py)
+# --------------------------------------------------------------------------
+
+def _pattern_layout(cfg: ModelConfig):
+    pat = cfg.block_pattern or ("mlstm",) * 7 + ("slstm",)
+    n_groups = cfg.n_layers // len(pat)
+    return n_groups, pat, pat[: cfg.n_layers - n_groups * len(pat)]
+
+
+def init_group(cfg: ModelConfig, key, pattern):
+    ks = jax.random.split(key, len(pattern))
+    out = {}
+    for i, (kind, k) in enumerate(zip(pattern, ks)):
+        out[f"b{i}_{kind}"] = (init_mlstm_block(k, cfg.d_model, cfg.n_heads)
+                               if kind == "mlstm" else init_slstm_block(k, cfg.d_model))
+    return out
+
+
+def init_xlstm(cfg: ModelConfig, key) -> dict:
+    n_groups, pat, tail = _pattern_layout(cfg)
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": L.init_embedding(ks[1], cfg.padded_vocab, cfg.d_model),
+        "groups": jax.vmap(functools.partial(init_group, cfg, pattern=pat))(
+            jax.random.split(ks[0], n_groups)),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if tail:
+        params["tail"] = init_group(cfg, ks[2], tail)
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(ks[3], cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+def _run_pattern(cfg, x, gp, pattern, states=None, decode=False):
+    new_states = {}
+    for i, kind in enumerate(pattern):
+        key = f"b{i}_{kind}"
+        st = states[key] if states is not None else None
+        if kind == "mlstm":
+            x, ns = mlstm_block(gp[key], x, n_heads=cfg.n_heads,
+                                eps=cfg.norm_eps, state=st)
+        else:
+            x, ns = slstm_block(gp[key], x, eps=cfg.norm_eps, state=st)
+        if decode:
+            new_states[key] = ns
+    return x, new_states
+
+
+def forward_xlstm(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+                  mesh=None, last_only: bool = False):
+    n_groups, pat, tail = _pattern_layout(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, gp):
+        x, _ = _run_pattern(cfg, x, gp, pat)
+        return x, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat_policy != "none" else body
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    if tail:
+        x, _ = _run_pattern(cfg, x, params["tail"], tail)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = (L.unembed(params["embed"], x) if cfg.tie_embeddings
+              else L.dense(params["head"], x))
+    return logits, None, jnp.float32(0)
+
+
+def _group_state(cfg: ModelConfig, batch: int, pattern):
+    hd = cfg.d_model // cfg.n_heads
+    st = {}
+    for i, kind in enumerate(pattern):
+        if kind == "mlstm":
+            st[f"b{i}_{kind}"] = {
+                "C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+            }
+        else:
+            st[f"b{i}_{kind}"] = {
+                "c": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                "n": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            }
+    return st
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    n_groups, pat, tail = _pattern_layout(cfg)
+    state = {"groups": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape),
+        _group_state(cfg, batch, pat))}
+    if tail:
+        state["tail"] = _group_state(cfg, batch, tail)
+    return state
+
+
+def decode_step_xlstm(params: dict, cfg: ModelConfig, state: dict,
+                      tokens: jnp.ndarray, pos, *, mesh=None):
+    n_groups, pat, tail = _pattern_layout(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, xs):
+        gp, st = xs
+        x, ns = _run_pattern(cfg, x, gp, pat, states=st, decode=True)
+        return x, ns
+
+    x, new_groups = jax.lax.scan(body, x, (params["groups"], state["groups"]))
+    new_state = {"groups": new_groups}
+    if tail:
+        x, new_state["tail"] = _run_pattern(cfg, x, params["tail"], tail,
+                                            states=state["tail"], decode=True)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (L.unembed(params["embed"], x) if cfg.tie_embeddings
+              else L.dense(params["head"], x))
+    return logits, new_state

@@ -1,0 +1,101 @@
+"""Grammar-constrained decoding backed by the paper's DFA machinery.
+
+A regex/grammar is compiled to a DFA over bytes; during decoding each
+sequence carries its DFA state, the per-state allowed-token mask is gathered
+(kernels/token_mask fuses this with logit masking on TPU), and states advance
+with the chosen tokens.
+
+Draft verification (speculative decoding's accept step) is the paper's
+algorithm verbatim: K draft tokens form a chunk matched from the sequence's
+current state in one shot, with the per-position state trajectory recovered
+from the L-vector prefix scan — parallel in K instead of K sequential steps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import DFA
+from ..kernels import ops as kops
+
+__all__ = ["GrammarConstraint"]
+
+
+class GrammarConstraint:
+    """Per-state token masks + batched state advance for byte-level vocabs."""
+
+    def __init__(self, dfa: DFA, vocab_size: int, *, use_kernel: bool = True,
+                 allow_specials: tuple[int, ...] = (), eos_id: int = 258):
+        self.dfa = dfa
+        self.vocab_size = vocab_size
+        self.use_kernel = use_kernel
+        q = dfa.n_states
+        allowed = np.zeros((q, vocab_size), np.uint8)
+        byte_cls = dfa.byte_to_class
+        nxt = dfa.table  # [Q, n_cls]
+        for v in range(min(vocab_size, 256)):
+            cls = int(byte_cls[v])
+            tgt = nxt[:, cls]
+            ok = (tgt != dfa.sink) if dfa.sink >= 0 else np.ones(q, bool)
+            allowed[:, v] = ok
+        for v in allow_specials:
+            if v < vocab_size:
+                allowed[:, v] = 1
+        # termination semantics: accepting states may emit EOS; states with no
+        # legal continuation MUST emit EOS (grammar exhausted)
+        if eos_id is not None and eos_id < vocab_size:
+            allowed[dfa.accepting, eos_id] = 1
+            dead = allowed.sum(axis=1) == 0
+            allowed[dead, eos_id] = 1
+        self.allowed = jnp.asarray(allowed)
+        # token -> class map for state advance (specials are identity moves)
+        tok_cls = np.zeros((vocab_size,), np.int32)
+        tok_cls[: min(vocab_size, 256)] = byte_cls[: min(vocab_size, 256)]
+        self.tok_is_byte = jnp.asarray(
+            (np.arange(vocab_size) < 256).astype(np.int32))
+        self.tok_cls = jnp.asarray(tok_cls)
+        self.table_j = jnp.asarray(dfa.table)
+
+    def init_states(self, batch: int) -> jnp.ndarray:
+        return jnp.full((batch,), self.dfa.start, jnp.int32)
+
+    def mask_logits(self, states: jnp.ndarray, logits: jnp.ndarray) -> jnp.ndarray:
+        """[B] states x [B, V] logits -> masked logits."""
+        v = logits.shape[-1]
+        allowed = self.allowed
+        if v > allowed.shape[1]:  # padded model vocab: pad table (disallowed)
+            allowed = jnp.pad(allowed, ((0, 0), (0, v - allowed.shape[1])))
+        if self.use_kernel:
+            return kops.token_mask(states, allowed, logits)
+        mask = allowed[states] > 0
+        return jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+
+    def advance(self, states: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Advance each sequence's DFA state by its chosen token [B]."""
+        cls = self.tok_cls[tokens]
+        nxt = self.table_j[states, cls]
+        keep = self.tok_is_byte[tokens] == 0  # specials do not move the DFA
+        return jnp.where(keep, states, nxt).astype(jnp.int32)
+
+    def verify_draft(self, state: int, draft_bytes: np.ndarray) -> tuple[int, np.ndarray]:
+        """Speculative-decoding accept test for one sequence's K draft bytes.
+
+        Returns (n_accepted, state_trajectory[K]); a draft byte is accepted
+        while the DFA stays out of the sink.  Chunked membership semantics:
+        the trajectory is the L-vector prefix of the draft chunk.
+        """
+        classes = self.dfa.classes_of(draft_bytes.astype(np.uint8))
+        states = np.zeros(len(classes), np.int32)
+        s = state
+        for i, c in enumerate(classes):
+            s = int(self.dfa.table[s, int(c)])
+            states[i] = s
+        if self.dfa.sink >= 0:
+            bad = states == self.dfa.sink
+            n_ok = int(np.argmax(bad)) if bad.any() else len(states)
+        else:
+            n_ok = len(states)
+        return n_ok, states

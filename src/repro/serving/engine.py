@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill + decode with optional grammar constraint.
+
+Production-shaped loop: requests are padded into a fixed decode batch, the
+prompt is prefetched in one prefill call, then tokens stream out of jitted
+``decode_step`` calls.  Constrained requests carry DFA states advanced by
+``GrammarConstraint`` (masks fused into the logits on TPU via the token_mask
+kernel).  Greedy and temperature sampling are supported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import api
+from ..models import transformer as TF
+from .constrained import GrammarConstraint
+
+__all__ = ["ServeConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 -> greedy
+    eos_id: int = 258
+
+
+class ServingEngine:
+    """Decode-batch server for the transformer families (dense/moe/vlm)."""
+
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig = ServeConfig(),
+                 constraint: Optional[GrammarConstraint] = None, mesh=None):
+        assert cfg.family in ("dense", "moe", "vlm")
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.constraint = constraint
+        self.mesh = mesh
+        self._decode = jax.jit(
+            lambda p, c, t, pos: TF.decode_step(p, cfg, c, t, pos, mesh=mesh))
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        logits = logits[:, -1].astype(jnp.float32)  # [B, V]
+        v = logits.shape[-1]
+        # never sample padding ids beyond the real vocab
+        if v > self.cfg.vocab_size:
+            pad = jnp.arange(v) >= self.cfg.vocab_size
+            logits = jnp.where(pad[None, :], -1e30, logits)
+        if self.serve.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.serve.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, *, seed: int = 0) -> np.ndarray:
+        """prompts [B, T_prompt] int32 -> generated tokens [B, max_new]."""
+        b, t_prompt = prompts.shape
+        max_len = t_prompt + self.serve.max_new_tokens
+        cache = TF.init_cache(self.cfg, b, max_len)
+        logits, cache, _ = TF.forward(self.params, self.cfg,
+                                      jnp.asarray(prompts), cache=cache,
+                                      mesh=self.mesh)
+        key = jax.random.PRNGKey(seed)
+        states = (self.constraint.init_states(b)
+                  if self.constraint is not None else None)
+        if states is not None:
+            # run prompt bytes through the DFA so constraints continue mid-text
+            st = np.array(states)  # writable host copy
+            for i in range(b):
+                _, traj = self.constraint.verify_draft(
+                    int(st[i]), np.asarray(prompts[i]) % 256)
+                st[i] = traj[-1] if len(traj) else st[i]
+            states = jnp.asarray(st)
+
+        out = np.full((b, self.serve.max_new_tokens), self.serve.eos_id,
+                      np.int32)
+        last = logits[:, -1:]
+        finished = np.zeros(b, bool)
+        for i in range(self.serve.max_new_tokens):
+            key, sub = jax.random.split(key)
+            step_logits = last
+            if states is not None:
+                step_logits = self.constraint.mask_logits(
+                    states, step_logits[:, -1]).reshape(step_logits.shape)
+            tok = self._sample(step_logits, sub)             # [B]
+            out[:, i] = np.where(finished, self.serve.eos_id, np.asarray(tok))
+            finished |= np.asarray(tok) == self.serve.eos_id
+            if finished.all():
+                break
+            if states is not None:
+                states = self.constraint.advance(states, tok)
+            last, cache = self._decode(self.params, cache, tok[:, None],
+                                       jnp.int32(t_prompt + i))
+        return out

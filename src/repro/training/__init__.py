@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, train step factory, checkpointing."""
+
+from .checkpoint import (CheckpointManager, latest_step, restore_checkpoint,
+                         save_checkpoint, save_checkpoint_async)
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .train_loop import (TrainOptions, init_train_state,
+                         init_train_state_sharded, make_train_step)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+           "save_checkpoint", "save_checkpoint_async", "AdamWConfig",
+           "adamw_init", "adamw_update", "cosine_lr", "TrainOptions",
+           "init_train_state", "make_train_step"]

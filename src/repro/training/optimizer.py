@@ -1,0 +1,82 @@
+"""AdamW with cosine schedule, global-norm clipping, and fully-sharded states.
+
+Hand-rolled (no optax in this environment): state = {m, v, step} pytrees
+mirroring the params, sharded with the same PartitionSpec rules (ZeRO-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, opt: dict):
+    """One AdamW step; returns (new_params, new_opt, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt["step"] + 1
+    lr = cosine_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         opt["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         opt["v"], grads)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,136 @@
+"""Training step factory: microbatched grad accumulation under pjit.
+
+``make_train_step(cfg, mesh, ...)`` returns a jit-compiled
+``train_step(state, batch) -> (state, metrics)`` with:
+
+  * gradient accumulation over ``num_microbatches`` via ``lax.scan`` —
+    bounds live activation memory to one microbatch (the dominant memory
+    lever for train_4k cells; see EXPERIMENTS.md §Perf),
+  * params/optimizer fully sharded by distributed/sharding rules,
+  * optional int8 cross-pod gradient compression with error feedback,
+  * loss = token CE (+ MoE aux), fp32 accumulation.
+
+The same factory serves the dry-run (lower/compile on ShapeDtypeStructs) and
+real training (examples/train_tiny_lm.py), so the compiled artifact analyzed
+in §Roofline is exactly the production step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed import compression as comp
+from ..distributed import sharding as shr
+from ..models import api
+from ..models.transformer import lm_loss
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainOptions", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    num_microbatches: int = 1
+    aux_loss_weight: float = 0.01
+    grad_compression: str = "none"   # none | int8
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+def init_train_state(cfg: ModelConfig, key, mesh=None,
+                     opts: TrainOptions = TrainOptions()) -> dict:
+    params = api.init(cfg, key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if opts.grad_compression == "int8" and mesh is not None \
+            and "pod" in getattr(mesh, "axis_names", ()):
+        state["err"] = comp.init_error_state(params)
+    return state
+
+
+def state_shardings(state: dict, mesh):
+    specs = {
+        "params": shr.param_specs(state["params"], mesh),
+        "opt": {"m": shr.param_specs(state["opt"]["m"], mesh),
+                "v": shr.param_specs(state["opt"]["v"], mesh),
+                "step": jax.sharding.PartitionSpec()},
+    }
+    if "err" in state:
+        specs["err"] = shr.param_specs(state["err"], mesh)
+    return shr.named(specs, mesh)
+
+
+def init_train_state_sharded(cfg: ModelConfig, key, mesh,
+                             opts: TrainOptions = TrainOptions()) -> dict:
+    """Initialize directly into the sharded layout (no host round-trip).
+
+    jit with out_shardings materializes each param shard on its device —
+    this is how a 42B-param state comes up on a real pod without ever
+    existing unsharded anywhere.
+    """
+    def make():
+        return init_train_state(cfg, key, mesh, opts)
+
+    shapes = jax.eval_shape(make)
+    sh = state_shardings(shapes, mesh)
+    return jax.jit(make, out_shardings=sh)()
+
+
+def make_train_step(cfg: ModelConfig, mesh=None,
+                    opts: TrainOptions = TrainOptions()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        logits, aux = api.train_logits(params, cfg, mb, mesh=mesh)
+        labels = mb["labels"]
+        return lm_loss(logits, labels) + opts.aux_loss_weight * aux
+
+    def train_step(state, batch):
+        params = state["params"]
+        nm = opts.num_microbatches
+
+        if nm > 1:
+            def split(x):
+                return x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g / nm, gsum)
+            loss = lsum / nm
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        new_state = dict(state)
+        if "err" in state and mesh is not None:
+            grads, new_err = comp.compressed_pod_mean(grads, state["err"], mesh)
+            new_state["err"] = new_err
+
+        new_params, new_opt, metrics = adamw_update(
+            opts.optimizer, params, grads, state["opt"])
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, mesh, state, batch_specs_tree,
+                   opts: TrainOptions = TrainOptions()):
+    """pjit-wrapped step with explicit in/out shardings (dry-run entry)."""
+    step = make_train_step(cfg, mesh, opts)
+    st_sh = state_shardings(state, mesh)
+    b_sh = shr.named(batch_specs_tree, mesh)
+    return jax.jit(step, in_shardings=(st_sh, b_sh),
+                   out_shardings=(st_sh, None), donate_argnums=(0,))

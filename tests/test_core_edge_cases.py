@@ -1,0 +1,97 @@
+"""Edge cases and invariants not covered by the main property suites."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (SpecDFAEngine, compile_prosite, compile_regex,
+                        i_max_r, make_search_dfa, random_dfa)
+from repro.core.engine import VPU_LANES
+from repro.core.patterns import PCRE_PATTERNS, PROSITE_PATTERNS
+
+
+def test_empty_input():
+    dfa = compile_regex("a*")
+    for mode in ("lookahead", "basic", "holub"):
+        eng = SpecDFAEngine(dfa, num_chunks=4, mode=mode)
+        res = eng.membership(b"")
+        assert res.accepted  # a* accepts empty
+        assert res.final_state == dfa.start
+
+
+def test_input_shorter_than_chunks():
+    dfa = compile_regex("ab*")
+    eng = SpecDFAEngine(dfa, num_chunks=16, mode="lookahead")
+    res = eng.membership(b"abb")
+    assert res.accepted
+    assert res.mode == "sequential"  # tiny input falls back
+
+
+def test_single_chunk_degenerates_to_sequential():
+    dfa = compile_regex("[ab]+")
+    eng = SpecDFAEngine(dfa, num_chunks=1)
+    res = eng.membership(b"abab" * 100)
+    assert res.accepted
+    assert res.work_parallel == res.work_sequential
+
+
+def test_weights_must_match_chunks():
+    dfa = compile_regex("a")
+    with pytest.raises(ValueError):
+        SpecDFAEngine(dfa, num_chunks=4, weights=np.ones(3))
+
+
+def test_weighted_engine_balanced_correctness():
+    dfa = make_search_dfa(compile_regex(r".*ab{2,4}c"))
+    rng = np.random.default_rng(0)
+    data = rng.choice(np.frombuffer(b"abcx", np.uint8), size=9999)
+    w = np.array([2.0, 1.0, 1.0, 0.5])
+    w = w / w.mean()
+    eng = SpecDFAEngine(dfa, num_chunks=4, weights=w, partition="balanced")
+    assert eng.membership(data).final_state == \
+        eng.membership_sequential(data).final_state
+
+
+def test_all_suite_patterns_compile_and_roundtrip():
+    """Every shipped pattern compiles; engines agree with the DFA oracle."""
+    rng = np.random.default_rng(2)
+    for name, pat in list(PCRE_PATTERNS.items()):
+        dfa = compile_regex(pat)
+        assert dfa.n_states >= 2, name
+    for name, pat in list(PROSITE_PATTERNS.items())[:8]:
+        dfa = compile_prosite(pat)
+        data = rng.choice(np.frombuffer(b"ACDEFGHIKLMNPQRSTVWY", np.uint8),
+                          size=2000)
+        eng = SpecDFAEngine(dfa, num_chunks=5)
+        assert eng.membership(data).final_state == dfa.run(data), name
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_imax_r1_equals_direct_count(n_states, n_classes, seed):
+    """I_max,1 from i_max_r matches the direct Eq. 12 computation."""
+    from repro.core import build_lookahead_tables
+    rng = np.random.default_rng(seed)
+    dfa = random_dfa(n_states, n_classes, rng=rng)
+    tabs = build_lookahead_tables(dfa)
+    assert i_max_r(dfa, 1)[0] == tabs.i_max
+
+
+def test_vpu_lane_constant_documented():
+    assert VPU_LANES == 1024  # 8 sublanes x 128 lanes int32
+
+
+def test_gamma_bounds():
+    for pat in ["a", "[ab]{3}", "(ab|cd)+x"]:
+        dfa = compile_regex(pat)
+        eng = SpecDFAEngine(dfa)
+        assert 0 < eng.gamma <= 1.0
+
+
+def test_mxu_crossover_heuristic():
+    from repro.kernels.ops import mxu_profitable
+    assert mxu_profitable(q=64, s=64)        # tiny DFA, wide speculation
+    assert not mxu_profitable(q=2048, s=16)  # big DFA, narrow speculation
+    assert not mxu_profitable(q=64, s=2)     # narrow speculation -> gather

@@ -1,0 +1,195 @@
+"""Property tests for the speculative matcher: the paper's central claims.
+
+  * sequential semantics are maintained for every mode / chunking  (Sec. 1)
+  * speculation is failure-free: per-processor work never exceeds the
+    balanced bound                                                   (Sec. 4.4)
+  * Lemma 1: I_max,r monotonically non-increasing in r
+  * L-vector composition is associative; all merge strategies agree  (Eq. 8/9)
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (SpecDFAEngine, build_lookahead_tables, compile_regex,
+                        compose, i_max_r, identity_lvec, make_search_dfa,
+                        merge_scan_jnp, merge_sequential, merge_tree,
+                        random_dfa, uniform_partition, weighted_partition)
+
+MODES = ("lookahead", "basic", "holub")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_states=st.integers(3, 40),
+    n_classes=st.integers(2, 10),
+    n=st.integers(0, 600),
+    chunks=st.integers(2, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_speculative_equals_sequential_random_dfa(n_states, n_classes, n, chunks, seed):
+    rng = np.random.default_rng(seed)
+    dfa = random_dfa(n_states, n_classes, rng=rng)
+    data = rng.integers(0, 256, size=n, dtype=np.uint8)
+    want = dfa.run(data)
+    for mode in MODES:
+        for part in ("balanced", "uniform"):
+            eng = SpecDFAEngine(dfa, num_chunks=chunks, mode=mode, partition=part)
+            got = eng.membership(data)
+            assert got.final_state == want, (mode, part, n, chunks)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("pattern", [r".*(ab|ba){2,4}", r".*[0-9]{3}[a-z]", r"a*b+c{2,5}"])
+def test_speculative_equals_sequential_regex(mode, pattern):
+    dfa = make_search_dfa(compile_regex(pattern))
+    rng = np.random.default_rng(1)
+    data = bytes(rng.choice(list(b"ab0123cxyz"), size=4000))
+    eng = SpecDFAEngine(dfa, num_chunks=8, mode=mode)
+    assert eng.membership(data).final_state == eng.membership_sequential(data).final_state
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 30), st.integers(2, 6), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_lemma1_imax_monotone(n_states, n_classes, r, seed):
+    rng = np.random.default_rng(seed)
+    dfa = random_dfa(n_states, n_classes, rng=rng)
+    vals = i_max_r(dfa, r)
+    assert all(vals[i] >= vals[i + 1] for i in range(len(vals) - 1))
+    # dedup BFS must agree with the paper's exponential enumeration
+    if n_classes ** r * n_states <= 20_000:
+        assert vals == i_max_r(dfa, r, method="enum")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 20), st.integers(2, 10), st.integers(0, 2**31 - 1))
+def test_lvector_merges_agree(n_maps, q, seed):
+    rng = np.random.default_rng(seed)
+    lvecs = rng.integers(0, q, size=(n_maps, q)).astype(np.int32)
+    seq = merge_sequential(lvecs, 0)
+    tree = merge_tree(lvecs)
+    scan = np.asarray(merge_scan_jnp(jnp.asarray(lvecs)))[-1]
+    assert int(tree[0]) == seq
+    assert int(scan[0]) == seq
+    np.testing.assert_array_equal(tree, scan)
+
+
+def test_lvector_associativity_and_identity():
+    rng = np.random.default_rng(0)
+    q = 11
+    a, b, c = (rng.integers(0, q, size=q).astype(np.int32) for _ in range(3))
+    np.testing.assert_array_equal(compose(compose(a, b), c), compose(a, compose(b, c)))
+    ident = identity_lvec(q)
+    np.testing.assert_array_equal(compose(ident, a), a)
+    np.testing.assert_array_equal(compose(a, ident), a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(10, 100_000),
+    p=st.integers(1, 64),
+    m=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_partition_covers_input_and_balances(n, p, m, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, size=p)
+    w = w / w.mean()
+    part = weighted_partition(n, w, m)
+    # exact cover, in order, no overlap
+    assert part.start[0] == 0 and part.end[-1] == n
+    assert (part.start[1:] == part.end[:-1]).all()
+    assert (part.sizes >= 0).all()
+    # failure-freedom (Eq. 2/5): weighted per-processor time is balanced up to
+    # rounding: |time_k - mean| <= m/w_k symbols' worth of work.
+    if p > 1 and n >= p * m * 4:
+        times = part.work() / w
+        slack = (m / w) + 2
+        assert (np.abs(times - times.mean()) <= slack * 2).all()
+
+
+def test_uniform_partition_exact():
+    part = uniform_partition(100, 7, m=3)
+    assert part.start[0] == 0 and part.end[-1] == 100
+    assert (part.start[1:] == part.end[:-1]).all()
+    assert part.sizes.sum() == 100
+
+
+def test_failure_freedom_work_bound():
+    """Parallel work per processor never exceeds sequential total (Sec. 4.4).
+
+    Holds for the paper's balanced partition: work = max(L0, L_spec * m)
+    <= n (up to rounding).  Also checks the speedup trend 1 + (P-1)/m.
+    """
+    dfa = make_search_dfa(compile_regex(r".*(foo|bar)[0-9]{2}"))
+    rng = np.random.default_rng(3)
+    data = rng.choice(np.frombuffer(b"fobar019xyz", np.uint8), size=20_000)
+    prev_speedup = 0.0
+    for chunks in (2, 4, 8, 16):
+        eng = SpecDFAEngine(dfa, num_chunks=chunks, mode="lookahead",
+                            partition="balanced")
+        res = eng.membership(data)
+        assert res.work_parallel <= res.work_sequential + chunks * eng.i_max
+        assert res.final_state == eng.membership_sequential(data).final_state
+        assert res.model_speedup >= prev_speedup * 0.95  # monotone-ish in P
+        prev_speedup = res.model_speedup
+    # Eq. 15/18: speedup ~ 1 + (P-1)/I_max within rounding for the last run
+    expect = 1 + (16 - 1) / eng.i_max
+    assert abs(res.model_speedup - expect) / expect < 0.25
+
+
+def test_uniform_partition_lane_model_speedup():
+    """Uniform chunks: wall-clock steps = n/C in the lane-parallel model."""
+    dfa = make_search_dfa(compile_regex(r".*(foo|bar)[0-9]{2}"))
+    rng = np.random.default_rng(4)
+    data = rng.choice(np.frombuffer(b"fobar019xyz", np.uint8), size=16_000)
+    eng = SpecDFAEngine(dfa, num_chunks=8, mode="lookahead", partition="uniform")
+    res = eng.membership(data)
+    assert res.final_state == eng.membership_sequential(data).final_state
+    assert res.time_steps <= 16_000 // 8 + 8
+
+
+def test_lookahead_tables_cover_all_transition_targets():
+    dfa = make_search_dfa(compile_regex(r".*(ab|ba){2}"))
+    tabs = build_lookahead_tables(dfa)
+    for c in range(dfa.n_classes):
+        targets = {int(t) for t in dfa.table[:, c]} - {dfa.sink}
+        listed = {int(s) for s in tabs.candidates[c, : int(tabs.cand_count[c])]}
+        assert targets == listed
+        for q in targets:
+            assert int(tabs.cand_index[c, q]) >= 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_states=st.integers(3, 30),
+    n_classes=st.integers(2, 8),
+    n=st.integers(0, 500),
+    chunks=st.integers(2, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lookahead_r2_equals_sequential(n_states, n_classes, n, chunks, seed):
+    """Runtime 2-symbol reverse lookahead (Sec. 4.3) preserves semantics."""
+    rng = np.random.default_rng(seed)
+    dfa = random_dfa(n_states, n_classes, rng=rng)
+    data = rng.integers(0, 256, size=n, dtype=np.uint8)
+    want = dfa.run(data)
+    for part in ("balanced", "uniform"):
+        eng = SpecDFAEngine(dfa, num_chunks=chunks, lookahead_r=2,
+                            partition=part)
+        assert eng.membership(data).final_state == want, (part, n, chunks)
+
+
+def test_lookahead_r2_never_worse_than_r1():
+    """Lemma 1 at runtime: I_max,2 <= I_max,1 -> work-model speedup >=."""
+    dfa = make_search_dfa(compile_regex(r".*(ab|ba){2,4}[0-9]{2}"))
+    rng = np.random.default_rng(9)
+    data = rng.choice(np.frombuffer(b"ab0123xyz", np.uint8), size=30_000)
+    e1 = SpecDFAEngine(dfa, num_chunks=16, lookahead_r=1)
+    e2 = SpecDFAEngine(dfa, num_chunks=16, lookahead_r=2)
+    r1, r2 = e1.membership(data), e2.membership(data)
+    assert r1.final_state == r2.final_state
+    assert e2.i_max <= e1.i_max
+    assert r2.model_speedup >= r1.model_speedup * 0.999

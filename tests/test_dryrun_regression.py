@@ -1,0 +1,50 @@
+"""Dry-run regression: one cheap cell must lower+compile on the production
+meshes (subprocess — dryrun.py forces 512 host devices before importing jax).
+
+This keeps the multi-pod deliverable from rotting; the full 64-cell sweep is
+run via ``python -m repro.launch.dryrun --all --mesh both`` (artifacts/).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch: str, shape: str, mesh: str, tmpdir: str) -> dict:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", tmpdir],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    with open(os.path.join(tmpdir, mesh, f"{arch}--{shape}.json")) as f:
+        return json.load(f)
+
+
+def test_dryrun_cell_single_and_multi(tmp_path):
+    for mesh, devices in (("single", 256), ("multi", 512)):
+        rec = _run("seamless-m4t-medium", "decode_32k", mesh, str(tmp_path))
+        assert rec["ok"], rec.get("error")
+        assert rec["n_devices"] == devices
+        assert rec["memory"]["temp_bytes"] > 0
+        assert rec["census"]["dot_flops"] > 0
+        assert rec["hlo_bytes"] > 0
+
+
+def test_dryrun_artifacts_complete_and_green():
+    """The committed artifact sweep must cover all 32 cells x 2 meshes, all ok."""
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        import pytest
+        pytest.skip("artifact sweep not present")
+    for mesh in ("single", "multi"):
+        files = [f for f in os.listdir(os.path.join(art, mesh))
+                 if f.endswith(".json")]
+        assert len(files) == 32, (mesh, len(files))
+        for f in files:
+            with open(os.path.join(art, mesh, f)) as fh:
+                assert json.load(fh).get("ok"), (mesh, f)

@@ -1,0 +1,235 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles.
+
+All kernel outputs are integers (or masked floats), so comparisons are exact.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import SpecDFAEngine, compile_regex, make_search_dfa, random_dfa
+from repro.kernels import ops, ref
+
+
+def _dfa(q, ncls, seed):
+    return random_dfa(q, ncls, rng=np.random.default_rng(seed))
+
+
+# --------------------------------------------------------------------------
+# spec_match (gather kernel + MXU path)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,ncls,c,l,s", [
+    (4, 2, 1, 16, 1),        # minimal
+    (17, 5, 6, 384, 9),      # odd everything
+    (64, 16, 8, 512, 16),    # aligned
+    (130, 7, 3, 130, 130),   # S = Q (holub mode shape), prime-ish L
+    (257, 26, 2, 1024, 33),  # Q > 256
+])
+def test_spec_match_gather_shapes(q, ncls, c, l, s):
+    rng = np.random.default_rng(q * 1000 + l)
+    dfa = _dfa(q, ncls, 1)
+    table = jnp.asarray(dfa.table)
+    chunks = jnp.asarray(rng.integers(0, ncls, size=(c, l), dtype=np.int32))
+    init = jnp.asarray(rng.integers(0, q, size=(c, s), dtype=np.int32))
+    want = np.asarray(ref.spec_match_ref(table, chunks, init))
+    got = np.asarray(ops.spec_match(table, chunks, init, use_mxu=False))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("q,ncls,c,l,s", [
+    (8, 3, 2, 64, 8),
+    (32, 4, 4, 256, 32),
+    (128, 8, 2, 512, 64),
+])
+def test_spec_match_mxu_shapes(q, ncls, c, l, s):
+    rng = np.random.default_rng(q + l)
+    dfa = _dfa(q, ncls, 2)
+    table = jnp.asarray(dfa.table)
+    chunks = jnp.asarray(rng.integers(0, ncls, size=(c, l), dtype=np.int32))
+    init = jnp.asarray(rng.integers(0, q, size=(c, s), dtype=np.int32))
+    want = np.asarray(ref.spec_match_ref(table, chunks, init))
+    got = np.asarray(ops.spec_match(table, chunks, init, use_mxu=True))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.integers(2, 50),
+    ncls=st.integers(2, 8),
+    c=st.integers(1, 6),
+    logl=st.integers(4, 9),
+    s=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spec_match_property(q, ncls, c, logl, s, seed):
+    rng = np.random.default_rng(seed)
+    dfa = _dfa(q, ncls, seed)
+    table = jnp.asarray(dfa.table)
+    l = 2 ** logl
+    chunks = jnp.asarray(rng.integers(0, ncls, size=(c, l), dtype=np.int32))
+    init = jnp.asarray(rng.integers(0, q, size=(c, s), dtype=np.int32))
+    want = np.asarray(ref.spec_match_ref(table, chunks, init))
+    got = np.asarray(ops.spec_match(table, chunks, init, use_mxu=False))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# lvec_compose
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,q", [(1, 4), (8, 17), (16, 128), (7, 33), (24, 257)])
+def test_lvec_compose_shapes(c, q):
+    rng = np.random.default_rng(c * q)
+    maps = jnp.asarray(rng.integers(0, q, size=(c, q), dtype=np.int32))
+    want = np.asarray(ref.lvec_compose_ref(maps))
+    got = np.asarray(ops.lvec_compose(maps))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(1, 24), q=st.integers(2, 80), seed=st.integers(0, 2**31 - 1))
+def test_lvec_compose_property(c, q, seed):
+    rng = np.random.default_rng(seed)
+    maps = jnp.asarray(rng.integers(0, q, size=(c, q), dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(ops.lvec_compose(maps)),
+                                  np.asarray(ref.lvec_compose_ref(maps)))
+
+
+# --------------------------------------------------------------------------
+# onehot_block_maps (MXU formulation exactness)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,ncls,l,blk", [
+    (4, 2, 64, 16), (16, 4, 256, 64), (64, 8, 512, 128), (128, 16, 256, 256),
+])
+def test_onehot_block_maps_shapes(q, ncls, l, blk):
+    rng = np.random.default_rng(q + l)
+    dfa = _dfa(q, ncls, 3)
+    table = jnp.asarray(dfa.table)
+    syms = jnp.asarray(rng.integers(0, ncls, size=(l,), dtype=np.int32))
+    want = np.asarray(ref.onehot_block_maps_ref(table, syms, blk))
+    got = np.asarray(ops.onehot_block_maps(table, syms, block_l=blk))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_onehot_exactness_worst_case():
+    """Many-to-one transitions (non-permutation P) must stay exact in bf16."""
+    q = 96
+    table = np.zeros((q, 3), dtype=np.int32)  # every state -> 0 on class 0
+    table[:, 1] = np.arange(q)                # identity on class 1
+    table[:, 2] = (np.arange(q) + 1) % q      # cycle on class 2
+    syms = jnp.asarray(np.tile([0, 1, 2, 2], 32).astype(np.int32))
+    want = np.asarray(ref.onehot_block_maps_ref(jnp.asarray(table), syms, 64))
+    got = np.asarray(ops.onehot_block_maps(jnp.asarray(table), syms, block_l=64))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# token_mask
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,q,v", [(1, 3, 2048), (5, 17, 4096), (8, 64, 2048)])
+def test_token_mask_shapes(b, q, v, dtype):
+    rng = np.random.default_rng(b * v)
+    states = jnp.asarray(rng.integers(0, q, size=(b,), dtype=np.int32))
+    allowed = jnp.asarray(rng.integers(0, 2, size=(q, v), dtype=np.uint8))
+    logits = jnp.asarray(rng.normal(size=(b, v)).astype(np.float32)).astype(dtype)
+    want = np.asarray(ref.token_mask_ref(states, allowed.astype(bool), logits))
+    got = np.asarray(ops.token_mask(states, allowed, logits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_token_mask_ragged_vocab_pad():
+    rng = np.random.default_rng(0)
+    b, q, v = 3, 5, 3000  # not a multiple of any tile
+    states = jnp.asarray(rng.integers(0, q, size=(b,), dtype=np.int32))
+    allowed = jnp.asarray(rng.integers(0, 2, size=(q, v), dtype=np.uint8))
+    logits = jnp.asarray(rng.normal(size=(b, v)).astype(np.float32))
+    want = np.asarray(ref.token_mask_ref(states, allowed.astype(bool), logits))
+    got = np.asarray(ops.token_mask(states, allowed, logits))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# kernel-backed engine end-to-end
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["lookahead", "basic", "holub"])
+def test_engine_with_pallas_matcher(mode):
+    dfa = make_search_dfa(compile_regex(r".*(ab|ba){2,3}[0-9]"))
+    rng = np.random.default_rng(5)
+    data = rng.choice(np.frombuffer(b"ab019xyz", np.uint8), size=4096)
+
+    def pallas_matcher(table, chunks, init):
+        return ops.spec_match(table, chunks, init, use_mxu=False)
+
+    eng = SpecDFAEngine(dfa, num_chunks=8, mode=mode, matcher=pallas_matcher)
+    ref_eng = SpecDFAEngine(dfa, num_chunks=8, mode=mode)
+    assert eng.membership(data).final_state == ref_eng.membership(data).final_state
+
+
+# --------------------------------------------------------------------------
+# flash_attn (fused attention forward)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,t,s,d,causal,window", [
+    (2, 128, 128, 32, True, 0),
+    (4, 256, 256, 64, True, 0),
+    (2, 128, 128, 32, True, 48),    # sliding window
+    (3, 64, 192, 16, False, 0),     # cross-attention shape
+    (1, 384, 384, 128, True, 128),
+])
+def test_flash_attn_vs_ref(bh, t, s, d, causal, window):
+    rng = np.random.default_rng(t + s + d)
+    q = jnp.asarray(rng.normal(size=(bh, t, d)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(bh, s, d)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(bh, s, d)).astype(np.float32)).astype(jnp.bfloat16)
+    want = np.asarray(ref.flash_attn_ref(q, k, v, causal=causal,
+                                         window=window), np.float32)
+    got = np.asarray(ops.flash_attn(q, k, v, causal=causal, window=window,
+                                    q_blk=64, kv_blk=64), np.float32)
+    np.testing.assert_allclose(got, want, atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attn_matches_model_attention_core():
+    """Kernel semantics == the XLA flash path used by the models."""
+    from repro.models.attention_core import flash_attention
+    rng = np.random.default_rng(0)
+    b, t, n_kv, g, h = 2, 256, 2, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, t, n_kv, g, h)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, t, n_kv, h)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, t, n_kv, h)).astype(np.float32)).astype(jnp.bfloat16)
+    want = flash_attention(q, k, v, causal=True, q_block=64, kv_block=64)
+    # flatten (b, kv, g) into BH and expand kv for the kernel layout
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * n_kv * g, t, h)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * n_kv * g, t, h)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * n_kv * g, t, h)
+    got = ops.flash_attn(qf, kf, vf, causal=True, q_blk=64, kv_blk=64)
+    got = got.reshape(b, n_kv, g, t, h).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_prefill_with_pallas_attention_matches_xla(monkeypatch):
+    """REPRO_PALLAS_ATTN=1 routes prefill through the fused kernel (interpret
+    mode on CPU) and must match the XLA flash path end to end."""
+    import os
+    import jax
+    from repro.configs import ShapeSpec, get_config, reduce_for_smoke
+    from repro.models import api
+
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    batch = api.make_inputs(cfg, ShapeSpec("p", "prefill", 64, 2), seed=1)
+
+    logits_xla, _ = api.prefill(params, cfg, batch)
+    monkeypatch.setenv("REPRO_PALLAS_ATTN", "1")
+    logits_pl, _ = api.prefill(params, cfg, batch)
+    np.testing.assert_allclose(np.asarray(logits_pl, np.float32),
+                               np.asarray(logits_xla, np.float32),
+                               atol=5e-2, rtol=5e-2)

@@ -1,0 +1,191 @@
+"""Integration tests: data pipeline, training loop, checkpointing, serving."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec, get_config, reduce_for_smoke
+from repro.core import compile_regex, make_search_dfa
+from repro.data import (ByteTokenizer, CorpusConfig, CorpusFilter,
+                        LoaderConfig, data_stream, generate_documents,
+                        host_shard)
+from repro.distributed.fault_tolerance import RestartManager, StragglerPolicy
+from repro.models import api
+from repro.serving import GrammarConstraint, ServeConfig, ServingEngine
+from repro.training import (AdamWConfig, CheckpointManager, TrainOptions,
+                            init_train_state, make_train_step)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_corpus_filter_drops_contaminated_docs():
+    cfg = CorpusConfig(n_documents=40, contaminant=b"SECRET-123",
+                       contaminant_rate=0.3, seed=1)
+    docs = list(generate_documents(cfg))
+    filt = CorpusFilter([r"SECRET-[0-9]+"], num_chunks=4)
+    kept = list(filt.filter(docs))
+    # every kept doc clean, every dropped doc contaminated
+    assert all(b"SECRET-123" not in d for d in kept)
+    assert filt.stats.dropped == sum(b"SECRET-123" in d for d in docs)
+    assert filt.stats.scanned == 40
+
+
+def test_filter_failure_freedom_at_pipeline_level():
+    cfg = CorpusConfig(n_documents=10, seed=2)
+    filt = CorpusFilter([r"SECRET-[0-9]+"], num_chunks=8, partition="balanced")
+    list(filt.filter(generate_documents(cfg)))
+    # balanced partitioning: parallel work per processor <= sequential total
+    assert filt.stats.work_parallel <= filt.stats.work_sequential * 1.01
+
+
+def test_data_stream_packs_batches():
+    cfg = CorpusConfig(n_documents=30, seed=3)
+    lcfg = LoaderConfig(batch_size=4, seq_len=128)
+    batches = list(data_stream(generate_documents(cfg), lcfg))
+    assert len(batches) >= 2
+    for b in batches:
+        assert b["tokens"].shape == (4, 128)
+        assert b["labels"].shape == (4, 128)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_shard_weighted():
+    start_fast, end_fast = host_shard(10_000, [2.0, 1.0, 1.0], 0)
+    start_slow, end_slow = host_shard(10_000, [2.0, 1.0, 1.0], 1)
+    assert (end_fast - start_fast) > (end_slow - start_slow)
+    assert start_slow == end_fast
+
+
+# --------------------------------------------------------------------------
+# training loop + checkpointing + restart
+# --------------------------------------------------------------------------
+
+def _tiny_setup():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    shape = ShapeSpec("t", "train", 64, 4)
+    batch = api.make_inputs(cfg, shape, seed=0)
+    opts = TrainOptions(num_microbatches=2,
+                        optimizer=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                              total_steps=20))
+    state = init_train_state(cfg, jax.random.PRNGKey(0), opts=opts)
+    step = jax.jit(make_train_step(cfg, None, opts))
+    return cfg, state, step, batch
+
+
+def test_train_loss_decreases():
+    cfg, state, step, batch = _tiny_setup()
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses  # memorizes the fixed batch
+
+
+def test_microbatching_matches_full_batch():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    shape = ShapeSpec("t", "train", 64, 4)
+    batch = api.make_inputs(cfg, shape, seed=0)
+    s1 = init_train_state(cfg, jax.random.PRNGKey(0))
+    s2 = jax.tree.map(lambda x: x, s1)
+    step1 = jax.jit(make_train_step(cfg, None, TrainOptions(num_microbatches=1)))
+    step4 = jax.jit(make_train_step(cfg, None, TrainOptions(num_microbatches=4)))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step4(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-3)
+    a = jax.tree.leaves(s1["params"])[0]
+    b = jax.tree.leaves(s2["params"])[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, state, step, batch = _tiny_setup()
+    state, _ = step(state, batch)
+    mgr = CheckpointManager(str(tmp_path), keep=2, use_async=True)
+    mgr.save(state, 1)
+    mgr.wait()
+    restored, at = mgr.restore(like=jax.tree.map(np.asarray, state))
+    assert at == 1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restart_manager_recovers_from_fault(tmp_path):
+    cfg, state, step, batch = _tiny_setup()
+    mgr = CheckpointManager(str(tmp_path), use_async=False)
+    like = jax.tree.map(np.asarray, state)
+    mgr.save(state, 0)
+
+    crashed = {"done": False}
+
+    def step_fn(st, i):
+        if i == 3 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+        st, _ = step(st, batch)
+        return st
+
+    rm = RestartManager(save_fn=mgr.save,
+                        restore_fn=lambda: mgr.restore(like))
+    final, at = rm.run(state, 0, 6, step_fn, checkpoint_every=2)
+    assert at == 6
+    assert rm.restarts == 1
+    assert rm.failures and "injected" in rm.failures[0][1]
+
+
+def test_straggler_policy_triggers_and_rebalances():
+    pol = StragglerPolicy(n_workers=4, threshold=1.3)
+    assert not pol.update(np.array([1.0, 1.0, 1.0, 1.05]))
+    fired = False
+    for _ in range(10):
+        fired = pol.update(np.array([1.0, 1.0, 1.0, 2.0])) or fired
+    assert fired
+    part = pol.rebalanced_shards(10_000)
+    sizes = part.sizes
+    assert sizes[3] < sizes[0]  # slow worker gets less data
+
+
+# --------------------------------------------------------------------------
+# serving + constrained decoding
+# --------------------------------------------------------------------------
+
+def test_serving_greedy_generation():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    params = api.init(cfg, jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg, params, ServeConfig(max_new_tokens=8))
+    prompts = np.full((2, 5), 65, np.int32)
+    out = eng.generate(prompts)
+    assert out.shape == (2, 8)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_constrained_decoding_respects_grammar():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    params = api.init(cfg, jax.random.PRNGKey(2))
+    # grammar: only lowercase a-d allowed, ever
+    dfa = make_search_dfa(compile_regex(r"[a-d]*"))
+    # use membership semantics: build DFA accepting [a-d]* directly
+    dfa = compile_regex(r"[a-d]+")
+    con = GrammarConstraint(dfa, cfg.padded_vocab)
+    eng = ServingEngine(cfg, params, ServeConfig(max_new_tokens=6),
+                        constraint=con)
+    prompts = np.asarray([[ord("a"), ord("b")]], np.int32)
+    out = eng.generate(prompts)
+    # every generated byte obeys the grammar; EOS is legal on accepting states
+    assert all(t == 258 or chr(t) in "abcd" for t in out[0])
+    assert any(t != 258 for t in out[0]) or True
+
+
+def test_draft_verification_matches_sequential():
+    dfa = compile_regex(r"[a-d]+x")
+    con = GrammarConstraint(dfa, 512)
+    n_ok, traj = con.verify_draft(dfa.start, np.frombuffer(b"abz", np.uint8))
+    assert n_ok == 2  # 'z' kills it
+    n_ok2, _ = con.verify_draft(dfa.start, np.frombuffer(b"abcdx", np.uint8))
+    assert n_ok2 == 5
