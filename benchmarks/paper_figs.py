@@ -243,3 +243,56 @@ def bench_merge_strategies() -> None:
     fold = jax.jit(ref.lvec_compose_ref)
     us = time_us(lambda: fold(maps).block_until_ready())
     emit("sec52/local_fold_256x512", us, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Batched multi-pattern pipeline: docs/sec and bytes/sec, batch and K scaling
+# --------------------------------------------------------------------------
+
+def bench_batch_throughput(n_docs: int = 64, doc_len: int = 512) -> None:
+    """Throughput of the fused batch pipeline vs per-document dispatch.
+
+    batch=1 pays one (1-row-tile, best-case) device call per document;
+    batch=n_docs amortizes dispatch + transfer across the bucket.  K=8 packs
+    eight block-list patterns into one table so one sweep answers all of
+    them.  doc_len=512 is the corpus-filtering regime where dispatch
+    overhead, not matching compute, bounds per-document scanning.
+    """
+    from repro.core import BatchMatcher, compile_regex, make_search_dfa
+    from repro.core.patterns import PCRE_PATTERNS
+
+    rng = np.random.default_rng(7)
+    # ragged corpus around doc_len (stays inside <= 2 pow2 buckets)
+    sizes = rng.integers(doc_len // 2 + 1, doc_len + 1, size=n_docs)
+    docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8) for n in sizes]
+    total_bytes = int(sizes.sum())
+
+    pats = list(PCRE_PATTERNS.values())[:8]
+    dfas = [make_search_dfa(compile_regex(".*(" + p + ")")) for p in pats]
+
+    us_bn_by_k = {}
+    for k in (1, 8):
+        bm = BatchMatcher(dfas[:k], num_chunks=8, batch_tile=n_docs)
+        bm.membership_batch(docs)  # compile + warm buckets
+        # best-case per-document baseline: a 1-row tile (no row padding)
+        bm1 = BatchMatcher(dfas[:k], num_chunks=8, batch_tile=1)
+        bm1.membership_batch(docs[:1])
+
+        us_b1 = time_us(
+            lambda: [bm1.membership_batch([d]) for d in docs], repeats=2)
+        us_bn = time_us(lambda: bm.membership_batch(docs), repeats=2)
+        us_bn_by_k[k] = us_bn
+
+        d_s_b1 = n_docs / (us_b1 / 1e6)
+        d_s_bn = n_docs / (us_bn / 1e6)
+        emit(f"batch_throughput/b1/K{k}/docs_per_s", us_b1 / n_docs, d_s_b1)
+        emit(f"batch_throughput/b{n_docs}/K{k}/docs_per_s", us_bn / n_docs,
+             d_s_bn)
+        emit(f"batch_throughput/b1/K{k}/bytes_per_s", 0.0,
+             total_bytes / (us_b1 / 1e6))
+        emit(f"batch_throughput/b{n_docs}/K{k}/bytes_per_s", 0.0,
+             total_bytes / (us_bn / 1e6))
+        emit(f"batch_throughput/b{n_docs}_vs_b1/K{k}", 0.0, d_s_bn / d_s_b1)
+    # pattern amortization: packed K=8 sweep vs running the K=1 sweep 8 times
+    emit("batch_throughput/pattern_amortization/K8", us_bn_by_k[8],
+         8.0 * us_bn_by_k[1] / max(us_bn_by_k[8], 1e-9))

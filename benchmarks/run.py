@@ -34,6 +34,7 @@ def main() -> None:
         ("input_scaling", pf.bench_input_scaling),           # Fig 18/19
         ("load_balance", pf.bench_load_balance),             # Table 3
         ("merge_strategies", pf.bench_merge_strategies),     # Sec 5.2
+        ("batch_throughput", pf.bench_batch_throughput),     # batched pipeline
     ]
     if args.only:
         names = set(args.only.split(","))

@@ -18,8 +18,18 @@ def main() -> None:
     s = filt.stats
     print(f"scanned {s.scanned} docs ({s.bytes_scanned/1e6:.1f} MB), "
           f"dropped {s.dropped}, produced {len(batches)} packed batches")
-    print(f"speculative work-model speedup {s.model_speedup:.2f}x "
-          f"(failure-free: never below 1.0x)")
+    print(f"lane-parallel model speedup {s.lane_speedup:.2f}x "
+          f"(symbols scanned per matching step, all patterns at once)")
+    print(f"batched path: {s.batch_calls} fused device calls, "
+          f"{filt.batch.trace_count} compiled shapes "
+          f"({len(filt.dfas)} patterns packed into one "
+          f"{filt.batch.packed.n_states}-state table)")
+
+    # Batched multi-pattern scanning, explicitly: one call for a whole doc
+    # batch against ALL patterns — no per-document device sync.
+    sample = [b"clean document " * 40, b"leak SECRET-42 here " * 30]
+    keep = filt.scan_batch(sample)
+    print(f"scan_batch keep-mask: {keep.tolist()}")
 
     # heterogeneous-fleet sharding (paper Eq. 1/5): profile-weighted ranges
     weights = [1.41, 1.0, 1.0, 0.8]  # e.g. mixed instance generations

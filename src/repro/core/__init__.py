@@ -1,9 +1,12 @@
 """Core library: the paper's speculative parallel DFA membership test."""
 
-from .automata import DFA, NFA, make_search_dfa, random_dfa
+from .automata import DFA, NFA, PackedDFA, make_search_dfa, pack_dfas, random_dfa
 from .determinize import compile_prosite, compile_regex, minimize, nfa_to_dfa
-from .engine import MatchResult, SpecDFAEngine, match_chunks_lanes, sequential_state
-from .lookahead import LookaheadTables, build_lookahead_tables, i_max_r, i_sigma_sets
+from .engine import (BatchMatcher, BatchResult, MatchResult, SpecDFAEngine,
+                     match_chunks_lanes, sequential_state)
+from .lookahead import (LookaheadTables, PackedLookaheadTables,
+                        build_lookahead_tables, build_packed_lookahead_tables,
+                        i_max_r, i_sigma_sets)
 from .lvector import (compose, compose_jnp, identity_lvec, merge_compressed,
                       merge_scan_jnp, merge_sequential, merge_tree)
 from .partition import Partition, capacity_weights, uniform_partition, weighted_partition
@@ -12,10 +15,12 @@ from .profiling import profile_capacity, profile_workers
 from .regex import parse_regex, prosite_to_regex, regex_to_nfa
 
 __all__ = [
-    "DFA", "NFA", "make_search_dfa", "random_dfa",
+    "DFA", "NFA", "PackedDFA", "make_search_dfa", "pack_dfas", "random_dfa",
     "compile_regex", "compile_prosite", "minimize", "nfa_to_dfa",
-    "MatchResult", "SpecDFAEngine", "match_chunks_lanes", "sequential_state",
-    "LookaheadTables", "build_lookahead_tables", "i_max_r", "i_sigma_sets",
+    "MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher",
+    "match_chunks_lanes", "sequential_state",
+    "LookaheadTables", "PackedLookaheadTables", "build_lookahead_tables",
+    "build_packed_lookahead_tables", "i_max_r", "i_sigma_sets",
     "compose", "compose_jnp", "identity_lvec", "merge_compressed",
     "merge_scan_jnp", "merge_sequential", "merge_tree",
     "Partition", "capacity_weights", "uniform_partition", "weighted_partition",

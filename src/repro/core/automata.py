@@ -21,7 +21,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["NFA", "DFA", "make_search_dfa", "random_dfa"]
+__all__ = ["NFA", "DFA", "PackedDFA", "make_search_dfa", "pack_dfas", "random_dfa"]
 
 
 @dataclasses.dataclass
@@ -120,6 +120,92 @@ class DFA:
             if not self.accepting[s] and (self.table[s] == s).all():
                 return s
         return -1
+
+
+@dataclasses.dataclass
+class PackedDFA:
+    """K DFAs stacked into one transition table over a joint class alphabet.
+
+    The packed table is the multi-pattern analogue of the paper's flattened
+    ``SBase`` (Fig. 8c): pattern k's states live at ids
+    ``offsets[k] .. offsets[k+1]-1`` and every table entry is already a packed
+    id, so K patterns advance through one shared gather — lanes become
+    chunks x candidates x patterns (cf. simultaneous-FA matching,
+    arXiv:1405.0562).
+
+    The joint alphabet is the product refinement of the per-pattern byte
+    classifications (``IBase``): two bytes share a joint class iff they share
+    a class under *every* pattern, so one class stream per document drives all
+    K patterns.  ``n_classes`` is the refined count (<= 256).
+    """
+
+    table: np.ndarray          # [Q_total, n_classes] int32, packed state ids
+    accepting: np.ndarray      # [Q_total] bool
+    starts: np.ndarray         # [K] int32 packed start states
+    sinks: np.ndarray          # [K] int32 packed sink ids; -1 = no dead state
+    offsets: np.ndarray        # [K+1] int32 state-id offset per pattern
+    byte_to_class: np.ndarray  # [256] int32 joint classes
+
+    @property
+    def n_states(self) -> int:
+        return int(self.table.shape[0])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.table.shape[1])
+
+    @property
+    def n_patterns(self) -> int:
+        return int(self.starts.shape[0])
+
+    def __post_init__(self) -> None:
+        self.table = np.asarray(self.table, dtype=np.int32)
+        self.accepting = np.asarray(self.accepting, dtype=bool)
+        self.starts = np.asarray(self.starts, dtype=np.int32)
+        self.sinks = np.asarray(self.sinks, dtype=np.int32)
+        self.offsets = np.asarray(self.offsets, dtype=np.int32)
+        self.byte_to_class = np.asarray(self.byte_to_class, dtype=np.int32)
+
+    def pattern_slice(self, k: int) -> slice:
+        return slice(int(self.offsets[k]), int(self.offsets[k + 1]))
+
+    def classes_of(self, data: bytes | np.ndarray) -> np.ndarray:
+        arr = (np.frombuffer(data, dtype=np.uint8)
+               if isinstance(data, (bytes, bytearray)) else np.asarray(data))
+        return self.byte_to_class[arr.astype(np.int64)]
+
+    def run_all(self, data: bytes | np.ndarray) -> np.ndarray:
+        """Host oracle: final packed state of every pattern, sequentially."""
+        states = self.starts.copy()
+        for cls in self.classes_of(data):
+            states = self.table[states, cls]
+        return states
+
+    def accepts_all(self, data: bytes | np.ndarray) -> np.ndarray:
+        return self.accepting[self.run_all(data)]
+
+
+def pack_dfas(dfas: Sequence[DFA]) -> PackedDFA:
+    """Stack K DFAs into one ``PackedDFA`` (joint classes + offset state ids)."""
+    if not dfas:
+        raise ValueError("pack_dfas needs at least one DFA")
+    keys = np.stack([d.byte_to_class for d in dfas], axis=1)       # [256, K]
+    uniq, joint = np.unique(keys, axis=0, return_inverse=True)     # joint ids
+    byte_to_class = joint.astype(np.int32)
+    offsets = np.concatenate(
+        [[0], np.cumsum([d.n_states for d in dfas])]).astype(np.int32)
+    tables = []
+    for k, d in enumerate(dfas):
+        col_map = uniq[:, k]                   # joint class -> pattern-k class
+        tables.append(d.table[:, col_map].astype(np.int64) + int(offsets[k]))
+    starts = np.array([int(offsets[k]) + d.start
+                       for k, d in enumerate(dfas)], np.int32)
+    sinks = np.array([int(offsets[k]) + d.sink if d.sink >= 0 else -1
+                      for k, d in enumerate(dfas)], np.int32)
+    return PackedDFA(table=np.concatenate(tables).astype(np.int32),
+                     accepting=np.concatenate([d.accepting for d in dfas]),
+                     starts=starts, sinks=sinks, offsets=offsets,
+                     byte_to_class=byte_to_class)
 
 
 def make_search_dfa(dfa: DFA) -> DFA:

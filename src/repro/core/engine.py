@@ -29,24 +29,61 @@ Modes:
 
 The matcher callable is pluggable so the Pallas kernels (kernels/ops.py) slot
 in; the pure-jnp path below is their oracle.
+
+Batched matching (beyond-paper; see ROADMAP "Batched matching"):
+
+``BatchMatcher.membership_batch(docs)`` amortizes launch overhead across a
+whole document batch and across K patterns packed into one table
+(``core.automata.PackedDFA``).  Design decisions:
+
+  * **Identity pad column.**  Every document is padded with a synthetic class
+    ``pad_cls == n_classes`` whose transition column is the identity map, so
+    padding advances no DFA and the matcher stays branch-free.  Padding is a
+    suffix; a chunk whose reverse-lookahead class is ``pad_cls`` is therefore
+    entirely padding and the Eq. 8 merge carries the state through unchanged.
+  * **Shape buckets, bounded retracing.**  A document of length n is chunked
+    uniformly into C chunks of length ``next_pow2(ceil(n / C))``; documents
+    sharing that chunk length share a bucket, and every device call uses a
+    fixed ``batch_tile`` row count, so a compiled shape depends only on the
+    bucket's chunk length.  Bucket keys are *sticky* across calls: a new doc
+    snaps up into an already-compiled bucket when one fits, and fresh keys
+    merge upward (padding further) until the shape budget ``max_buckets``
+    (default 2) is respected — verified by the ``trace_count`` counter.  The
+    budget is strict within a call and across calls whose documents fit the
+    compiled buckets; a later document longer than every compiled bucket
+    necessarily compiles one extra shape (it cannot be matched in a smaller
+    buffer), so feed a representative length mix early for the tightest
+    bound.
+  * **One fused call per bucket, one transfer.**  Classification residue,
+    chunking, candidate gather, chunk matching, and the Eq. 8 merge run
+    inside a single jitted call (donated input buffer on accelerators);
+    only the [B, K] final-state array crosses back to the host — no
+    per-document ``int()`` syncs.
+  * **Short docs** (n < 4·C) take a *batched sequential* scan — still one
+    device call for all of them, not one per document.
+  * Lanes are ``chunks x candidates x patterns``; per-pattern candidate sets
+    over the joint class alphabet come from
+    ``core.lookahead.build_packed_lookahead_tables``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from .automata import DFA
-from .lookahead import LookaheadTables, build_lookahead_tables
+from .automata import DFA, PackedDFA, pack_dfas
+from .lookahead import (LookaheadTables, PackedLookaheadTables,
+                        build_lookahead_tables, build_packed_lookahead_tables)
 from .lvector import merge_scan_jnp
 
-__all__ = ["MatchResult", "SpecDFAEngine", "sequential_state", "match_chunks_lanes"]
+__all__ = ["MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher",
+           "sequential_state", "match_chunks_lanes"]
 
 VPU_LANES = 1024  # 8 sublanes x 128 lanes of int32 on a TPU core
 
@@ -176,6 +213,7 @@ class SpecDFAEngine:
         self._cidx_j = jnp.asarray(self.tables.cand_index)
         self._all_states = jnp.arange(dfa.n_states, dtype=jnp.int32)
         self._matcher_jit = jax.jit(self.matcher)
+        self._batch: Optional["BatchMatcher"] = None  # built on first use
 
     # -- public API ---------------------------------------------------------
 
@@ -217,6 +255,18 @@ class SpecDFAEngine:
 
     def accepts(self, data: bytes | np.ndarray) -> bool:
         return self.membership(data).accepted
+
+    def membership_batch(self, docs: Sequence[bytes | np.ndarray]) -> "BatchResult":
+        """Batched membership for many documents in few fused device calls.
+
+        Decisions are bit-identical to ``membership_sequential`` per document;
+        see ``BatchMatcher`` for the bucketing/padding policy.  The batch path
+        always partitions uniformly (lanes ride the vector unit), regardless
+        of this engine's ``partition`` setting.
+        """
+        if self._batch is None:
+            self._batch = BatchMatcher(self.dfa, num_chunks=self.num_chunks)
+        return self._batch.membership_batch(docs)
 
     # -- partition bodies -----------------------------------------------------
 
@@ -307,3 +357,238 @@ class SpecDFAEngine:
             q = self.dfa.n_states
             return jnp.broadcast_to(self._all_states, (c, q)), q
         return self._cand_j[la], self.tables.i_max
+
+
+# --------------------------------------------------------------------------
+# Batched multi-pattern pipeline
+# --------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Per-batch outcome of ``BatchMatcher.membership_batch``.
+
+    ``accepted``/``final_states`` are [B, K] (K = packed pattern count);
+    work arrays are per-document model quantities mirroring ``MatchResult``.
+    """
+
+    accepted: np.ndarray        # [B, K] bool
+    final_states: np.ndarray    # [B, K] int32 packed state ids
+    work_parallel: np.ndarray   # [B] scalar-model work
+    work_sequential: np.ndarray # [B] n * K
+    time_steps: np.ndarray      # [B] lane-parallel matching steps
+    bucket_calls: int           # device dispatches consumed by this batch
+
+    @property
+    def model_speedup(self) -> float:
+        return float(self.work_sequential.sum()) / max(float(self.work_parallel.sum()), 1.0)
+
+    @property
+    def lane_speedup(self) -> float:
+        return float(self.work_sequential.sum()) / max(float(self.time_steps.sum()), 1.0)
+
+
+class BatchMatcher:
+    """Batched, multi-pattern membership over padded shape buckets.
+
+    Accepts a single ``DFA``, a pre-built ``PackedDFA``, or a sequence of
+    DFAs (packed on the fly).  See the module docstring for the bucketing /
+    padding / retracing policy.
+
+    Parameters
+    ----------
+    source      : DFA | PackedDFA | sequence of DFA.
+    num_chunks  : uniform chunk count C per document (the batch path always
+                  uses uniform partitioning — speculative lanes ride the
+                  vector unit, so equal chunks are optimal there).
+    max_buckets : compiled-shape budget for the speculative path; new chunk
+                  lengths snap up into compiled buckets, and fresh buckets
+                  merge upward to stay under it.  A document longer than
+                  every compiled bucket still forces one new shape — the
+                  budget is tight only once the largest documents have been
+                  seen.
+    batch_tile  : fixed row count of every device call (rounded up to a power
+                  of two); batches larger than the tile split into slabs,
+                  smaller ones pad up, so the row dimension never retraces.
+    use_kernel  : route chunk matching + merge through the fused Pallas
+                  kernel (kernels.ops.spec_match_merge) instead of the
+                  pure-jnp reference path.
+    """
+
+    def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
+                 batch_tile: int = 64, use_kernel: bool = False):
+        if isinstance(source, PackedDFA):
+            packed = source
+        elif isinstance(source, DFA):
+            packed = pack_dfas([source])
+        else:
+            packed = pack_dfas(list(source))
+        if num_chunks < 1:
+            raise ValueError("num_chunks must be >= 1")
+        if max_buckets < 1:
+            raise ValueError("max_buckets must be >= 1")
+        if batch_tile < 1:
+            raise ValueError("batch_tile must be >= 1")
+        self.packed = packed
+        self.num_chunks = int(num_chunks)
+        self.max_buckets = int(max_buckets)
+        self.batch_tile = _next_pow2(int(batch_tile))
+        self.use_kernel = bool(use_kernel)
+        # sticky shape state: compiled spec chunk lengths, seq scan width
+        self._spec_keys: list[int] = []
+        # short docs have n < 4C, so one fixed seq width covers them all
+        # (grown lazily only in the num_chunks <= 1 everything-sequential case)
+        self._seq_width = _next_pow2(max(4 * self.num_chunks - 1, 1))
+        self.tables: PackedLookaheadTables = build_packed_lookahead_tables(packed)
+        self.pad_cls = packed.n_classes  # synthetic identity class
+
+        q = packed.n_states
+        ident = np.arange(q, dtype=np.int32).reshape(-1, 1)
+        self._table_pad_j = jnp.asarray(
+            np.concatenate([packed.table, ident], axis=1))
+        # pad rows: candidates row for pad_cls is never merged through (the
+        # merge carries the state when lookahead == pad_cls) but must hold
+        # in-range states for the gather; cand_index pad row stays -1.
+        cand_pad = self.tables.candidates[:1]
+        self._cand_pad_j = jnp.asarray(
+            np.concatenate([self.tables.candidates, cand_pad], axis=0))
+        self._cidx_pad_j = jnp.asarray(np.concatenate(
+            [self.tables.cand_index, np.full((1, q), -1, np.int32)], axis=0))
+        self._starts_j = jnp.asarray(packed.starts)
+        self._sinks_j = jnp.asarray(packed.sinks)
+
+        self._traces = 0
+        # bound methods: the classes buffer is traced argument 0 (donation is
+        # unsupported on CPU and would warn there)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._spec_fn = jax.jit(self._spec_impl, donate_argnums=donate)
+        self._seq_fn = jax.jit(self._seq_impl, donate_argnums=donate)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def n_patterns(self) -> int:
+        return self.packed.n_patterns
+
+    @property
+    def trace_count(self) -> int:
+        """Number of shapes compiled so far (increments once per retrace)."""
+        return self._traces
+
+    # -- jitted bucket bodies ----------------------------------------------
+
+    def _spec_impl(self, classes: jnp.ndarray) -> jnp.ndarray:
+        """Fused chunk/candidate-gather/match/merge for one [B, C*Lc] bucket."""
+        from ..kernels import ops as kops
+        from ..kernels import ref as kref
+
+        self._traces += 1  # side effect fires at trace time only
+        b = classes.shape[0]
+        c = self.num_chunks
+        k, s = self.packed.n_patterns, self.tables.i_max
+        body = classes.reshape(b, c, -1)
+        la = jnp.concatenate(
+            [jnp.zeros((b, 1), jnp.int32), body[:, :-1, -1]], axis=1)
+        cand = self._cand_pad_j[la[:, 1:]]                     # [B, C-1, K, S]
+        start = jnp.broadcast_to(
+            self._starts_j[None, None, :, None], (b, 1, k, s))
+        init = jnp.concatenate([start, cand], axis=1).reshape(b, c, k * s)
+        fn = kops.spec_match_merge if self.use_kernel else kref.spec_match_merge_ref
+        return fn(self._table_pad_j, body, init, la, self._cidx_pad_j,
+                  self._sinks_j, pad_cls=self.pad_cls)
+
+    def _seq_impl(self, classes: jnp.ndarray) -> jnp.ndarray:
+        """Batched Algorithm 1 for short documents: one scan, [B, K] finals."""
+        self._traces += 1
+        b = classes.shape[0]
+        s0 = jnp.broadcast_to(
+            self._starts_j[None, :], (b, self.packed.n_patterns)).astype(jnp.int32)
+
+        def step(st, col):  # st [B, K], col [B]
+            return self._table_pad_j[st, col[:, None]], None
+
+        out, _ = jax.lax.scan(step, s0, classes.T)
+        return out
+
+    # -- public API ---------------------------------------------------------
+
+    def classes(self, doc: bytes | np.ndarray) -> np.ndarray:
+        return self.packed.classes_of(doc).astype(np.int32)
+
+    def membership_batch(self, docs: Sequence[bytes | np.ndarray]) -> BatchResult:
+        """Match every doc against every packed pattern; no per-doc syncs.
+
+        Returns a ``BatchResult`` whose decisions are bit-identical to running
+        each document through sequential matching per pattern.
+        """
+        b = len(docs)
+        k = self.packed.n_patterns
+        if b == 0:
+            z = np.zeros(0, np.int64)
+            return BatchResult(np.zeros((0, k), bool), np.zeros((0, k), np.int32),
+                               z, z, z, 0)
+        cls_list = [self.classes(d) for d in docs]
+        lengths = np.array([c.shape[0] for c in cls_list], np.int64)
+        finals = np.tile(self.packed.starts, (b, 1)).astype(np.int32)
+        spec = (lengths >= 4 * self.num_chunks) & (self.num_chunks > 1)
+        calls = 0
+
+        def dispatch(fn, idx: np.ndarray, width: int) -> int:
+            """Run ``idx`` docs through ``fn`` in fixed [batch_tile, width]
+            slabs (rows always pad to the tile, so the compiled shape depends
+            only on ``width``); writes ``finals`` rows, returns call count."""
+            n_calls = 0
+            for lo in range(0, idx.size, self.batch_tile):
+                sel = idx[lo:lo + self.batch_tile]
+                buf = np.full((self.batch_tile, width), self.pad_cls, np.int32)
+                for r, i in enumerate(sel):
+                    buf[r, :lengths[i]] = cls_list[i]
+                out = np.asarray(fn(jnp.asarray(buf)))
+                finals[sel] = out[:sel.size]
+                n_calls += 1
+            return n_calls
+
+        seq_idx = np.flatnonzero(~spec)
+        if seq_idx.size and int(lengths[seq_idx].max()) > 0:
+            lmax = int(lengths[seq_idx].max())
+            if lmax > self._seq_width:  # only reachable when num_chunks <= 1
+                self._seq_width = _next_pow2(lmax)
+            calls += dispatch(self._seq_fn, seq_idx, self._seq_width)
+
+        spec_idx = np.flatnonzero(spec)
+        chunk_len = np.zeros(b, np.int64)
+        if spec_idx.size:
+            c = self.num_chunks
+            lc = np.array([_next_pow2(-(-int(n) // c)) for n in lengths[spec_idx]])
+            # snap each doc up into an already-compiled bucket when one fits
+            known = sorted(self._spec_keys)
+            for j, v in enumerate(lc):
+                fit = [key for key in known if key >= v]
+                if fit:
+                    lc[j] = fit[0]
+            # fresh keys: merge smallest upward until within the lifetime
+            # shape budget (always allowing at least one new key so oversized
+            # documents can still be matched)
+            fresh = sorted(set(lc.tolist()) - set(known))
+            allowed = max(1, self.max_buckets - len(known))
+            while len(fresh) > allowed:
+                lc[lc == fresh[0]] = fresh[1]
+                fresh.pop(0)
+            self._spec_keys = sorted(set(known) | set(fresh))
+            for key in sorted(set(lc.tolist())):
+                sel = spec_idx[lc == key]
+                chunk_len[sel] = key
+                calls += dispatch(self._spec_fn, sel, c * key)
+
+        accepted = self.packed.accepting[finals]
+        lanes = k * self.tables.i_max
+        work_par = np.where(spec, chunk_len * lanes, lengths * k)
+        steps = np.where(spec, chunk_len, lengths)
+        return BatchResult(accepted, finals, work_par, lengths * k, steps, calls)
+
+    def accepts_batch(self, docs: Sequence[bytes | np.ndarray]) -> np.ndarray:
+        """[B, K] accept matrix (convenience wrapper)."""
+        return self.membership_batch(docs).accepted

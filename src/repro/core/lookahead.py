@@ -22,9 +22,10 @@ import dataclasses
 
 import numpy as np
 
-from .automata import DFA
+from .automata import DFA, PackedDFA
 
-__all__ = ["LookaheadTables", "i_sigma_sets", "i_max_r", "build_lookahead_tables"]
+__all__ = ["LookaheadTables", "PackedLookaheadTables", "i_sigma_sets",
+           "i_max_r", "build_lookahead_tables", "build_packed_lookahead_tables"]
 
 
 def i_sigma_sets(dfa: DFA) -> list[set[int]]:
@@ -150,6 +151,66 @@ def i_sigma2_sets(dfa: DFA) -> list[set[int]]:
             tg.discard(dfa.sink)
             sets[c1 * n + c2] = tg
     return sets
+
+
+@dataclasses.dataclass
+class PackedLookaheadTables:
+    """Eq. 11 candidate tables for a ``PackedDFA`` (r = 1, joint classes).
+
+    The candidate axis is per *pattern*: lanes in the batched matcher are laid
+    out ``[K, i_max]`` per chunk, and ``cand_index`` maps a packed state id to
+    its lane inside its own pattern's candidate row (-1 if not a candidate —
+    notably each pattern's sink).
+
+    candidates[c, k, j] : j-th candidate packed state of pattern k for joint
+                          lookahead class c, padded with pattern k's sink
+                          (or its start if it has no dead state).
+    cand_count[c, k]    : |I_c^k|.
+    cand_index[c, q]    : lane of packed state q in its pattern's row, or -1.
+    i_max               : max_{c,k} |I_c^k| — the shared lane width.
+    gamma               : worst per-pattern I_max / (|Q_k| - has_sink).
+    """
+
+    candidates: np.ndarray  # [n_classes, K, i_max] int32
+    cand_count: np.ndarray  # [n_classes, K] int32
+    cand_index: np.ndarray  # [n_classes, Q_total] int32
+    i_max: int
+    gamma: float
+
+
+def build_packed_lookahead_tables(packed: PackedDFA) -> PackedLookaheadTables:
+    n_cls, k_pat, q_tot = packed.n_classes, packed.n_patterns, packed.n_states
+    sets: list[list[list[int]]] = []  # [n_cls][K] sorted candidate lists
+    for c in range(n_cls):
+        per_cls = []
+        for k in range(k_pat):
+            rows = packed.table[packed.pattern_slice(k), c]
+            tgts = set(int(t) for t in rows)
+            tgts.discard(int(packed.sinks[k]))
+            per_cls.append(sorted(tgts))
+        sets.append(per_cls)
+    i_max = max(1, max((len(s) for per in sets for s in per), default=1))
+    pad = np.array([packed.sinks[k] if packed.sinks[k] >= 0 else packed.starts[k]
+                    for k in range(k_pat)], np.int32)
+    candidates = np.broadcast_to(pad[None, :, None],
+                                 (n_cls, k_pat, i_max)).copy()
+    cand_count = np.zeros((n_cls, k_pat), np.int32)
+    cand_index = np.full((n_cls, q_tot), -1, np.int32)
+    for c in range(n_cls):
+        for k in range(k_pat):
+            ordered = sets[c][k]
+            cand_count[c, k] = len(ordered)
+            for j, st in enumerate(ordered):
+                candidates[c, k, j] = st
+                cand_index[c, st] = j
+    gamma = 0.0
+    for k in range(k_pat):
+        q_k = int(packed.offsets[k + 1] - packed.offsets[k])
+        live = max(q_k - (1 if packed.sinks[k] >= 0 else 0), 1)
+        k_imax = max(1, int(cand_count[:, k].max(initial=0)))
+        gamma = max(gamma, min(float(k_imax) / float(live), 1.0))
+    return PackedLookaheadTables(candidates=candidates, cand_count=cand_count,
+                                 cand_index=cand_index, i_max=i_max, gamma=gamma)
 
 
 def build_lookahead_tables(dfa: DFA, *, r: int = 1) -> LookaheadTables:

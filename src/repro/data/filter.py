@@ -2,10 +2,19 @@
 
 Quality/PII filtering of LM training corpora is regex scanning at TB scale:
 exactly the "single long-running membership test" workload the paper targets.
-``CorpusFilter`` compiles the block-list patterns to search DFAs and runs the
-speculative chunked matcher over each document; at fleet scale the byte
-stream is split across hosts with the paper's weighted partitioning
-(loader.py) and per-host scans use the SpecDFAEngine.
+``CorpusFilter`` compiles the block-list patterns to search DFAs; documents
+are scanned either
+
+  * **batched** (default, ``filter``/``scan_batch``): a whole document batch
+    advances against *all* patterns in one fused device call per shape bucket
+    via the packed-DFA ``BatchMatcher`` — lanes are chunks x candidates x
+    patterns, and only one [B, K] decision array returns to the host; or
+  * **per-document** (``document_ok``): each pattern's ``SpecDFAEngine`` runs
+    in turn with an early exit on the first hit (remaining patterns are not
+    scanned; ``FilterStats.patterns_scanned`` records how many were).
+
+At fleet scale the byte stream is split across hosts with the paper's
+weighted partitioning (loader.py) and per-host scans use these engines.
 
 A document is dropped when any pattern's search DFA reaches an accepting
 (absorbing) state anywhere in the document.
@@ -18,7 +27,8 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
-from ..core import SpecDFAEngine, compile_regex, make_search_dfa
+from ..core import (BatchMatcher, SpecDFAEngine, compile_regex,
+                    make_search_dfa, pack_dfas)
 
 __all__ = ["CorpusFilter", "FilterStats"]
 
@@ -30,42 +40,108 @@ class FilterStats:
     bytes_scanned: int = 0
     work_parallel: int = 0
     work_sequential: int = 0
+    patterns_scanned: int = 0  # pattern engines actually run (early exit!)
+    early_exits: int = 0       # docs whose scan stopped before the last pattern
+    batch_calls: int = 0       # fused device dispatches used by the batch path
+    time_steps: int = 0        # lane-parallel matching steps (batch path)
 
     @property
     def model_speedup(self) -> float:
+        """Scalar-work speedup proxy (meaningful for the per-document path)."""
         return self.work_sequential / max(self.work_parallel, 1)
+
+    @property
+    def lane_speedup(self) -> float:
+        """Lane-parallel model: symbols scanned per wall-clock matching step."""
+        return self.work_sequential / max(self.time_steps, 1)
 
 
 class CorpusFilter:
-    """Block-list regex filter backed by the speculative DFA engine."""
+    """Block-list regex filter backed by the speculative DFA engine.
+
+    ``num_chunks``/``mode``/``partition``/``lookahead_r`` configure the
+    per-document engines; ``batch_tile`` and ``max_buckets`` configure the
+    packed batch matcher (see ``core.engine.BatchMatcher``).
+    """
 
     def __init__(self, patterns: Iterable[str], *, num_chunks: int = 8,
                  mode: str = "lookahead", partition: str = "balanced",
-                 lookahead_r: int = 1):
-        self.engines = []
-        for pat in patterns:
-            dfa = make_search_dfa(compile_regex(".*(" + pat + ")"))
-            self.engines.append(
-                SpecDFAEngine(dfa, num_chunks=num_chunks, mode=mode,
-                              partition=partition, lookahead_r=lookahead_r))
+                 lookahead_r: int = 1, batch_tile: int = 64,
+                 max_buckets: int = 2):
+        self.dfas = [make_search_dfa(compile_regex(".*(" + pat + ")"))
+                     for pat in patterns]
+        self.engines = [
+            SpecDFAEngine(dfa, num_chunks=num_chunks, mode=mode,
+                          partition=partition, lookahead_r=lookahead_r)
+            for dfa in self.dfas]
+        # zero patterns = filter nothing, keep everything (no batch matcher)
+        self.batch = (BatchMatcher(pack_dfas(self.dfas),
+                                   num_chunks=num_chunks,
+                                   batch_tile=batch_tile,
+                                   max_buckets=max_buckets)
+                      if self.dfas else None)
         self.stats = FilterStats()
+
+    # -- per-document path (early exit across patterns) ---------------------
 
     def document_ok(self, doc: bytes) -> bool:
         self.stats.scanned += 1
         self.stats.bytes_scanned += len(doc)
+        data = np.frombuffer(doc, np.uint8)
         hit = False
-        for eng in self.engines:
-            res = eng.membership(np.frombuffer(doc, np.uint8))
+        for j, eng in enumerate(self.engines):
+            res = eng.membership(data)
+            self.stats.patterns_scanned += 1
             self.stats.work_parallel += res.work_parallel
             self.stats.work_sequential += res.work_sequential
             if res.accepted:
                 hit = True
+                if j < len(self.engines) - 1:
+                    self.stats.early_exits += 1
                 break
         if hit:
             self.stats.dropped += 1
         return not hit
 
-    def filter(self, docs: Iterable[bytes]) -> Iterator[bytes]:
+    # -- batched path (all patterns at once, no per-doc sync) ---------------
+
+    def scan_batch(self, docs: list[bytes]) -> np.ndarray:
+        """[B] keep-mask for a document batch; one fused call per bucket.
+
+        All K patterns are matched simultaneously (no early exit — the packed
+        lanes cost the same whether or not an earlier pattern hit), so
+        ``patterns_scanned`` grows by B * K.
+        """
+        if not docs:
+            return np.zeros(0, dtype=bool)
+        if self.batch is None:  # no patterns: keep everything
+            self.stats.scanned += len(docs)
+            self.stats.bytes_scanned += int(sum(len(d) for d in docs))
+            return np.ones(len(docs), dtype=bool)
+        res = self.batch.membership_batch(docs)
+        hit = res.accepted.any(axis=1)
+        self.stats.scanned += len(docs)
+        self.stats.bytes_scanned += int(sum(len(d) for d in docs))
+        self.stats.dropped += int(hit.sum())
+        self.stats.patterns_scanned += len(docs) * self.batch.n_patterns
+        self.stats.work_parallel += int(res.work_parallel.sum())
+        self.stats.work_sequential += int(res.work_sequential.sum())
+        self.stats.time_steps += int(res.time_steps.sum())
+        self.stats.batch_calls += res.bucket_calls
+        return ~hit
+
+    def filter(self, docs: Iterable[bytes], *,
+               batch_size: int = 64) -> Iterator[bytes]:
+        """Stream kept documents, scanning in batches of ``batch_size``."""
+        pending: list[bytes] = []
         for doc in docs:
-            if self.document_ok(doc):
-                yield doc
+            pending.append(doc)
+            if len(pending) >= batch_size:
+                for d, ok in zip(pending, self.scan_batch(pending)):
+                    if ok:
+                        yield d
+                pending = []
+        if pending:
+            for d, ok in zip(pending, self.scan_batch(pending)):
+                if ok:
+                    yield d

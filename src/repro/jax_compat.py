@@ -1,0 +1,39 @@
+"""Version shims for jax API renames used across the package.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+namespace around jax 0.5, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``.  Import ``shard_map`` from here and always
+pass ``check_vma=``; the shim forwards to whichever spelling the installed
+jax understands.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5 exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+__all__ = ["shard_map", "set_mesh"]
+
+
+def shard_map(*args, check_vma: bool | None = None, **kwargs):
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(*args, **kwargs)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` on new jax; older jax uses the mesh itself as the
+    ambient-mesh context manager (``with mesh:``)."""
+    import jax
+
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

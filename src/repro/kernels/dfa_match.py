@@ -29,7 +29,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["spec_match_kernel", "spec_match_pallas"]
+from .pallas_compat import CompilerParams
+
+__all__ = ["spec_match_kernel", "spec_match_pallas",
+           "spec_match_merge_kernel", "spec_match_merge_pallas"]
 
 
 def spec_match_kernel(table_ref, chunks_ref, init_ref, out_ref, carry_ref, *,
@@ -95,7 +98,114 @@ def spec_match_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
         out_specs=pl.BlockSpec((c_blk, s), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((c, s), jnp.int32),
         scratch_shapes=[pltpu.VMEM((c_blk, s), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(flat, chunks.astype(jnp.int32), init_states.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Batched multi-pattern kernel: grid over documents, merge fused in-kernel
+# --------------------------------------------------------------------------
+
+def spec_match_merge_kernel(table_ref, chunks_ref, init_ref, la_ref, cidx_ref,
+                            sinks_ref, out_ref, carry_ref, *, n_cls_pad: int,
+                            l_blocks: int, n_patterns: int, pad_cls: int):
+    """One (document, symbol-block) grid step of the fused batch pipeline.
+
+    table_ref : [Q_total * n_cls_pad] int32 pre-scaled flat packed table (VMEM)
+    chunks_ref: [1, C, l_blk] int32 joint classes for this doc/symbol block
+    init_ref  : [1, C, K * S] int32 candidate initial packed states
+    la_ref    : [1, C] int32 per-chunk reverse-lookahead class (entry 0 unused)
+    cidx_ref  : [n_cls_pad, Q_total] int32 candidate-lane index (VMEM, whole)
+    sinks_ref : [K] int32 packed sink per pattern (-1 if none)
+    out_ref   : [1, K] int32 final packed state per pattern (last block only)
+    carry_ref : [C, K * S] int32 VMEM scratch carrying pre-scaled states
+
+    The Eq. 8 fold over chunks runs *inside* the kernel on the final symbol
+    block, so one grid pass emits the per-document answer — no host-driven
+    ``lax.scan`` over chunk L-vectors and no intermediate [B, C, S] output.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = init_ref[0] * n_cls_pad
+
+    table = table_ref[...]
+    syms = chunks_ref[0]              # [C, l_blk]
+    states = carry_ref[...]           # [C, K * S] pre-scaled
+
+    def body(l, states):
+        idx = states + jax.lax.dynamic_slice_in_dim(syms, l, 1, axis=1)
+        return jnp.take(table, idx, axis=0)
+
+    states = jax.lax.fori_loop(0, syms.shape[1], body, states)
+    carry_ref[...] = states
+
+    @pl.when(j == l_blocks - 1)
+    def _merge():
+        c = states.shape[0]
+        lv = (states // n_cls_pad).reshape(c, n_patterns, -1)
+        la = la_ref[0]
+        cidx = cidx_ref[...]
+        sinks = sinks_ref[...]
+
+        def fold(i, s):  # s [K] packed states
+            la_i = jax.lax.dynamic_index_in_dim(la, i, 0, keepdims=False)
+            lv_i = jax.lax.dynamic_index_in_dim(lv, i, 0, keepdims=False)
+            lane = jnp.take(jnp.take(cidx, la_i, axis=0), s)
+            hit = jnp.take_along_axis(
+                lv_i, jnp.maximum(lane, 0)[:, None], axis=1)[:, 0]
+            nxt = jnp.where(lane < 0, jnp.where(sinks >= 0, sinks, s), hit)
+            nxt = jnp.where(la_i == pad_cls, s, nxt)
+            return nxt.astype(jnp.int32)
+
+        out_ref[0, :] = jax.lax.fori_loop(1, c, fold, lv[0, :, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("pad_cls", "l_blk", "interpret"))
+def spec_match_merge_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
+                            init_states: jnp.ndarray, lookahead: jnp.ndarray,
+                            cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                            pad_cls: int, l_blk: int = 512,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Pallas-backed equivalent of ``ref.spec_match_merge_ref``.
+
+    table [Q_total, n_cls_pad] (identity pad column included); chunks
+    [B, C, L]; init_states [B, C, K*S]; lookahead [B, C]; cand_index
+    [n_cls_pad, Q_total]; sinks [K].  L must divide by l_blk (ops.py picks
+    the block).  Grid: (B, L / l_blk) — documents ride the parallel grid
+    dimension, the symbol recurrence rides the arbitrary one.
+    """
+    q, n_cls_pad = table.shape
+    b, c, l = chunks.shape
+    s_tot = init_states.shape[-1]
+    k = sinks.shape[0]
+    assert l % l_blk == 0, (l, l_blk)
+    flat = (table.astype(jnp.int32) * n_cls_pad).reshape(-1)
+    l_blocks = l // l_blk
+
+    kernel = functools.partial(spec_match_merge_kernel, n_cls_pad=n_cls_pad,
+                               l_blocks=l_blocks, n_patterns=k,
+                               pad_cls=pad_cls)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, l_blocks),
+        in_specs=[
+            pl.BlockSpec((q * n_cls_pad,), lambda i, j: (0,)),     # flat table
+            pl.BlockSpec((1, c, l_blk), lambda i, j: (i, 0, j)),   # symbols
+            pl.BlockSpec((1, c, s_tot), lambda i, j: (i, 0, 0)),   # init lanes
+            pl.BlockSpec((1, c), lambda i, j: (i, 0)),             # lookahead
+            pl.BlockSpec((n_cls_pad, q), lambda i, j: (0, 0)),     # cand index
+            pl.BlockSpec((k,), lambda i, j: (0,)),                 # sinks
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((c, s_tot), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(flat, chunks.astype(jnp.int32), init_states.astype(jnp.int32),
+      lookahead.astype(jnp.int32), cand_index.astype(jnp.int32),
+      sinks.astype(jnp.int32))

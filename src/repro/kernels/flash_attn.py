@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 __all__ = ["flash_attn_kernel", "flash_attn_pallas"]
 
 NEG = -1e30
@@ -125,7 +127,7 @@ def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((q_blk,), jnp.float32),
             pltpu.VMEM((q_blk, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 __all__ = ["lvec_compose_kernel", "lvec_compose_pallas"]
 
 
@@ -64,7 +66,7 @@ def lvec_compose_pallas(maps: jnp.ndarray, *, c_blk: int = 8,
         out_specs=pl.BlockSpec((q,), lambda j: (0,)),
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
         scratch_shapes=[pltpu.VMEM((q,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(maps.astype(jnp.int32))

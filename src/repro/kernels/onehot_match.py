@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 __all__ = ["onehot_match_kernel", "onehot_block_maps_pallas", "build_pmats"]
 
 
@@ -79,7 +81,7 @@ def onehot_block_maps_pallas(table: jnp.ndarray, symbols: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((1, q), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((l // l_blk, q), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(symbols.astype(jnp.int32), pmats)

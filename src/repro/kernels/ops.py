@@ -16,14 +16,14 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .dfa_match import spec_match_pallas
+from .dfa_match import spec_match_merge_pallas, spec_match_pallas
 from .flash_attn import flash_attn_pallas
 from .lvec_compose import lvec_compose_pallas
 from .onehot_match import onehot_block_maps_pallas
 from .token_mask import token_mask_pallas
 
-__all__ = ["on_tpu", "spec_match", "lvec_compose", "onehot_block_maps",
-           "token_mask", "mxu_profitable", "flash_attn"]
+__all__ = ["on_tpu", "spec_match", "spec_match_merge", "lvec_compose",
+           "onehot_block_maps", "token_mask", "mxu_profitable", "flash_attn"]
 
 
 def on_tpu() -> bool:
@@ -82,6 +82,24 @@ def spec_match(table: jnp.ndarray, chunks: jnp.ndarray,
     l_blk = _pick_block(l, 512)
     return spec_match_pallas(table, chunks, init_states, c_blk=c_blk,
                              l_blk=l_blk, interpret=interpret)
+
+
+def spec_match_merge(table: jnp.ndarray, chunks: jnp.ndarray,
+                     init_states: jnp.ndarray, lookahead: jnp.ndarray,
+                     cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                     pad_cls: int,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Fused batch classify-stream match + merge; see ``ref.spec_match_merge_ref``.
+
+    One kernel launch covers a whole document bucket: grid over documents,
+    Eq. 8 merge fused into the last symbol block, output [B, K] finals only.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    l = chunks.shape[-1]
+    l_blk = _pick_block(l, 512)
+    return spec_match_merge_pallas(table, chunks, init_states, lookahead,
+                                   cand_index, sinks, pad_cls=pad_cls,
+                                   l_blk=l_blk, interpret=interpret)
 
 
 def lvec_compose(maps: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:

@@ -1,0 +1,16 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
+0.5; the kernels in this package are written against the new name.  Import
+``CompilerParams`` from here so they run on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

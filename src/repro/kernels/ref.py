@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spec_match_ref", "lvec_compose_ref", "onehot_block_maps_ref",
-           "token_mask_ref"]
+__all__ = ["spec_match_ref", "spec_match_merge_ref", "lvec_compose_ref",
+           "onehot_block_maps_ref", "token_mask_ref"]
 
 
 def spec_match_ref(table: jnp.ndarray, chunks: jnp.ndarray,
@@ -27,6 +27,56 @@ def spec_match_ref(table: jnp.ndarray, chunks: jnp.ndarray,
 
     final, _ = jax.lax.scan(step, init_states.astype(jnp.int32), chunks.T)
     return final
+
+
+def spec_match_merge_ref(table: jnp.ndarray, chunks: jnp.ndarray,
+                         init_states: jnp.ndarray, lookahead: jnp.ndarray,
+                         cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                         pad_cls: int) -> jnp.ndarray:
+    """Batched fused classify-stream match + Eq. 8 merge over packed patterns.
+
+    table       [Q_total, n_cls_pad] int32 packed transition table whose last
+                column (``pad_cls``) is the identity transition used for
+                document padding.
+    chunks      [B, C, L] int32 joint class ids (uniform chunking, padding is
+                a suffix of the document).
+    init_states [B, C, K * S] int32 candidate initial packed states; chunk 0's
+                lanes all hold the pattern starts (lane layout [K, S]).
+    lookahead   [B, C] int32 reverse-lookahead class per chunk (entry 0 is
+                ignored — chunk 0 is exact from the start states).
+    cand_index  [n_cls_pad, Q_total] int32 lane of a packed state inside its
+                pattern's candidate row, -1 if absent (row ``pad_cls`` unused).
+    sinks       [K] int32 packed sink per pattern (-1 if none).
+
+    Returns [B, K] final packed states per document per pattern.  Merge rules:
+    a ``pad_cls`` lookahead means the entire next chunk is padding (identity),
+    so the carried state passes through; a carried state missing from the
+    candidate row is the pattern's (absorbing) sink.
+    """
+    b, c, l = chunks.shape
+    k = sinks.shape[0]
+    s = init_states.shape[-1] // k
+
+    lvecs, _ = jax.lax.scan(
+        lambda st, cls_row: (table[st, cls_row[:, None]], None),
+        init_states.reshape(b * c, k * s).astype(jnp.int32),
+        chunks.reshape(b * c, l).T)
+    lvecs = lvecs.reshape(b, c, k, s)
+
+    def merge_doc(lv, la):  # lv [C, K, S], la [C]
+        def step(st, xs):   # st [K]
+            lv_i, la_i = xs
+            lane = cand_index[la_i, st]                              # [K]
+            hit = jnp.take_along_axis(
+                lv_i, jnp.maximum(lane, 0)[:, None], axis=1)[:, 0]
+            nxt = jnp.where(lane < 0, jnp.where(sinks >= 0, sinks, st), hit)
+            nxt = jnp.where(la_i == pad_cls, st, nxt)
+            return nxt.astype(jnp.int32), None
+
+        out, _ = jax.lax.scan(step, lv[0, :, 0], (lv[1:], la[1:]))
+        return out
+
+    return jax.vmap(merge_doc)(lvecs, lookahead.astype(jnp.int32))
 
 
 def lvec_compose_ref(maps: jnp.ndarray) -> jnp.ndarray:

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 __all__ = ["token_mask_kernel", "token_mask_pallas"]
 
 
@@ -55,7 +57,7 @@ def token_mask_pallas(states: jnp.ndarray, allowed: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, v_blk), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, v), logits.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(states.astype(jnp.int32), allowed.astype(jnp.uint8), logits)

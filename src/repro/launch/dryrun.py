@@ -104,13 +104,15 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> dict:
     import jax
 
+    from ..jax_compat import set_mesh
+
     multi = mesh_kind == "multi"
     t0 = time.time()
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "ok": False}
     try:
         mesh, fn, args, extra = build_cell(arch, shape_name, multi)
         record.update(extra, n_devices=int(mesh.devices.size))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = fn.lower(*args)
             record["lower_s"] = round(time.time() - t0, 2)
             t1 = time.time()
@@ -126,6 +128,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> dict:
                 "code_bytes": int(ma.generated_code_size_in_bytes),
             }
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+                ca = ca[0] if ca else {}
             record["cost"] = {k: float(v) for k, v in ca.items()
                               if isinstance(v, (int, float))} if ca else {}
             hlo = compiled.as_text()

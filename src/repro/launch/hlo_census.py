@@ -130,8 +130,11 @@ def hlo_census(hlo: str, n_devices: int) -> dict:
     edges: dict[str, list[tuple[str, int]]] = {n: [] for n in comps}
     for name, lines in comps.items():
         body_txt = "\n".join(lines)
+        # the operand may carry its tuple type (older jax HLO printer):
+        #   while((s32[], f32[8,64]{1,0}) %tuple.1), condition=..., body=...
         for m in re.finditer(
-                r"while\(%?[\w.\-]+\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+                r"while\((?:\([^)]*\)\s*)?%?[\w.\-]+\),\s*"
+                r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
                 body_txt):
             cond, wbody = m.group(1), m.group(2)
             cond_txt = "\n".join(comps.get(cond, []))
@@ -182,11 +185,14 @@ def hlo_census(hlo: str, n_devices: int) -> dict:
             _, out_bytes = _shape_elems_bytes(shape_txt)
             if op == "dot":
                 out_elems, _ = _shape_elems_bytes(shape_txt)
-                lhs = re.search(r"dot\(%?([\w.\-]+)", line)
+                # operands may be typed inline (older jax HLO printer):
+                #   dot(f32[8,64]{1,0} %gte.5, f32[64,64]{1,0} %gte.9)
+                lhs = re.search(r"dot\((?:([\w\[\],{}]+)\s+)?%?([\w.\-]+)", line)
                 cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
                 k_total = 1
-                if lhs and cdims and lhs.group(1) in smap:
-                    lhs_dims = _SHAPE.search(smap[lhs.group(1)])
+                if lhs and cdims:
+                    lhs_txt = lhs.group(1) or smap.get(lhs.group(2), "")
+                    lhs_dims = _SHAPE.search(lhs_txt)
                     if lhs_dims:
                         dims = [int(d) for d in lhs_dims.group(2).split(",") if d]
                         for ci in cdims.group(1).split(","):

@@ -22,6 +22,7 @@ import numpy as np
 import jax
 
 from ..configs import get_config, reduce_for_smoke
+from ..jax_compat import set_mesh
 from ..data import CorpusConfig, CorpusFilter, LoaderConfig, data_stream, generate_documents
 from ..distributed import sharding as shr
 from ..training import AdamWConfig, CheckpointManager, TrainOptions
@@ -66,7 +67,7 @@ def main() -> None:
         num_microbatches=args.microbatches,
         optimizer=AdamWConfig(lr=args.lr, warmup_steps=20,
                               total_steps=args.steps))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state_sharded(cfg, jax.random.PRNGKey(0), mesh, opts)
         first = next(batches)
         bspecs = shr.batch_specs(first, mesh, args.batch)

@@ -59,6 +59,17 @@ class GrammarConstraint:
         self.tok_cls = jnp.asarray(tok_cls)
         self.table_j = jnp.asarray(dfa.table)
 
+        def _advance_tokens(states: jnp.ndarray, tokens: jnp.ndarray):
+            def step(s, col):  # s [B], col [B]
+                nxt = self.table_j[s, self.tok_cls[col]]
+                keep = self.tok_is_byte[col] == 0  # specials don't move the DFA
+                return jnp.where(keep, s, nxt).astype(jnp.int32), None
+
+            out, _ = jax.lax.scan(step, states.astype(jnp.int32), tokens.T)
+            return out
+
+        self._advance_tokens_jit = jax.jit(_advance_tokens)
+
     def init_states(self, batch: int) -> jnp.ndarray:
         return jnp.full((batch,), self.dfa.start, jnp.int32)
 
@@ -79,6 +90,21 @@ class GrammarConstraint:
         nxt = self.table_j[states, cls]
         keep = self.tok_is_byte[tokens] == 0  # specials do not move the DFA
         return jnp.where(keep, states, nxt).astype(jnp.int32)
+
+    def advance_tokens(self, states: jnp.ndarray,
+                       tokens: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """Advance [B] states through [B, T] tokens in one vectorized scan.
+
+        Column-wise replay of ``advance`` (specials are identity moves) —
+        the batched prompt-prefill path: one device call for the whole batch
+        instead of a per-request host loop over prompt bytes.
+        """
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim != 2:
+            raise ValueError("advance_tokens expects [B, T] tokens")
+        if tokens.shape[1] == 0:
+            return states.astype(jnp.int32)
+        return self._advance_tokens_jit(states, tokens)
 
     def verify_draft(self, state: int, draft_bytes: np.ndarray) -> tuple[int, np.ndarray]:
         """Speculative-decoding accept test for one sequence's K draft bytes.

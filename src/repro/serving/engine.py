@@ -70,13 +70,9 @@ class ServingEngine:
         states = (self.constraint.init_states(b)
                   if self.constraint is not None else None)
         if states is not None:
-            # run prompt bytes through the DFA so constraints continue mid-text
-            st = np.array(states)  # writable host copy
-            for i in range(b):
-                _, traj = self.constraint.verify_draft(
-                    int(st[i]), np.asarray(prompts[i]) % 256)
-                st[i] = traj[-1] if len(traj) else st[i]
-            states = jnp.asarray(st)
+            # replay prompt tokens through the DFA in one vectorized call so
+            # constraints continue mid-text (specials are identity moves)
+            states = self.constraint.advance_tokens(states, prompts)
 
         out = np.full((b, self.serve.max_new_tokens), self.serve.eos_id,
                       np.int32)

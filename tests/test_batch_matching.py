@@ -1,0 +1,252 @@
+"""Batched multi-pattern pipeline: equality with sequential, retrace bounds.
+
+Covers the tentpole guarantees:
+  * ``membership_batch`` is bit-identical to per-document sequential matching
+    on ragged corpora (including docs shorter than 4 * num_chunks that fall
+    back to the batched sequential scan, and empty docs);
+  * a packed K-pattern table answers exactly like K independent engines;
+  * the fused Pallas kernel matches the pure-jnp reference;
+  * shape bucketing compiles at most ``max_buckets`` speculative shapes
+    across a ragged corpus (trace counters);
+  * the batched consumers (CorpusFilter, GrammarConstraint) agree with their
+    per-document paths.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (BatchMatcher, SpecDFAEngine, build_packed_lookahead_tables,
+                        compile_regex, make_search_dfa, pack_dfas, random_dfa)
+from repro.data.filter import CorpusFilter
+from repro.kernels import ops, ref
+from repro.serving.constrained import GrammarConstraint
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = b"abxy0189"
+
+
+def _docs(rng, sizes):
+    return [bytes(rng.choice(list(ALPHABET), size=int(n)).astype(np.uint8))
+            for n in sizes]
+
+
+# --------------------------------------------------------------------------
+# packed representation
+# --------------------------------------------------------------------------
+
+def test_pack_dfas_matches_independent_runs():
+    rng = np.random.default_rng(0)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS[:2]]
+    dfas.append(random_dfa(7, 4, rng=rng))
+    packed = pack_dfas(dfas)
+    assert packed.n_states == sum(d.n_states for d in dfas)
+    for _ in range(40):
+        data = rng.integers(0, 256, size=int(rng.integers(0, 80)), dtype=np.uint8)
+        got = packed.accepts_all(data)
+        want = np.array([d.accepts(data) for d in dfas])
+        assert (got == want).all()
+
+
+def test_packed_lookahead_candidate_invariant():
+    """delta(q, c) is always a candidate of class c unless it is the sink."""
+    rng = np.random.default_rng(1)
+    packed = pack_dfas([random_dfa(9, 5, rng=rng), random_dfa(5, 3, rng=rng)])
+    t = build_packed_lookahead_tables(packed)
+    for c in range(packed.n_classes):
+        for k in range(packed.n_patterns):
+            for q in range(packed.offsets[k], packed.offsets[k + 1]):
+                tgt = int(packed.table[q, c])
+                if tgt == packed.sinks[k]:
+                    assert t.cand_index[c, tgt] == -1
+                else:
+                    j = t.cand_index[c, tgt]
+                    assert j >= 0 and int(t.candidates[c, k, j]) == tgt
+
+
+# --------------------------------------------------------------------------
+# batch path == sequential
+# --------------------------------------------------------------------------
+
+def test_membership_batch_equals_sequential_ragged():
+    rng = np.random.default_rng(2)
+    dfa = make_search_dfa(compile_regex(PATTERNS[0]))
+    eng = SpecDFAEngine(dfa, num_chunks=8)
+    # ragged: empty, shorter than 4 * num_chunks (sequential fallback),
+    # boundary, and long
+    docs = _docs(rng, [0, 1, 3, 10, 31, 32, 33, 100, 255, 256, 513, 1024])
+    res = eng.membership_batch(docs)
+    assert res.accepted.shape == (len(docs), 1)
+    for i, d in enumerate(docs):
+        want = eng.membership_sequential(d)
+        assert int(res.final_states[i, 0]) == want.final_state, (i, len(d))
+        assert bool(res.accepted[i, 0]) == want.accepted
+
+
+def test_membership_batch_random_dfa_property():
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        dfa = random_dfa(int(rng.integers(3, 24)), int(rng.integers(2, 8)),
+                         rng=rng)
+        bm = BatchMatcher(dfa, num_chunks=int(rng.integers(2, 7)))
+        docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8)
+                for n in rng.integers(0, 400, size=12)]
+        res = bm.membership_batch(docs)
+        for i, d in enumerate(docs):
+            assert int(res.final_states[i, 0]) == dfa.run(d), (trial, i)
+
+
+def test_packed_k_patterns_equal_independent_engines():
+    rng = np.random.default_rng(4)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    bm = BatchMatcher(dfas, num_chunks=8)
+    engines = [SpecDFAEngine(d, num_chunks=8) for d in dfas]
+    docs = _docs(rng, rng.integers(0, 800, size=30))
+    res = bm.membership_batch(docs)
+    assert res.accepted.shape == (len(docs), len(dfas))
+    for i, d in enumerate(docs):
+        for k, e in enumerate(engines):
+            want = e.membership_sequential(d)
+            off = int(bm.packed.offsets[k])
+            assert int(res.final_states[i, k]) - off == want.final_state
+            assert bool(res.accepted[i, k]) == want.accepted
+
+
+def test_batch_kernel_path_equals_jnp_path():
+    rng = np.random.default_rng(5)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS[:2]]
+    docs = _docs(rng, rng.integers(0, 300, size=10))
+    res_j = BatchMatcher(dfas, num_chunks=4).membership_batch(docs)
+    res_k = BatchMatcher(dfas, num_chunks=4, use_kernel=True,
+                         batch_tile=8).membership_batch(docs)
+    assert (res_j.final_states == res_k.final_states).all()
+    assert (res_j.accepted == res_k.accepted).all()
+
+
+# --------------------------------------------------------------------------
+# retracing / bucketing policy
+# --------------------------------------------------------------------------
+
+def test_retrace_bound_on_ragged_corpus():
+    """<= 2 compiled speculative shapes across a 100-doc ragged corpus."""
+    rng = np.random.default_rng(6)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    bm = BatchMatcher(dfas, num_chunks=8, max_buckets=2)
+    corpus = _docs(rng, rng.integers(40, 3000, size=100))
+    r1 = bm.membership_batch(corpus[:64])
+    r2 = bm.membership_batch(corpus[64:])
+    assert bm.trace_count <= 2, bm.trace_count
+    assert len(bm._spec_keys) <= 2
+    # sticky buckets stay correct
+    eng = SpecDFAEngine(dfas[0], num_chunks=8)
+    finals = np.concatenate([r1.final_states, r2.final_states])
+    for i, d in enumerate(corpus):
+        assert int(finals[i, 0]) == eng.membership_sequential(d).final_state
+
+
+def test_batch_result_work_model():
+    rng = np.random.default_rng(7)
+    dfa = make_search_dfa(compile_regex(PATTERNS[1]))
+    bm = BatchMatcher(dfa, num_chunks=8)
+    docs = _docs(rng, [512] * 4)
+    res = bm.membership_batch(docs)
+    assert (res.work_sequential == np.array([512] * 4)).all()
+    assert res.lane_speedup > 1.0  # amortization must beat sequential model
+
+
+# --------------------------------------------------------------------------
+# fused kernel vs reference oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 4, 8), (3, 2, 16), (1, 8, 32)])
+def test_spec_match_merge_kernel_matches_ref(shape):
+    b, c, lc = shape
+    rng = np.random.default_rng(8)
+    packed = pack_dfas([random_dfa(8, 4, rng=rng), random_dfa(5, 3, rng=rng)])
+    t = build_packed_lookahead_tables(packed)
+    k, s = packed.n_patterns, t.i_max
+    pad_cls = packed.n_classes
+    q = packed.n_states
+    table = np.concatenate(
+        [packed.table, np.arange(q, dtype=np.int32).reshape(-1, 1)], axis=1)
+    cidx = np.concatenate([t.cand_index, np.full((1, q), -1, np.int32)])
+    cand = np.concatenate([t.candidates, t.candidates[:1]])
+
+    docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8)
+            for n in rng.integers(c * lc // 2, c * lc + 1, size=b)]
+    chunks = np.full((b, c, lc), pad_cls, np.int32)
+    for i, d in enumerate(docs):
+        cls = packed.classes_of(d)
+        chunks.reshape(b, -1)[i, :len(cls)] = cls
+    la = np.zeros((b, c), np.int32)
+    la[:, 1:] = chunks[:, :-1, -1]
+    init = np.zeros((b, c, k, s), np.int32)
+    init[:, 0] = np.broadcast_to(packed.starts[:, None], (k, s))
+    init[:, 1:] = cand[la[:, 1:]]
+    init = init.reshape(b, c, k * s)
+
+    args = (jnp.asarray(table), jnp.asarray(chunks), jnp.asarray(init),
+            jnp.asarray(la), jnp.asarray(cidx), jnp.asarray(packed.sinks))
+    want = np.stack([packed.run_all(d) for d in docs])
+    got_ref = np.asarray(ref.spec_match_merge_ref(*args, pad_cls=pad_cls))
+    got_ker = np.asarray(ops.spec_match_merge(*args, pad_cls=pad_cls))
+    assert (got_ref == want).all()
+    assert (got_ker == want).all()
+
+
+# --------------------------------------------------------------------------
+# consumers
+# --------------------------------------------------------------------------
+
+def test_corpus_filter_batch_equals_per_doc():
+    rng = np.random.default_rng(9)
+    filt = CorpusFilter([r"SECRET-[0-9]+", r"key=[a-z]{4}"], num_chunks=4)
+    docs = []
+    for n in rng.integers(5, 400, size=24):
+        d = bytearray(rng.choice(list(b"abc 01xyz"), size=int(n)).astype(np.uint8))
+        if rng.random() < 0.4:
+            ins = b"SECRET-77" if rng.random() < 0.5 else b"key=abcd"
+            pos = int(rng.integers(0, len(d) + 1))
+            d[pos:pos] = ins
+        docs.append(bytes(d))
+    keep_batch = filt.scan_batch(docs)
+    keep_doc = np.array([filt.document_ok(d) for d in docs])
+    assert (keep_batch == keep_doc).all()
+    assert filt.stats.scanned == 2 * len(docs)
+    # early-exit accounting: per-doc path never scans more patterns than K*B
+    assert filt.stats.patterns_scanned <= 2 * 2 * len(docs)
+    assert filt.stats.batch_calls >= 1
+
+
+def test_corpus_filter_no_patterns_keeps_everything():
+    filt = CorpusFilter([])
+    assert filt.document_ok(b"anything goes")
+    assert filt.scan_batch([b"a", b"b"]).all()
+    assert list(filt.filter([b"x", b"y"])) == [b"x", b"y"]
+    assert filt.stats.dropped == 0
+
+
+def test_corpus_filter_early_exit_stats():
+    filt = CorpusFilter([r"AAA", r"BBB"], num_chunks=4)
+    assert not filt.document_ok(b"xx AAA yy" * 20)  # first pattern hits
+    assert filt.stats.patterns_scanned == 1         # second engine never ran
+    assert filt.stats.early_exits == 1
+    assert filt.document_ok(b"clean text " * 20)
+    assert filt.stats.patterns_scanned == 3         # both engines ran
+
+
+def test_grammar_constraint_advance_tokens_matches_loop():
+    dfa = compile_regex("(ab)*a?")
+    gc = GrammarConstraint(dfa, vocab_size=300)
+    rng = np.random.default_rng(10)
+    toks = rng.integers(0, 300, size=(5, 12)).astype(np.int32)
+    states = gc.init_states(5)
+    want = states
+    for t in range(toks.shape[1]):
+        want = gc.advance(want, jnp.asarray(toks[:, t]))
+    got = gc.advance_tokens(gc.init_states(5), toks)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # empty prompt is the identity
+    got0 = gc.advance_tokens(gc.init_states(5), np.zeros((5, 0), np.int32))
+    assert (np.asarray(got0) == np.asarray(gc.init_states(5))).all()

@@ -4,6 +4,8 @@ import re
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (compile_prosite, compile_regex, make_search_dfa, minimize,

@@ -9,6 +9,7 @@
 
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

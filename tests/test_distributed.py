@@ -136,6 +136,7 @@ def test_train_step_on_small_production_mesh():
     """Full sharded train step (FSDP+TP+EP) on a (2,2,2) mesh, MoE arch."""
     run_in_subprocess("""
         import numpy as np, jax
+        from repro.jax_compat import set_mesh
         from repro.configs import ShapeSpec, get_config, reduce_for_smoke
         from repro.models import api
         from repro.training.train_loop import (TrainOptions,
@@ -149,7 +150,7 @@ def test_train_step_on_small_production_mesh():
         shape = ShapeSpec("t", "train", 64, 8)
         batch = api.make_inputs(cfg, shape, seed=0)
         opts = TrainOptions(num_microbatches=2, grad_compression="int8")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             state = init_train_state_sharded(cfg, jax.random.PRNGKey(0), mesh, opts)
             bspecs = shr.batch_specs(batch, mesh, 8)
             step = jit_train_step(cfg, mesh, state, bspecs, opts)

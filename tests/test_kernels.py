@@ -5,6 +5,7 @@ All kernel outputs are integers (or masked floats), so comparisons are exact.
 
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -40,6 +40,7 @@ def test_census_collectives_on_forced_devices():
                PYTHONPATH=os.path.join(repo, "src"))
     body = textwrap.dedent("""
         import jax, jax.numpy as jnp
+        from repro.jax_compat import set_mesh
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_census import hlo_census
         mesh = jax.make_mesh((8,), ("data",))
@@ -47,7 +48,7 @@ def test_census_collectives_on_forced_devices():
             return x.sum()
         sh = NamedSharding(mesh, P("data"))
         x = jax.ShapeDtypeStruct((64, 4), jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jax.jit(f, in_shardings=sh).lower(x).compile()
         c = hlo_census(compiled.as_text(), 8)
         total = sum(v["count"] for v in c["collectives"].values())
