@@ -246,6 +246,71 @@ def bench_merge_strategies() -> None:
 
 
 # --------------------------------------------------------------------------
+# Capacity-balanced vs uniform chunk layouts (paper §load-balancing, at the
+# device-mesh level: the plan/executor runtime's sharded backend)
+# --------------------------------------------------------------------------
+
+def bench_capacity_balance(d: int = 8, n_docs: int = 32,
+                           doc_len: int = 4096) -> None:
+    """Per-device chunk work, utilization skew, and docs/sec for uniform vs
+    capacity-weighted partitions on a deliberately skewed capacity profile.
+
+    Plan level (D = 8 simulated devices, paper's 1.41 EC2 speed ratio): the
+    planner's ``ChunkLayout`` assigns real symbols per device; utilization is
+    ``work_d / capacity_d`` and the derived columns are its CV and max/mean
+    skew — capacity weighting must cut both versus uniform chunks.
+    Documents fill the bucket width (the paper's single-long-stream setting,
+    Table 3): ragged tails turn trailing chunks into free padding and would
+    measure raggedness, not the balancing mechanism.  Wall clock: the
+    mesh-sharded executor end to end on however many local devices exist
+    (1 in this container; the layouts still differ).
+    """
+    from repro.core import (ChunkLayout, Matcher, compile_regex,
+                            make_search_dfa, profile_workers,
+                            synthetic_capacities)
+    from repro.core.engine import layout_device_work, next_pow2
+    from repro.core.patterns import PCRE_PATTERNS
+    from repro.launch.mesh import make_matcher_mesh
+
+    rng = np.random.default_rng(11)
+    caps = synthetic_capacities(d)          # 1.41x fast half (Table 3 ratio)
+    weights = profile_workers(caps)         # Eq. 1
+    c = 2 * d                               # two chunks per device
+    width = c * next_pow2(-(-doc_len // c))
+    sizes = np.full(n_docs, width, np.int64)
+
+    skews = {}
+    for name, layout in (
+            ("uniform", ChunkLayout.uniform(width, c, d)),
+            ("weighted", ChunkLayout.weighted(width, c, d, weights))):
+        work = layout_device_work(layout, sizes).astype(np.float64)
+        util = work / caps
+        skews[name] = float(util.max() / util.mean())
+        for i, v in enumerate(work):
+            emit(f"capacity_balance/{name}/work_dev{i}", 0.0, float(v))
+        emit(f"capacity_balance/{name}/util_cv", 0.0,
+             float(util.std() / util.mean()))
+        emit(f"capacity_balance/{name}/util_skew", 0.0, skews[name])
+    emit("capacity_balance/skew_reduction", 0.0,
+         skews["uniform"] / max(skews["weighted"], 1e-9))
+
+    # end-to-end docs/sec through the sharded executor on the local mesh
+    mesh = make_matcher_mesh()
+    d_loc = int(mesh.shape["data"])
+    docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8) for n in sizes]
+    pats = list(PCRE_PATTERNS.values())[:4]
+    dfas = [make_search_dfa(compile_regex(".*(" + p + ")")) for p in pats]
+    for name, cap_arg in (("uniform", None),
+                          ("weighted", synthetic_capacities(d_loc))):
+        m = Matcher(dfas, num_chunks=c, backend="sharded", mesh=mesh,
+                    batch_tile=n_docs, capacities=cap_arg)
+        m.membership_batch(docs)  # compile + warm buckets
+        us = time_us(lambda: m.membership_batch(docs), repeats=2)
+        emit(f"capacity_balance/sharded_{name}/D{d_loc}/docs_per_s",
+             us / n_docs, n_docs / (us / 1e6))
+
+
+# --------------------------------------------------------------------------
 # Batched multi-pattern pipeline: docs/sec and bytes/sec, batch and K scaling
 # --------------------------------------------------------------------------
 

@@ -35,6 +35,7 @@ def main() -> None:
         ("load_balance", pf.bench_load_balance),             # Table 3
         ("merge_strategies", pf.bench_merge_strategies),     # Sec 5.2
         ("batch_throughput", pf.bench_batch_throughput),     # batched pipeline
+        ("capacity_balance", pf.bench_capacity_balance),     # sharded runtime
     ]
     if args.only:
         names = set(args.only.split(","))

@@ -2,8 +2,9 @@
 
 from .automata import DFA, NFA, PackedDFA, make_search_dfa, pack_dfas, random_dfa
 from .determinize import compile_prosite, compile_regex, minimize, nfa_to_dfa
-from .engine import (BatchMatcher, BatchResult, MatchResult, SpecDFAEngine,
-                     match_chunks_lanes, sequential_state)
+from .engine import (BatchMatcher, BatchResult, ChunkLayout, DeviceTables,
+                     Matcher, MatchPlan, MatchResult, Planner, ShardedExecutor,
+                     SpecDFAEngine, match_chunks_lanes, sequential_state)
 from .lookahead import (LookaheadTables, PackedLookaheadTables,
                         build_lookahead_tables, build_packed_lookahead_tables,
                         i_max_r, i_sigma_sets)
@@ -11,13 +12,14 @@ from .lvector import (compose, compose_jnp, identity_lvec, merge_compressed,
                       merge_scan_jnp, merge_sequential, merge_tree)
 from .partition import Partition, capacity_weights, uniform_partition, weighted_partition
 from .patterns import PCRE_PATTERNS, PROSITE_PATTERNS, compile_pattern_suite
-from .profiling import profile_capacity, profile_workers
+from .profiling import profile_capacity, profile_workers, synthetic_capacities
 from .regex import parse_regex, prosite_to_regex, regex_to_nfa
 
 __all__ = [
     "DFA", "NFA", "PackedDFA", "make_search_dfa", "pack_dfas", "random_dfa",
     "compile_regex", "compile_prosite", "minimize", "nfa_to_dfa",
-    "MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher",
+    "MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher", "Matcher",
+    "MatchPlan", "Planner", "ChunkLayout", "DeviceTables", "ShardedExecutor",
     "match_chunks_lanes", "sequential_state",
     "LookaheadTables", "PackedLookaheadTables", "build_lookahead_tables",
     "build_packed_lookahead_tables", "i_max_r", "i_sigma_sets",
@@ -25,6 +27,6 @@ __all__ = [
     "merge_scan_jnp", "merge_sequential", "merge_tree",
     "Partition", "capacity_weights", "uniform_partition", "weighted_partition",
     "PCRE_PATTERNS", "PROSITE_PATTERNS", "compile_pattern_suite",
-    "profile_capacity", "profile_workers",
+    "profile_capacity", "profile_workers", "synthetic_capacities",
     "parse_regex", "prosite_to_regex", "regex_to_nfa",
 ]

@@ -1,0 +1,47 @@
+"""Layered plan/executor matching runtime (the paper's engine, refactored).
+
+Module map — how a membership query flows through the layers:
+
+    spec.py       SpecDFAEngine: the paper's single-document speculative
+                  membership test (Sec. 4.1, Eqs. 2–8, Alg. 2/3 + Holub–Stekr
+                  baseline).  Also home of the jitted primitives
+                  ``sequential_state`` / ``match_chunks_lanes``.
+    plan.py       Planner layer: spec-vs-seq split, sticky shape bucketing,
+                  chunk partitioning + capacity weighting (Eqs. 1–7 via
+                  core.partition / core.profiling), lookahead-table selection
+                  (``DeviceTables``).  Pure numpy; emits an explicit
+                  ``MatchPlan``.
+    executors.py  Executor protocol + ``LocalExecutor`` (jitted jnp reference
+                  and fused Pallas kernel backends), on-device byte->class
+                  classification, absorbing-state early exit.
+    sharded.py    ``ShardedExecutor``: chunk axis sharded over the mesh
+                  "data" axis via shard_map; capacity-weighted chunk
+                  boundaries; devices exchange only per-chunk L-vector lane
+                  states before the Eq. 8 merge.
+    facade.py     ``Matcher``: packs patterns, owns a Planner + an executor
+                  backend ("local" | "pallas" | "sharded"), exposes
+                  ``membership_batch``; ``BatchMatcher`` compat shim.
+
+Adding an executor backend: implement the three-method protocol in
+``executors.Executor`` (``run_spec``, ``run_seq``, ``steps_for``) over the
+shared ``DeviceTables`` bundle — inputs are raw byte buffers + lengths and a
+``ChunkLayout``; results must stay bit-identical to sequential matching —
+then route it from ``Matcher.__init__``.  See ROADMAP.md §Plan/executor
+layering.
+"""
+
+from .executors import Executor, LocalExecutor
+from .facade import BatchMatcher, BatchResult, Matcher
+from .plan import (BucketPlan, ChunkLayout, DeviceTables, MatchPlan, Planner,
+                   expand_device_weights, layout_device_work, next_pow2)
+from .sharded import ShardedExecutor
+from .spec import (VPU_LANES, MatcherFn, MatchResult, SpecDFAEngine,
+                   match_chunks_lanes, sequential_state)
+
+__all__ = [
+    "MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher", "Matcher",
+    "sequential_state", "match_chunks_lanes", "VPU_LANES", "MatcherFn",
+    "Planner", "MatchPlan", "BucketPlan", "ChunkLayout", "DeviceTables",
+    "expand_device_weights", "layout_device_work", "next_pow2",
+    "Executor", "LocalExecutor", "ShardedExecutor",
+]

@@ -1,0 +1,218 @@
+"""Executor layer: interchangeable device backends behind one protocol.
+
+An executor turns one ``BucketPlan`` worth of documents into ``[B, K]`` final
+packed states.  All backends consume the same inputs —
+
+  * ``bytes_buf [B, W] uint8``  — raw document bytes, zero-padded (byte ->
+    class classification happens **on device**, fused into the bucket call;
+    ``kernels.ref.classify_pad_ref`` is the host oracle),
+  * ``lengths [B] int32``       — real byte counts (positions beyond a
+    document's length classify to the identity pad class),
+  * a ``ChunkLayout``           — the planner's chunk boundaries,
+
+and must be bit-identical to per-document sequential matching.
+
+Backends:
+
+  * ``LocalExecutor``                 — pure-jnp jitted path (the oracle),
+    with an absorbing-state early exit: the symbol scan runs in segments
+    inside a ``lax.while_loop`` and stops once every lane of every document
+    is absorbing (sink or absorbing accept) — further symbols cannot change
+    any state, so the remaining segments are skipped entirely.  Per-document
+    absorption positions are returned so the facade can report
+    ``early_exits``.
+  * ``LocalExecutor(use_kernel=True)`` — the fused Pallas kernel
+    (``kernels.ops.spec_match_merge``) for the speculative path (no early
+    exit inside the kernel; the batched sequential path still exits early).
+  * ``engine.sharded.ShardedExecutor`` — the mesh-sharded backend (own
+    module).
+
+The protocol: ``run_spec(buf, lengths, layout)`` / ``run_seq(buf, lengths)``
+both return ``(finals [B, K], absorbed_pos [B])`` where ``absorbed_pos`` is
+the scan position (chunk-local for spec, stream for seq) at which the
+document's lanes all became absorbing, or a sentinel >= the scan length.
+``traces`` counts jit retraces (side effect fires at trace time only).
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .plan import ChunkLayout, DeviceTables
+
+__all__ = ["Executor", "LocalExecutor", "NO_EXIT"]
+
+NO_EXIT = np.int32(2 ** 30)  # absorbed_pos sentinel: never fully absorbed
+
+
+class Executor(Protocol):
+    traces: int
+
+    def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                 layout: ChunkLayout) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+
+    def run_seq(self, bytes_buf: jnp.ndarray,
+                lengths: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+
+    def steps_for(self, layout: ChunkLayout) -> int: ...
+
+
+def _prev_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n.bit_length() - 1)
+
+
+class _ExecutorBase:
+    """Shared on-device classify + batched sequential scan (all backends)."""
+
+    def __init__(self, tables: DeviceTables, *, num_chunks: int,
+                 early_exit_segments: int = 4):
+        self.t = tables
+        self.num_chunks = int(num_chunks)
+        # segments must divide the pow2 scan widths -> round down to a pow2
+        self.early_exit_segments = _prev_pow2(max(int(early_exit_segments), 1))
+        self.traces = 0
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._seq_fn = jax.jit(self._seq_impl, donate_argnums=donate)
+
+    # -- fused classification (the retired host numpy path lives in
+    # kernels/ref.classify_pad_ref as the oracle) ---------------------------
+
+    def _classify(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+        """bytes [B, W] + lengths -> [B, W] class ids, pad_cls past the end."""
+        cls = self.t.byte_to_class_j[bytes_buf.astype(jnp.int32)]
+        pos = jnp.arange(bytes_buf.shape[1], dtype=jnp.int32)[None, :]
+        return jnp.where(pos < lengths[:, None].astype(jnp.int32), cls,
+                         jnp.int32(self.t.pad_cls))
+
+    # -- segmented scan with absorbing-state early exit ---------------------
+
+    def _segmented_match(self, sym_t: jnp.ndarray, states: jnp.ndarray,
+                         eff_len: jnp.ndarray, scan_len: int
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Scan ``states [R, S]`` through ``sym_t [L, R]`` symbol columns in
+        segments, stopping once every document is *done*: all its lanes are
+        absorbing, or the scan has passed its real symbols (``eff_len [B]``
+        per-doc; pure-padding rows of a partial tile are done immediately,
+        so they never pin the loop to the full scan).
+
+        Rows are doc-major (R = B * rows_per_doc).  Returns (final states,
+        absorbed_pos [B]) with ``absorbed_pos`` the first segment boundary at
+        which a document's lanes were all absorbing (sentinel ``NO_EXIT``
+        otherwise).  Exactness: absorbing states self-loop on every class and
+        padding is the identity column, so skipping the remaining symbols of
+        a done document is bit-identical.
+        """
+        table = self.t.table_pad_j
+        absorbing = self.t.absorbing_j
+        b = eff_len.shape[0]
+
+        def seg_scan(st, cols):
+            def step(s, row):
+                return table[s, row[:, None]], None
+            out, _ = jax.lax.scan(step, st, cols)
+            return out
+
+        segs = min(self.early_exit_segments, scan_len)
+        pos0 = jnp.full((b,), NO_EXIT, jnp.int32)
+        if segs <= 1 or scan_len == 0:
+            return seg_scan(states, sym_t), pos0
+        seg_len = scan_len // segs
+
+        def cond(carry):
+            _, g, _, all_done = carry
+            return (g < segs) & ~all_done
+
+        def body(carry):
+            st, g, pos, _ = carry
+            cols = jax.lax.dynamic_slice_in_dim(sym_t, g * seg_len, seg_len,
+                                                axis=0)
+            st = seg_scan(st, cols)
+            doc_abs = absorbing[st].reshape(b, -1).all(axis=1)
+            boundary = ((g + 1) * seg_len).astype(jnp.int32)
+            pos = jnp.where(doc_abs & (pos == NO_EXIT), boundary, pos)
+            done = doc_abs | (boundary >= eff_len.astype(jnp.int32))
+            return st, g + 1, pos, done.all()
+
+        states, _, pos, _ = jax.lax.while_loop(
+            cond, body, (states, jnp.int32(0), pos0, jnp.bool_(False)))
+        return states, pos
+
+    # -- batched sequential path (short documents) --------------------------
+
+    def _seq_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
+        """Batched Algorithm 1: classify + one scan, [B, K] finals.  Rows are
+        independent, so this body is also the per-shard program of the
+        sharded backend's document-axis split."""
+        b, w = bytes_buf.shape
+        cls = self._classify(bytes_buf, lengths)
+        s0 = jnp.broadcast_to(
+            self.t.starts_j[None, :], (b, self.t.n_patterns)).astype(jnp.int32)
+        return self._segmented_match(cls.T, s0, jnp.minimum(lengths, w), w)
+
+    def _seq_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
+        self.traces += 1
+        return self._seq_body(bytes_buf, lengths)
+
+    def run_seq(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
+        return self._seq_fn(bytes_buf, lengths)
+
+
+class LocalExecutor(_ExecutorBase):
+    """Single-device jitted executor: pure-jnp reference or fused Pallas.
+
+    The speculative body fuses classification residue, uniform chunking,
+    candidate gather, chunk matching, and the Eq. 8 merge in one jitted call
+    per bucket (donated input buffer on accelerators); only the [B, K]
+    final-state array crosses back to the host.
+    """
+
+    def __init__(self, tables: DeviceTables, *, num_chunks: int,
+                 use_kernel: bool = False, early_exit_segments: int = 4):
+        super().__init__(tables, num_chunks=num_chunks,
+                         early_exit_segments=early_exit_segments)
+        self.use_kernel = bool(use_kernel)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._spec_fn = jax.jit(self._spec_impl, donate_argnums=donate)
+
+    def steps_for(self, layout: ChunkLayout) -> int:
+        return layout.lmax  # uniform layout: lmax == chunk_len
+
+    def _spec_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
+        """Fused classify/chunk/candidate-gather/match/merge, one bucket."""
+        from ...kernels import ops as kops
+        from ...kernels import ref as kref
+
+        self.traces += 1  # side effect fires at trace time only
+        t = self.t
+        b, w = bytes_buf.shape
+        c = self.num_chunks
+        lc = w // c
+        k, s = t.n_patterns, t.i_max
+        cls = self._classify(bytes_buf, lengths)
+        body = cls.reshape(b, c, lc)
+        la = jnp.concatenate(
+            [jnp.zeros((b, 1), jnp.int32), body[:, :-1, -1]], axis=1)
+        cand = t.cand_pad_j[la[:, 1:]]                         # [B, C-1, K, S]
+        start = jnp.broadcast_to(t.starts_j[None, None, :, None], (b, 1, k, s))
+        init = jnp.concatenate([start, cand], axis=1).reshape(b, c, k * s)
+        if self.use_kernel:
+            finals = kops.spec_match_merge(t.table_pad_j, body, init, la,
+                                           t.cidx_pad_j, t.sinks_j,
+                                           pad_cls=t.pad_cls)
+            return finals, jnp.full((b,), NO_EXIT, jnp.int32)
+        sym_t = body.reshape(b * c, lc).T                      # [Lc, B*C]
+        # per-chunk effective fill: a doc's deepest chunk-local real symbol
+        lvecs, pos = self._segmented_match(sym_t, init.reshape(b * c, k * s),
+                                           jnp.minimum(lengths, lc), lc)
+        finals = kref.spec_merge_ref(lvecs.reshape(b, c, k, s), la,
+                                     t.cidx_pad_j, t.sinks_j, pad_cls=t.pad_cls)
+        return finals, pos
+
+    def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                 layout: ChunkLayout):
+        return self._spec_fn(bytes_buf, lengths)

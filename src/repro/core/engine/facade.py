@@ -1,0 +1,280 @@
+"""``Matcher`` facade: one entry point over the plan/executor layers.
+
+The facade wires a packed pattern table, a ``Planner`` (bucketing, chunk
+partitioning, capacity weighting) and an executor backend together behind
+the pre-refactor ``BatchMatcher`` API:
+
+    Matcher(dfas, backend="local")                      # jitted jnp path
+    Matcher(dfas, backend="pallas")                     # fused Pallas kernel
+    Matcher(dfas, backend="sharded", capacities=[...])  # mesh-sharded,
+                                                        # capacity-balanced
+
+``BatchMatcher`` remains as a compatibility shim (``use_kernel=True`` maps to
+the ``pallas`` backend).  Decisions stay bit-identical to per-document
+sequential matching on every backend, device count and capacity profile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..automata import DFA, PackedDFA, pack_dfas
+from ..partition import capacity_weights
+from .executors import LocalExecutor
+from .plan import DeviceTables, Planner, layout_device_work, next_pow2
+
+__all__ = ["BatchResult", "Matcher", "BatchMatcher"]
+
+BACKENDS = ("local", "pallas", "sharded")
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Per-batch outcome of ``Matcher.membership_batch``.
+
+    ``accepted``/``final_states`` are [B, K] (K = packed pattern count);
+    work arrays are per-document model quantities mirroring ``MatchResult``.
+    ``early_exits`` counts documents retired by the absorbing-state early
+    exit before their real end; ``device_work`` (sharded backend) is the [D]
+    real symbols assigned per device by the plan's chunk layouts.
+    """
+
+    accepted: np.ndarray        # [B, K] bool
+    final_states: np.ndarray    # [B, K] int32 packed state ids
+    work_parallel: np.ndarray   # [B] scalar-model work
+    work_sequential: np.ndarray # [B] n * K
+    time_steps: np.ndarray      # [B] lane-parallel matching steps
+    bucket_calls: int           # device dispatches consumed by this batch
+    early_exits: int = 0        # docs fully absorbed before their last symbol
+    device_work: Optional[np.ndarray] = None  # [D] real symbols per device
+
+    @property
+    def model_speedup(self) -> float:
+        return float(self.work_sequential.sum()) / max(float(self.work_parallel.sum()), 1.0)
+
+    @property
+    def lane_speedup(self) -> float:
+        return float(self.work_sequential.sum()) / max(float(self.time_steps.sum()), 1.0)
+
+
+class Matcher:
+    """Batched, multi-pattern membership over padded shape buckets.
+
+    Accepts a single ``DFA``, a pre-built ``PackedDFA``, or a sequence of
+    DFAs (packed on the fly).  The planner owns the bucketing / padding /
+    retracing policy (see ``engine.plan``); the executor owns the device
+    dispatch (see ``engine.executors`` / ``engine.sharded``).
+
+    Parameters
+    ----------
+    source       : DFA | PackedDFA | sequence of DFA.
+    num_chunks   : uniform chunk count C per document (rounded up to a
+                   multiple of the mesh data extent on the sharded backend).
+    max_buckets  : lifetime compiled-shape budget for the speculative path.
+    batch_tile   : fixed row count of every device call (rounded up to a
+                   power of two).
+    backend      : "local" | "pallas" | "sharded".
+    mesh         : sharded backend only — mesh with a "data" axis (defaults
+                   to ``launch.mesh.make_matcher_mesh`` over all devices).
+    capacities   : sharded backend only — measured per-device capacities
+                   (symbols/us, e.g. from ``core.profiling.profile_workers``
+                   inputs); normalized to Eq. 1 weights for the planner's
+                   capacity-balanced chunk layout.  ``None`` = uniform.
+    spec_m       : weighted-layout work model: 1 = lane-parallel chunk sizes
+                   proportional to capacity (default); ``i_max`` reproduces
+                   the paper's scalar-worker Eqs. 2–7.
+    early_exit_segments : absorbing-state early-exit granularity per scan
+                   (1 disables; pow2, local/seq paths only).
+    """
+
+    def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
+                 batch_tile: int = 64, backend: str = "local", mesh=None,
+                 capacities: Optional[Sequence[float]] = None,
+                 spec_m: int = 1, early_exit_segments: int = 4):
+        if isinstance(source, PackedDFA):
+            packed = source
+        elif isinstance(source, DFA):
+            packed = pack_dfas([source])
+        else:
+            packed = pack_dfas(list(source))
+        if num_chunks < 1:
+            raise ValueError("num_chunks must be >= 1")
+        if max_buckets < 1:
+            raise ValueError("max_buckets must be >= 1")
+        if batch_tile < 1:
+            raise ValueError("batch_tile must be >= 1")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+        self.packed = packed
+        self.backend = backend
+        self.max_buckets = int(max_buckets)
+        self.batch_tile = next_pow2(int(batch_tile))
+        self.dev = DeviceTables.build(packed)
+        self.pad_cls = self.dev.pad_cls
+
+        if backend == "sharded":
+            if mesh is None:
+                from ...launch.mesh import make_matcher_mesh
+                mesh = make_matcher_mesh()
+            devices = int(mesh.shape["data"])
+            weights = (None if capacities is None
+                       else capacity_weights(np.asarray(capacities, np.float64)))
+            self.planner = Planner(num_chunks=num_chunks,
+                                   max_buckets=max_buckets, devices=devices,
+                                   weights=weights, spec_m=spec_m)
+            from .sharded import ShardedExecutor
+            self.executor = ShardedExecutor(
+                self.dev, num_chunks=self.planner.num_chunks, mesh=mesh,
+                early_exit_segments=early_exit_segments)
+        else:
+            if capacities is not None:
+                raise ValueError("capacities only apply to the sharded backend")
+            if mesh is not None:
+                raise ValueError("mesh only applies to the sharded backend")
+            if spec_m != 1:
+                raise ValueError("spec_m only applies to the sharded backend")
+            self.planner = Planner(num_chunks=num_chunks,
+                                   max_buckets=max_buckets, devices=1)
+            self.executor = LocalExecutor(
+                self.dev, num_chunks=self.planner.num_chunks,
+                use_kernel=(backend == "pallas"),
+                early_exit_segments=early_exit_segments)
+        self.num_chunks = self.planner.num_chunks
+        self._advance_fn = jax.jit(self._advance_impl)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def n_patterns(self) -> int:
+        return self.packed.n_patterns
+
+    @property
+    def tables(self):
+        """Packed Eq. 11 lookahead tables (built lazily on first access)."""
+        return self.dev.tables
+
+    @property
+    def trace_count(self) -> int:
+        """Number of shapes compiled so far (increments once per retrace)."""
+        return self.executor.traces
+
+    @property
+    def _spec_keys(self) -> list[int]:
+        """Compiled speculative bucket keys (compat alias for the planner's)."""
+        return self.planner.spec_keys
+
+    # -- public API ---------------------------------------------------------
+
+    def classes(self, doc: bytes | np.ndarray) -> np.ndarray:
+        return self.packed.classes_of(doc).astype(np.int32)
+
+    def membership_batch(self, docs: Sequence[bytes | np.ndarray]) -> BatchResult:
+        """Match every doc against every packed pattern; no per-doc syncs.
+
+        Returns a ``BatchResult`` whose decisions are bit-identical to running
+        each document through sequential matching per pattern.
+        """
+        b = len(docs)
+        k = self.packed.n_patterns
+        if b == 0:
+            z = np.zeros(0, np.int64)
+            return BatchResult(np.zeros((0, k), bool), np.zeros((0, k), np.int32),
+                               z, z, z, 0)
+        arrs = [np.frombuffer(d, np.uint8)
+                if isinstance(d, (bytes, bytearray))
+                else np.asarray(d, np.uint8) for d in docs]
+        lengths = np.array([a.shape[0] for a in arrs], np.int64)
+        plan = self.planner.plan(lengths)
+        finals = np.tile(self.packed.starts, (b, 1)).astype(np.int32)
+        steps = np.where(plan.spec_mask, 0, lengths)
+        calls = 0
+        early = 0
+        device_work = (np.zeros(self.planner.devices, np.int64)
+                       if self.backend == "sharded" else None)
+
+        for bucket in plan.buckets:
+            spec = bucket.kind == "spec"
+            layout = self.planner.layout_for(bucket.chunk_len) if spec else None
+            if spec:
+                steps[bucket.doc_idx] = self.executor.steps_for(layout)
+                if device_work is not None:
+                    device_work += layout_device_work(layout,
+                                                      lengths[bucket.doc_idx])
+            for lo in range(0, bucket.doc_idx.size, self.batch_tile):
+                sel = bucket.doc_idx[lo:lo + self.batch_tile]
+                buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
+                lens = np.zeros(self.batch_tile, np.int32)
+                for r, i in enumerate(sel):
+                    buf[r, :lengths[i]] = arrs[i]
+                    lens[r] = lengths[i]
+                if spec:
+                    out, pos = self.executor.run_spec(
+                        jnp.asarray(buf), jnp.asarray(lens), layout)
+                else:
+                    out, pos = self.executor.run_seq(
+                        jnp.asarray(buf), jnp.asarray(lens))
+                out, pos = np.asarray(out), np.asarray(pos)
+                finals[sel] = out[:sel.size]
+                # a doc "exited early" if all its lanes hit absorbing states
+                # before its real symbols ran out (spec positions are
+                # chunk-local, so compare against the per-chunk fill)
+                eff = (np.minimum(bucket.chunk_len, lengths[sel]) if spec
+                       else lengths[sel])
+                early += int((pos[:sel.size] < eff).sum())
+                calls += 1
+
+        accepted = self.packed.accepting[finals]
+        # lanes forces the lazy lookahead tables — only on speculative work
+        lanes = k * self.tables.i_max if plan.spec_mask.any() else k
+        work_par = np.where(plan.spec_mask, steps * lanes, lengths * k)
+        return BatchResult(accepted, finals, work_par, lengths * k, steps,
+                           calls, early_exits=early, device_work=device_work)
+
+    def accepts_batch(self, docs: Sequence[bytes | np.ndarray]) -> np.ndarray:
+        """[B, K] accept matrix (convenience wrapper)."""
+        return self.membership_batch(docs).accepted
+
+    # -- serving hook -------------------------------------------------------
+
+    def _advance_impl(self, states: jnp.ndarray, classes: jnp.ndarray) -> jnp.ndarray:
+        def step(st, col):  # st [B], col [B]
+            return self.dev.table_pad_j[st, col], None
+
+        out, _ = jax.lax.scan(step, states.astype(jnp.int32), classes.T)
+        return out
+
+    def advance_classes(self, states: jnp.ndarray,
+                        classes: jnp.ndarray) -> jnp.ndarray:
+        """Advance [B] packed states through [B, T] class columns in one scan.
+
+        ``pad_cls`` columns are identity moves (the padded table's extra
+        column), which is how callers encode "this position advances no DFA"
+        — e.g. special tokens in grammar-constrained serving.
+        """
+        classes = jnp.asarray(classes, jnp.int32)
+        if classes.ndim != 2:
+            raise ValueError("advance_classes expects [B, T] classes")
+        if classes.shape[1] == 0:
+            return jnp.asarray(states, jnp.int32)
+        return self._advance_fn(states, classes)
+
+
+class BatchMatcher(Matcher):
+    """Compatibility shim: the pre-refactor batched engine constructor.
+
+    ``use_kernel=True`` routes chunk matching + merge through the fused
+    Pallas kernel (the ``pallas`` backend); everything else is the facade.
+    """
+
+    def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
+                 batch_tile: int = 64, use_kernel: bool = False):
+        super().__init__(source, num_chunks=num_chunks, max_buckets=max_buckets,
+                         batch_tile=batch_tile,
+                         backend="pallas" if use_kernel else "local")
+        self.use_kernel = bool(use_kernel)

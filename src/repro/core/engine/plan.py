@@ -1,0 +1,324 @@
+"""Planner layer: everything decided *before* a device call.
+
+The planner owns the four host-side decisions of the batched matching
+pipeline and freezes them into an explicit ``MatchPlan`` that every executor
+backend consumes unchanged:
+
+  * **spec-vs-seq split** — documents shorter than ``4 * num_chunks`` take the
+    batched sequential scan (one fused call for all of them), the rest take
+    the speculative chunk path;
+  * **shape bucketing** — speculative documents are grouped by
+    ``next_pow2(ceil(n / C))`` chunk length; bucket keys are *sticky* across
+    calls (``Planner`` keeps the compiled-key set) and fresh keys merge upward
+    until the lifetime ``max_buckets`` shape budget is respected;
+  * **chunk partitioning / capacity weighting** — a ``ChunkLayout`` maps the
+    padded symbol width of a bucket onto per-device chunk boundaries, either
+    uniform or capacity-weighted via the paper's Eqs. 1–7
+    (``core.partition.weighted_partition`` with per-worker weights from
+    ``core.profiling.profile_workers``);
+  * **lookahead-table selection** — the packed Eq. 11 candidate tables plus
+    the identity-pad-column device arrays are bundled once in
+    ``DeviceTables`` and shared by all executors.
+
+Nothing in this module touches a device except ``DeviceTables.build`` (which
+uploads the constant tables); planning is pure numpy and therefore cheap to
+re-run per batch and trivial to test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..automata import PackedDFA
+from ..lookahead import PackedLookaheadTables, build_packed_lookahead_tables
+from ..partition import Partition, uniform_partition, weighted_partition
+
+__all__ = ["next_pow2", "DeviceTables", "ChunkLayout", "BucketPlan",
+           "MatchPlan", "Planner", "expand_device_weights", "layout_device_work"]
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# Device-ready matcher tables (lookahead-table selection)
+# --------------------------------------------------------------------------
+
+class DeviceTables:
+    """Constant device arrays shared by every executor backend.
+
+    ``table_pad`` appends the identity transition column ``pad_cls`` (padding
+    advances no DFA); ``cand_pad``/``cidx_pad`` append the matching pad rows
+    (the pad candidates row is never merged through but must hold in-range
+    states for the gather; the pad ``cand_index`` row stays -1).
+    ``absorbing[q]`` marks states with only self-loops over *real* classes —
+    the early-exit test (a document whose every lane is absorbing can stop
+    matching).
+
+    The Eq. 11 lookahead candidate tables build lazily on first speculative
+    use: consumers that only advance states through the padded table (e.g.
+    grammar-constrained serving) never pay the O(n_cls * Q) analysis.
+    """
+
+    def __init__(self, packed: PackedDFA):
+        self.packed = packed
+        self.pad_cls = packed.n_classes
+        q = packed.n_states
+        ident = np.arange(q, dtype=np.int32).reshape(-1, 1)
+        self.table_pad_j = jnp.asarray(          # [Q, n_cls + 1] int32
+            np.concatenate([packed.table, ident], axis=1))
+        self.starts_j = jnp.asarray(packed.starts)        # [K] int32
+        self.sinks_j = jnp.asarray(packed.sinks)          # [K] int32
+        self.byte_to_class_j = jnp.asarray(packed.byte_to_class)  # [256]
+        self.absorbing_j = jnp.asarray(                   # [Q] bool
+            (packed.table == np.arange(q, dtype=np.int32)[:, None]).all(axis=1))
+
+    @classmethod
+    def build(cls, packed: PackedDFA) -> "DeviceTables":
+        return cls(packed)
+
+    @property
+    def n_patterns(self) -> int:
+        return self.packed.n_patterns
+
+    @property
+    def i_max(self) -> int:
+        return self.tables.i_max
+
+    @functools.cached_property
+    def tables(self) -> PackedLookaheadTables:
+        return build_packed_lookahead_tables(self.packed)
+
+    @functools.cached_property
+    def cand_pad_j(self) -> jnp.ndarray:  # [n_cls + 1, K, S] int32
+        t = self.tables
+        with jax.ensure_compile_time_eval():  # first touch may be mid-trace
+            return jnp.asarray(
+                np.concatenate([t.candidates, t.candidates[:1]], axis=0))
+
+    @functools.cached_property
+    def cidx_pad_j(self) -> jnp.ndarray:  # [n_cls + 1, Q] int32
+        with jax.ensure_compile_time_eval():
+            return jnp.asarray(np.concatenate(
+                [self.tables.cand_index,
+                 np.full((1, self.packed.n_states), -1, np.int32)], axis=0))
+
+
+# --------------------------------------------------------------------------
+# Chunk layouts (partitioning + capacity weighting)
+# --------------------------------------------------------------------------
+
+def expand_device_weights(weights: np.ndarray, chunks_per_device: int) -> np.ndarray:
+    """Per-chunk weights from per-device weights (device d owns a contiguous
+    run of ``chunks_per_device`` chunks)."""
+    w = np.asarray(weights, dtype=np.float64)
+    return np.repeat(w, chunks_per_device)
+
+
+@dataclasses.dataclass
+class ChunkLayout:
+    """Static chunk boundaries of one bucket width, assigned to devices.
+
+    ``starts``/``ends`` partition ``[0, width)`` into ``C`` contiguous chunks;
+    chunk ``i`` lives on device ``device_of[i]``.  ``exact[i]`` marks chunks
+    that start at stream position 0 and are therefore matched exactly from
+    the start states (chunk 0, plus any chunk behind zero-length leading
+    chunks).  ``lmax`` is the padded per-chunk buffer length every executor
+    allocates — trailing identity-pad columns never move a lane, so padding a
+    chunk's tail is free in state space.
+    """
+
+    width: int
+    starts: np.ndarray     # [C] int64
+    ends: np.ndarray       # [C] int64
+    device_of: np.ndarray  # [C] int64
+    exact: np.ndarray      # [C] bool
+    lmax: int
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.starts.shape[0])
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.device_of.max()) + 1 if self.starts.size else 1
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.ends - self.starts
+
+    @classmethod
+    def from_partition(cls, part: Partition, width: int, devices: int) -> "ChunkLayout":
+        c = part.start.shape[0]
+        if c % devices != 0:
+            raise ValueError(f"{c} chunks do not divide over {devices} devices")
+        sizes = part.end - part.start
+        return cls(width=width, starts=part.start.copy(), ends=part.end.copy(),
+                   device_of=np.repeat(np.arange(devices), c // devices),
+                   exact=(part.start == 0), lmax=int(max(sizes.max(), 1)))
+
+    @classmethod
+    def uniform(cls, width: int, num_chunks: int, devices: int = 1) -> "ChunkLayout":
+        return cls.from_partition(uniform_partition(width, num_chunks, 1),
+                                  width, devices)
+
+    @classmethod
+    def weighted(cls, width: int, num_chunks: int, devices: int,
+                 weights: np.ndarray, m: int = 1) -> "ChunkLayout":
+        """Capacity-weighted boundaries (paper Eqs. 2–7 over the bucket width).
+
+        ``m = 1`` is the lane-parallel model (chunk sizes proportional to
+        capacity; equal capacities degrade to ``uniform``); ``m = I_max``
+        reproduces the paper's scalar-worker model where the exact chunk 0 is
+        ``m``x longer.
+        """
+        w_chunks = expand_device_weights(weights, num_chunks // devices)
+        return cls.from_partition(weighted_partition(width, w_chunks, m),
+                                  width, devices)
+
+
+def layout_device_work(layout: ChunkLayout, lengths: np.ndarray) -> np.ndarray:
+    """Real symbols matched per device for documents of the given lengths.
+
+    A chunk's real work on a document of length ``n`` is the overlap of its
+    ``[start, end)`` span with ``[0, n)`` — trailing pad columns are free in
+    the model (and on real heterogeneous fleets would not be shipped at all).
+    Returns ``[D]`` summed over all documents.
+    """
+    lengths = np.asarray(lengths, dtype=np.int64)
+    overlap = (np.minimum(layout.ends[None, :], lengths[:, None])
+               - np.minimum(layout.starts[None, :], lengths[:, None]))
+    per_chunk = overlap.sum(axis=0)
+    d = layout.num_devices
+    work = np.zeros(d, dtype=np.int64)
+    np.add.at(work, layout.device_of, per_chunk)
+    return work
+
+
+# --------------------------------------------------------------------------
+# The plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BucketPlan:
+    """One fused device dispatch group: documents sharing a compiled shape."""
+
+    kind: str            # "seq" | "spec"
+    width: int           # padded byte/symbol width of the device buffer
+    chunk_len: int       # Lc for spec buckets (width == C * Lc); 0 for seq
+    doc_idx: np.ndarray  # [n_docs] int64 indices into the batch
+
+
+@dataclasses.dataclass
+class MatchPlan:
+    """Everything an executor needs to run one batch, decided up front."""
+
+    buckets: list[BucketPlan]
+    lengths: np.ndarray      # [B] int64 document byte lengths
+    spec_mask: np.ndarray    # [B] bool — True: speculative chunk path
+    chunk_len: np.ndarray    # [B] int64 assigned Lc (0 for seq docs)
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.lengths.shape[0])
+
+
+class Planner:
+    """Sticky-bucket batch planner (state lives here, not in the facade).
+
+    Parameters mirror the old ``BatchMatcher`` policy: ``max_buckets`` is the
+    lifetime compiled-shape budget for the speculative path (new chunk
+    lengths snap up into compiled buckets; fresh keys merge upward), and the
+    short-document sequential width is fixed at ``next_pow2(4C - 1)`` so the
+    seq path compiles exactly once (it grows only in the ``num_chunks <= 1``
+    everything-sequential configuration).
+    """
+
+    def __init__(self, *, num_chunks: int = 8, max_buckets: int = 2,
+                 devices: int = 1, weights: Optional[np.ndarray] = None,
+                 spec_m: int = 1):
+        if num_chunks < 1:
+            raise ValueError("num_chunks must be >= 1")
+        if max_buckets < 1:
+            raise ValueError("max_buckets must be >= 1")
+        if devices < 1:
+            raise ValueError("devices must be >= 1")
+        # round the chunk count up to a device multiple so the chunk axis
+        # shards evenly (a no-op for the single-device executors)
+        self.num_chunks = -(-int(num_chunks) // int(devices)) * int(devices)
+        self.max_buckets = int(max_buckets)
+        self.devices = int(devices)
+        self.spec_m = int(spec_m)
+        self.weights = None if weights is None else np.asarray(weights, np.float64)
+        if self.weights is not None and self.weights.shape != (self.devices,):
+            raise ValueError("need one capacity weight per device")
+        self.spec_keys: list[int] = []
+        self.seq_width = next_pow2(max(4 * self.num_chunks - 1, 1))
+        self._layouts: dict[int, ChunkLayout] = {}
+
+    # -- chunk layouts ------------------------------------------------------
+
+    def layout_for(self, chunk_len: int) -> ChunkLayout:
+        """Chunk boundaries for one spec bucket width (cached, deterministic)."""
+        if chunk_len not in self._layouts:
+            width = self.num_chunks * chunk_len
+            if self.weights is None:
+                self._layouts[chunk_len] = ChunkLayout.uniform(
+                    width, self.num_chunks, self.devices)
+            else:
+                self._layouts[chunk_len] = ChunkLayout.weighted(
+                    width, self.num_chunks, self.devices, self.weights,
+                    m=self.spec_m)
+        return self._layouts[chunk_len]
+
+    # -- batch planning -----------------------------------------------------
+
+    def plan(self, lengths: np.ndarray) -> MatchPlan:
+        """Assign every document to a bucket, updating the sticky key set."""
+        lengths = np.asarray(lengths, dtype=np.int64)
+        b = lengths.shape[0]
+        c = self.num_chunks
+        spec = (lengths >= 4 * c) & (c > 1)
+        chunk_len = np.zeros(b, np.int64)
+        buckets: list[BucketPlan] = []
+
+        seq_idx = np.flatnonzero(~spec)
+        if seq_idx.size and int(lengths[seq_idx].max()) > 0:
+            lmax = int(lengths[seq_idx].max())
+            if lmax > self.seq_width:  # only reachable when num_chunks <= 1
+                self.seq_width = next_pow2(lmax)
+            buckets.append(BucketPlan("seq", self.seq_width, 0, seq_idx))
+
+        spec_idx = np.flatnonzero(spec)
+        if spec_idx.size:
+            lc = np.array([next_pow2(-(-int(n) // c)) for n in lengths[spec_idx]])
+            # snap each doc up into an already-compiled bucket when one fits
+            known = sorted(self.spec_keys)
+            for j, v in enumerate(lc):
+                fit = [key for key in known if key >= v]
+                if fit:
+                    lc[j] = fit[0]
+            # fresh keys: merge smallest upward until within the lifetime
+            # shape budget (always allowing at least one new key so oversized
+            # documents can still be matched)
+            fresh = sorted(set(lc.tolist()) - set(known))
+            allowed = max(1, self.max_buckets - len(known))
+            while len(fresh) > allowed:
+                lc[lc == fresh[0]] = fresh[1]
+                fresh.pop(0)
+            self.spec_keys = sorted(set(known) | set(fresh))
+            for key in sorted(set(lc.tolist())):
+                sel = spec_idx[lc == key]
+                chunk_len[sel] = key
+                buckets.append(BucketPlan("spec", c * key, key, sel))
+
+        return MatchPlan(buckets=buckets, lengths=lengths, spec_mask=spec,
+                         chunk_len=chunk_len)

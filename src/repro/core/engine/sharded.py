@@ -1,0 +1,213 @@
+"""Mesh-sharded executor: capacity-balanced chunk matching across devices.
+
+The paper's cloud result (288 EC2 cores) comes from two ingredients: split
+the input across workers, and size each worker's slice by its *measured
+matching capacity* (Eq. 1, ``core.profiling.profile_workers``).  This
+executor is the device-mesh version of that scheme:
+
+  * the **chunk axis is sharded** over the mesh's ``data`` axis
+    (``launch.mesh.make_matcher_mesh`` + ``jax_compat.shard_map``): each
+    device matches its contiguous run of chunks x candidate lanes locally;
+  * chunk boundaries come from the planner's ``ChunkLayout`` — uniform, or
+    capacity-weighted via the paper's Eqs. 2–7 so a device with twice the
+    measured capacity receives twice the real symbols (trailing identity-pad
+    columns equalize the SPMD buffer shapes; they advance no DFA and carry no
+    model work);
+  * devices exchange **only the per-chunk L-vector lane states**
+    (``[C, B, K, S]`` int32, independent of chunk length) in one
+    ``all_gather`` before the Eq. 8 merge — the documents' bytes never cross
+    devices;
+  * the merge folds the gathered lane states per document, exactly as the
+    single-device reference, so results are bit-identical to sequential
+    matching for any device count and any capacity profile.
+
+Axis split: the **batched sequential path shards the document axis** over
+"data" (``distributed.sharding.doc_batch_spec`` — rows are independent, each
+device scans B/D of them, nothing is exchanged).  The speculative path keeps
+document rows replicated and shards chunks instead: the L-vector exchange
+only exists *because* one document's chunks live on different devices, which
+is the paper's architecture and what capacity weighting balances.  A 2-D
+document x chunk mesh for batches beyond one host's memory is a recorded
+ROADMAP follow-up.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .executors import NO_EXIT, _ExecutorBase
+from .plan import ChunkLayout, DeviceTables
+
+__all__ = ["ShardedExecutor"]
+
+
+class ShardedExecutor(_ExecutorBase):
+    """shard_map-backed executor over the mesh ``data`` axis.
+
+    Parameters
+    ----------
+    tables      : shared ``DeviceTables`` bundle.
+    num_chunks  : total chunk count C (a multiple of the mesh data extent;
+                  the planner rounds up).
+    mesh        : mesh with a ``data`` axis; defaults to
+                  ``launch.mesh.make_matcher_mesh()`` over all local devices.
+    """
+
+    def __init__(self, tables: DeviceTables, *, num_chunks: int,
+                 mesh=None, early_exit_segments: int = 4):
+        super().__init__(tables, num_chunks=num_chunks,
+                         early_exit_segments=early_exit_segments)
+        if mesh is None:
+            from ...launch.mesh import make_matcher_mesh
+            mesh = make_matcher_mesh()
+        self.mesh = mesh
+        self.devices = int(mesh.shape["data"])
+        if self.num_chunks % self.devices != 0:
+            raise ValueError(
+                f"num_chunks={self.num_chunks} must be a multiple of the mesh "
+                f"data extent {self.devices} (the planner rounds up for you)")
+        self._spec_fns: dict[int, object] = {}
+        self._seq_fns: dict[int, object] = {}
+
+    def _replicated_tables(self):
+        """Pin the constant matcher tables onto every mesh device up front
+        (distributed.sharding.matcher_table_specs), instead of relying on
+        implicit transfer at first dispatch."""
+        from jax.sharding import NamedSharding
+
+        from ...distributed.sharding import matcher_table_specs
+
+        t = self.t
+        specs = matcher_table_specs(self.mesh)
+
+        def repl(name, arr):
+            return jax.device_put(arr, NamedSharding(self.mesh, specs[name]))
+
+        return (repl("table_pad", t.table_pad_j),
+                repl("cand_pad", t.cand_pad_j),
+                repl("cidx_pad", t.cidx_pad_j))
+
+    # -- batched sequential path: document axis sharded over "data" ---------
+
+    def run_seq(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
+        b = bytes_buf.shape[0]
+        if self.devices == 1 or b % self.devices != 0:
+            return super().run_seq(bytes_buf, lengths)
+        fn = self._seq_fns.get(b)
+        if fn is None:
+            fn = self._build_seq_fn(b)
+            self._seq_fns[b] = fn
+        return fn(bytes_buf, lengths)
+
+    def _build_seq_fn(self, batch: int):
+        """Short documents are independent rows, so the document axis shards
+        cleanly over "data" (distributed.sharding.doc_batch_spec) — each
+        device classifies and scans B/D rows, nothing is exchanged."""
+        from jax.sharding import PartitionSpec as P
+
+        from ...distributed.sharding import doc_batch_spec
+        from ...jax_compat import shard_map
+
+        row_ax = tuple(doc_batch_spec(self.mesh, batch))
+        buf_spec, len_spec = P(*row_ax, None), P(*row_ax)
+        body = shard_map(self._seq_body, mesh=self.mesh,
+                         in_specs=(buf_spec, len_spec),
+                         out_specs=(buf_spec, len_spec), check_vma=False)
+
+        def impl(bytes_buf, lengths):
+            self.traces += 1  # side effect fires at trace time only
+            return body(bytes_buf, lengths)
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(impl, donate_argnums=donate)
+
+    def steps_for(self, layout: ChunkLayout) -> int:
+        return layout.lmax  # lane-parallel wall steps = longest chunk buffer
+
+    # -- speculative path ---------------------------------------------------
+
+    def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                 layout: ChunkLayout):
+        fn = self._spec_fns.get(layout.width)
+        if fn is None:
+            fn = self._build_spec_fn(layout)
+            self._spec_fns[layout.width] = fn
+        return fn(bytes_buf, lengths)
+
+    def _build_spec_fn(self, layout: ChunkLayout):
+        """Jit one bucket width; the layout's boundaries are baked in as
+        static slices (deterministic per width, so the cache key is width)."""
+        from ...distributed.sharding import matcher_chunk_specs
+        from ...jax_compat import shard_map
+
+        t = self.t
+        lmax = layout.lmax
+        bounds = list(zip(layout.starts.tolist(), layout.ends.tolist()))
+        exact_np = layout.exact.copy()
+        in_specs, out_spec = matcher_chunk_specs(self.mesh)
+        table_pad, cand_pad, cidx_pad = self._replicated_tables()
+
+        def body(chunk_loc, la_loc, exact_loc):
+            # chunk_loc [C_loc, B, Lmax]; la_loc [C_loc, B]; exact_loc [C_loc]
+            c_loc, b = chunk_loc.shape[0], chunk_loc.shape[1]
+            k, s = t.n_patterns, t.i_max
+            cand = cand_pad[la_loc]                      # [C_loc, B, K, S]
+            start = jnp.broadcast_to(
+                t.starts_j[None, None, :, None], (c_loc, b, k, s))
+            init = jnp.where(exact_loc[:, None, None, None], start, cand)
+            sym_t = chunk_loc.reshape(c_loc * b, lmax).T
+
+            def step(st, row):
+                return table_pad[st, row[:, None]], None
+
+            lvecs, _ = jax.lax.scan(
+                step, init.reshape(c_loc * b, k * s).astype(jnp.int32), sym_t)
+            # the only cross-device exchange: lane states, not symbols
+            lv_all = jax.lax.all_gather(
+                lvecs.reshape(c_loc, b, k, s), "data", axis=0, tiled=True)
+            la_all = jax.lax.all_gather(la_loc, "data", axis=0, tiled=True)
+            ex_all = jax.lax.all_gather(exact_loc, "data", axis=0, tiled=True)
+            return self._merge_gathered(lv_all, la_all, ex_all, cidx_pad)
+
+        sharded_body = shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_spec, check_vma=False)
+
+        def impl(bytes_buf, lengths):
+            self.traces += 1  # side effect fires at trace time only
+            b = bytes_buf.shape[0]
+            cls = self._classify(bytes_buf, lengths)     # [B, W]
+            pieces, la_rows = [], []
+            for s0, e0 in bounds:
+                piece = cls[:, s0:e0]
+                if e0 - s0 < lmax:  # tail-pad to the SPMD buffer length
+                    piece = jnp.pad(piece, ((0, 0), (0, lmax - (e0 - s0))),
+                                    constant_values=t.pad_cls)
+                pieces.append(piece)
+                la_rows.append(cls[:, s0 - 1] if s0 > 0
+                               else jnp.zeros((b,), jnp.int32))
+            chunk_buf = jnp.stack(pieces)                # [C, B, Lmax]
+            la = jnp.stack(la_rows)                      # [C, B]
+            finals = sharded_body(chunk_buf, la, jnp.asarray(exact_np))
+            return finals, jnp.full((b,), NO_EXIT, jnp.int32)
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(impl, donate_argnums=donate)
+
+    def _merge_gathered(self, lv_all: jnp.ndarray, la_all: jnp.ndarray,
+                        exact_all: jnp.ndarray,
+                        cidx_pad: jnp.ndarray) -> jnp.ndarray:
+        """Eq. 8 fold over gathered chunk lane states, with exact-chunk flags.
+
+        lv_all [C, B, K, S]; la_all [C, B]; exact_all [C] — a chunk starting
+        at stream position 0 is matched exactly from the start states, so the
+        merge reads its lane 0 instead of a candidate lookup.  Delegates to
+        the one shared merge definition (``kernels.ref.spec_merge_ref``,
+        doc-major) so sharded and local stay bit-identical by construction.
+        """
+        from ...kernels.ref import spec_merge_ref
+
+        t = self.t
+        return spec_merge_ref(jnp.swapaxes(lv_all, 0, 1), la_all.T,
+                              cidx_pad, t.sinks_j, pad_cls=t.pad_cls,
+                              exact=exact_all)

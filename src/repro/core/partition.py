@@ -64,12 +64,12 @@ def weighted_partition(n: int, weights: np.ndarray, m: int) -> Partition:
     l0 = n * m / (w[0] * m + w[1:].sum())
     start = np.zeros(p, dtype=np.int64)
     end = np.zeros(p, dtype=np.int64)
-    # Eq. 6/7; boundary_k = L0*w0 + (1/m) * sum_{1<=i<=k} L0*w_i
-    acc = l0 * w[0]
-    bounds = [acc]
-    for i in range(1, p):
-        acc += l0 * w[i] / m
-        bounds.append(acc)
+    # Eq. 6/7; boundary_k = L0 * (w0 + (1/m) * sum_{1<=i<=k} w_i).  Cumulate
+    # the weights first and multiply by L0 once: the running-sum form
+    # ``acc += l0 * w_i / m`` drifts by ulps, enough to disagree with
+    # ``uniform_partition`` by one symbol under equal capacities (the
+    # degradation is exact with this formulation — tests rely on it).
+    bounds = l0 * (w[0] + np.concatenate([[0.0], np.cumsum(w[1:])]) / m)
     prev = 0
     for k in range(p):
         start[k] = prev

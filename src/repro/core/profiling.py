@@ -22,7 +22,7 @@ from .automata import DFA, random_dfa
 from .engine import sequential_state
 from .partition import capacity_weights
 
-__all__ = ["profile_capacity", "profile_workers"]
+__all__ = ["profile_capacity", "profile_workers", "synthetic_capacities"]
 
 
 def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
@@ -47,3 +47,23 @@ def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
 def profile_workers(capacities: np.ndarray | list[float]) -> np.ndarray:
     """Eq. 1 weights from measured capacities (one entry per worker)."""
     return capacity_weights(np.asarray(capacities, dtype=np.float64))
+
+
+def synthetic_capacities(n_workers: int, *, ratio: float = 1.41,
+                         n_fast: int | None = None) -> np.ndarray:
+    """Deliberately skewed capacity profile for benchmarks and tests.
+
+    ``n_fast`` workers run at ``ratio``x the base speed — 1.41 is the paper's
+    measured gap between its two EC2 instance generations (Table 3); the
+    default skews half the fleet.  Feed the result to ``profile_workers`` /
+    ``Matcher(capacities=...)`` to exercise the capacity-balanced planner
+    without a real heterogeneous fleet.
+    """
+    if n_workers < 1:
+        raise ValueError("need at least one worker")
+    if n_fast is None:
+        n_fast = n_workers // 2
+    if not 0 <= n_fast <= n_workers:
+        raise ValueError("n_fast out of range")
+    return np.array([ratio] * n_fast + [1.0] * (n_workers - n_fast),
+                    dtype=np.float64)

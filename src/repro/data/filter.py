@@ -27,8 +27,8 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
-from ..core import (BatchMatcher, SpecDFAEngine, compile_regex,
-                    make_search_dfa, pack_dfas)
+from ..core import (Matcher, SpecDFAEngine, compile_regex, make_search_dfa,
+                    pack_dfas)
 
 __all__ = ["CorpusFilter", "FilterStats"]
 
@@ -41,7 +41,9 @@ class FilterStats:
     work_parallel: int = 0
     work_sequential: int = 0
     patterns_scanned: int = 0  # pattern engines actually run (early exit!)
-    early_exits: int = 0       # docs whose scan stopped before the last pattern
+    early_exits: int = 0       # per-doc path: scan stopped before the last
+                               # pattern; batch path: docs retired by the
+                               # absorbing-state early exit
     batch_calls: int = 0       # fused device dispatches used by the batch path
     time_steps: int = 0        # lane-parallel matching steps (batch path)
 
@@ -60,14 +62,18 @@ class CorpusFilter:
     """Block-list regex filter backed by the speculative DFA engine.
 
     ``num_chunks``/``mode``/``partition``/``lookahead_r`` configure the
-    per-document engines; ``batch_tile`` and ``max_buckets`` configure the
-    packed batch matcher (see ``core.engine.BatchMatcher``).
+    per-document engines; ``batch_tile``/``max_buckets``/``backend``/
+    ``capacities``/``mesh`` configure the packed batch matcher facade (see
+    ``core.engine.Matcher`` — ``backend="sharded"`` with measured
+    ``capacities`` runs the capacity-balanced mesh executor on ``mesh`` or
+    all local devices).
     """
 
     def __init__(self, patterns: Iterable[str], *, num_chunks: int = 8,
                  mode: str = "lookahead", partition: str = "balanced",
                  lookahead_r: int = 1, batch_tile: int = 64,
-                 max_buckets: int = 2):
+                 max_buckets: int = 2, backend: str = "local",
+                 capacities=None, mesh=None):
         self.dfas = [make_search_dfa(compile_regex(".*(" + pat + ")"))
                      for pat in patterns]
         self.engines = [
@@ -75,10 +81,13 @@ class CorpusFilter:
                           partition=partition, lookahead_r=lookahead_r)
             for dfa in self.dfas]
         # zero patterns = filter nothing, keep everything (no batch matcher)
-        self.batch = (BatchMatcher(pack_dfas(self.dfas),
-                                   num_chunks=num_chunks,
-                                   batch_tile=batch_tile,
-                                   max_buckets=max_buckets)
+        self.batch = (Matcher(pack_dfas(self.dfas),
+                              num_chunks=num_chunks,
+                              batch_tile=batch_tile,
+                              max_buckets=max_buckets,
+                              backend=backend,
+                              capacities=capacities,
+                              mesh=mesh)
                       if self.dfas else None)
         self.stats = FilterStats()
 
@@ -128,6 +137,7 @@ class CorpusFilter:
         self.stats.work_sequential += int(res.work_sequential.sum())
         self.stats.time_steps += int(res.time_steps.sum())
         self.stats.batch_calls += res.bucket_calls
+        self.stats.early_exits += res.early_exits  # absorbing-state retires
         return ~hit
 
     def filter(self, docs: Iterable[bytes], *,

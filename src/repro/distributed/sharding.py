@@ -23,7 +23,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
-           "named", "opt_state_specs"]
+           "named", "opt_state_specs", "matcher_table_specs",
+           "matcher_chunk_specs", "doc_batch_spec"]
 
 STACK_KEYS = {"layers", "groups", "enc", "dec"}
 MOE_EXPERT_KEYS = {"wi_gate", "wi_up", "wo"}
@@ -167,6 +168,47 @@ def state_specs(state: Any, mesh, batch: int) -> Any:
         return P(*spec)
 
     return jax.tree.map(spec_of, state)
+
+
+def matcher_table_specs(mesh) -> dict[str, P]:
+    """PartitionSpecs for the packed matcher tables (engine/plan.DeviceTables).
+
+    Transition/candidate tables are small (VMEM-resident on TPU) and read by
+    every chunk lane, so they replicate on every device regardless of mesh
+    shape — the sharded executor moves lane *states*, never tables.
+    """
+    return {
+        "table_pad": P(None, None),        # [Q, n_cls + 1]
+        "cand_pad": P(None, None, None),   # [n_cls + 1, K, S]
+        "cidx_pad": P(None, None),         # [n_cls + 1, Q]
+        "starts": P(None),                 # [K]
+        "sinks": P(None),                  # [K]
+        "byte_to_class": P(None),          # [256]
+        "absorbing": P(None),              # [Q]
+    }
+
+
+def matcher_chunk_specs(mesh) -> tuple[tuple[P, P, P], P]:
+    """in/out specs for the mesh-sharded matcher body (engine/sharded.py).
+
+    Inputs (chunk-major): chunks [C, B, Lmax], lookahead [C, B], exact [C] —
+    all sharded over "data" on the chunk axis.  Output [B, K] finals are
+    replicated (every device folds the same gathered lane states).
+    """
+    ax = "data" if "data" in mesh.axis_names else None
+    return (P(ax, None, None), P(ax, None), P(ax)), P(None, None)
+
+
+def doc_batch_spec(mesh, batch: int) -> P:
+    """Document-batch spec [B, ...]: shard the doc axis over dp when it
+    divides, replicate otherwise (mirrors ``batch_specs`` for raw byte
+    buffers handed to the matching runtime)."""
+    dp = _dp(mesh)
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    if dp and dp_size > 1 and batch % dp_size == 0:
+        return P(dp)
+    return P()
 
 
 def named(tree_specs: Any, mesh) -> Any:

@@ -7,11 +7,40 @@ boolean, so tolerance is zero).
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spec_match_ref", "spec_match_merge_ref", "lvec_compose_ref",
+__all__ = ["spec_match_ref", "spec_merge_ref", "spec_match_merge_ref",
+           "classify_ref", "classify_pad_ref", "lvec_compose_ref",
            "onehot_block_maps_ref", "token_mask_ref"]
+
+
+def classify_ref(byte_to_class: np.ndarray, data: bytes | np.ndarray) -> np.ndarray:
+    """Host-side numpy byte -> class classification (paper ``IBase`` gather).
+
+    This was the production path before classification moved on-device (the
+    jitted per-bucket call now folds the gather in); it is kept here as the
+    reference oracle for the fused path.
+    """
+    arr = (np.frombuffer(data, dtype=np.uint8)
+           if isinstance(data, (bytes, bytearray)) else np.asarray(data))
+    return np.asarray(byte_to_class)[arr.astype(np.int64)].astype(np.int32)
+
+
+def classify_pad_ref(byte_to_class: np.ndarray, bytes_buf: np.ndarray,
+                     lengths: np.ndarray, pad_cls: int) -> np.ndarray:
+    """Batched padded classification: positions >= length become ``pad_cls``.
+
+    bytes_buf [B, W] uint8 (pad bytes arbitrary); lengths [B]; returns
+    [B, W] int32 class ids — the semantics the executors' on-device classify
+    must reproduce exactly.
+    """
+    cls = np.asarray(byte_to_class)[np.asarray(bytes_buf).astype(np.int64)]
+    pos = np.arange(cls.shape[1])[None, :]
+    return np.where(pos < np.asarray(lengths)[:, None], cls,
+                    pad_cls).astype(np.int32)
 
 
 def spec_match_ref(table: jnp.ndarray, chunks: jnp.ndarray,
@@ -61,19 +90,38 @@ def spec_match_merge_ref(table: jnp.ndarray, chunks: jnp.ndarray,
         lambda st, cls_row: (table[st, cls_row[:, None]], None),
         init_states.reshape(b * c, k * s).astype(jnp.int32),
         chunks.reshape(b * c, l).T)
-    lvecs = lvecs.reshape(b, c, k, s)
+    return spec_merge_ref(lvecs.reshape(b, c, k, s), lookahead, cand_index,
+                          sinks, pad_cls=pad_cls)
+
+
+def spec_merge_ref(lvecs: jnp.ndarray, lookahead: jnp.ndarray,
+                   cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                   pad_cls: int, exact: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. 8 merge of batched per-chunk lane states (the second half of
+    ``spec_match_merge_ref``, factored so every executor — the early-exit
+    segmented scan, the mesh-sharded backend — shares one merge definition).
+
+    lvecs [B, C, K, S]; lookahead [B, C]; returns [B, K] final packed states.
+    ``exact`` [C] optionally marks chunks matched exactly from the start
+    states (all their lanes agree; lane 0 carries the result).  Chunk 0 is
+    always exact; flags for later chunks arise only from degenerate
+    zero-length leading chunks in weighted layouts.
+    """
+    if exact is None:
+        exact = jnp.zeros((lvecs.shape[1],), bool)
 
     def merge_doc(lv, la):  # lv [C, K, S], la [C]
         def step(st, xs):   # st [K]
-            lv_i, la_i = xs
+            lv_i, la_i, ex_i = xs
             lane = cand_index[la_i, st]                              # [K]
             hit = jnp.take_along_axis(
                 lv_i, jnp.maximum(lane, 0)[:, None], axis=1)[:, 0]
             nxt = jnp.where(lane < 0, jnp.where(sinks >= 0, sinks, st), hit)
             nxt = jnp.where(la_i == pad_cls, st, nxt)
+            nxt = jnp.where(ex_i, lv_i[:, 0], nxt)
             return nxt.astype(jnp.int32), None
 
-        out, _ = jax.lax.scan(step, lv[0, :, 0], (lv[1:], la[1:]))
+        out, _ = jax.lax.scan(step, lv[0, :, 0], (lv[1:], la[1:], exact[1:]))
         return out
 
     return jax.vmap(merge_doc)(lvecs, lookahead.astype(jnp.int32))

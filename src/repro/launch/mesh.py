@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "dp_axes", "mesh_info"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_matcher_mesh",
+           "dp_axes", "mesh_info"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -30,6 +31,17 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
         raise ValueError(f"mesh {data}x{model} needs {data * model} devices, have {n}")
     return jax.make_mesh((data, model), ("data", "model"),
                          devices=jax.devices()[: data * model])
+
+
+def make_matcher_mesh(devices: int | None = None) -> jax.sharding.Mesh:
+    """Data-only mesh for the sharded matching executor (engine/sharded.py).
+
+    The matcher shards its chunk axis over "data" and keeps no model
+    parallelism, so the mesh is (D, 1) over all (or the first ``devices``)
+    local devices.
+    """
+    d = len(jax.devices()) if devices is None else int(devices)
+    return make_local_mesh(data=d, model=1)
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

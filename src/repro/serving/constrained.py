@@ -15,10 +15,9 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
-from ..core import DFA
+from ..core import DFA, Matcher
 from ..kernels import ops as kops
 
 __all__ = ["GrammarConstraint"]
@@ -51,24 +50,18 @@ class GrammarConstraint:
             dead = allowed.sum(axis=1) == 0
             allowed[dead, eos_id] = 1
         self.allowed = jnp.asarray(allowed)
-        # token -> class map for state advance (specials are identity moves)
-        tok_cls = np.zeros((vocab_size,), np.int32)
-        tok_cls[: min(vocab_size, 256)] = byte_cls[: min(vocab_size, 256)]
-        self.tok_is_byte = jnp.asarray(
-            (np.arange(vocab_size) < 256).astype(np.int32))
+        # the matching runtime facade: its padded transition table has an
+        # identity column at matcher.pad_cls, so state advance runs through
+        # the same engine layers as corpus scanning
+        self.matcher = Matcher(dfa, num_chunks=1, batch_tile=1)
+        packed_cls = self.matcher.packed.byte_to_class  # facade class ids
+        # token -> class map for state advance; special (non-byte) tokens map
+        # to the identity pad class, so they advance no DFA with no masking
+        tok_cls = np.full((vocab_size,), self.matcher.pad_cls, np.int32)
+        nb = min(vocab_size, 256)
+        tok_cls[:nb] = packed_cls[:nb]
         self.tok_cls = jnp.asarray(tok_cls)
-        self.table_j = jnp.asarray(dfa.table)
-
-        def _advance_tokens(states: jnp.ndarray, tokens: jnp.ndarray):
-            def step(s, col):  # s [B], col [B]
-                nxt = self.table_j[s, self.tok_cls[col]]
-                keep = self.tok_is_byte[col] == 0  # specials don't move the DFA
-                return jnp.where(keep, s, nxt).astype(jnp.int32), None
-
-            out, _ = jax.lax.scan(step, states.astype(jnp.int32), tokens.T)
-            return out
-
-        self._advance_tokens_jit = jax.jit(_advance_tokens)
+        self.table_j = self.matcher.dev.table_pad_j
 
     def init_states(self, batch: int) -> jnp.ndarray:
         return jnp.full((batch,), self.dfa.start, jnp.int32)
@@ -85,26 +78,27 @@ class GrammarConstraint:
         return jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
 
     def advance(self, states: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
-        """Advance each sequence's DFA state by its chosen token [B]."""
-        cls = self.tok_cls[tokens]
-        nxt = self.table_j[states, cls]
-        keep = self.tok_is_byte[tokens] == 0  # specials do not move the DFA
-        return jnp.where(keep, states, nxt).astype(jnp.int32)
+        """Advance each sequence's DFA state by its chosen token [B].
+
+        Special tokens map to the pad class, whose padded-table column is the
+        identity — no branch needed.
+        """
+        return self.table_j[states, self.tok_cls[tokens]].astype(jnp.int32)
 
     def advance_tokens(self, states: jnp.ndarray,
                        tokens: np.ndarray | jnp.ndarray) -> jnp.ndarray:
         """Advance [B] states through [B, T] tokens in one vectorized scan.
 
-        Column-wise replay of ``advance`` (specials are identity moves) —
-        the batched prompt-prefill path: one device call for the whole batch
-        instead of a per-request host loop over prompt bytes.
+        Column-wise replay of ``advance`` (specials are identity moves via
+        the pad class) delegated to the matching runtime's
+        ``Matcher.advance_classes`` — the batched prompt-prefill path: one
+        device call for the whole batch instead of a per-request host loop
+        over prompt bytes.
         """
         tokens = jnp.asarray(tokens, jnp.int32)
         if tokens.ndim != 2:
             raise ValueError("advance_tokens expects [B, T] tokens")
-        if tokens.shape[1] == 0:
-            return states.astype(jnp.int32)
-        return self._advance_tokens_jit(states, tokens)
+        return self.matcher.advance_classes(states, self.tok_cls[tokens])
 
     def verify_draft(self, state: int, draft_bytes: np.ndarray) -> tuple[int, np.ndarray]:
         """Speculative-decoding accept test for one sequence's K draft bytes.

@@ -1,0 +1,20 @@
+"""Shared test configuration: default to 8 simulated host devices.
+
+The mesh-sharded executor tests (tests/test_sharded_executor.py) need more
+than one device, and jax locks the device count at first init — so the flag
+must be in the environment before any test module imports jax.  conftest.py
+imports before collection, which is early enough; setting it here means
+plain ``pytest -x -q`` covers the sharded executor with no extra env setup.
+
+An already-present ``xla_force_host_platform_device_count`` in XLA_FLAGS
+wins (so CI can pin a different count), and subprocess-based tests that
+replace XLA_FLAGS outright (dryrun's 512-device sweep, the distributed
+suite) are unaffected.
+"""
+
+import os
+
+_FLAG = "xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = f"--{_FLAG}=8 {_flags}".strip()

@@ -1,0 +1,243 @@
+"""Mesh-sharded executor: bit-identity, capacity weighting, runtime layers.
+
+Runs in-process on the 8 simulated host devices that tests/conftest.py
+forces (no subprocess needed).  Covers the tentpole guarantees:
+
+  * ``backend="sharded"`` results are bit-identical to sequential matching
+    for ragged multi-pattern corpora on 1 and 8 devices, uniform and with
+    capacity-weighted partitions drawn from ``profile_workers``;
+  * all three executor backends agree with each other;
+  * the on-device byte->class classification matches the retired numpy
+    reference (``kernels.ref.classify_pad_ref``);
+  * the absorbing-state early exit retires documents (and stays exact);
+  * the facade keeps the sticky-bucket retrace bound;
+  * ``GrammarConstraint`` prompt prefill rides the facade unchanged.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Matcher, SpecDFAEngine, compile_regex, make_search_dfa,
+                        pack_dfas, profile_workers, random_dfa,
+                        synthetic_capacities)
+from repro.core.engine import DeviceTables, LocalExecutor
+from repro.kernels import ref as kref
+from repro.launch.mesh import make_matcher_mesh
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = b"abxy0189"
+RAGGED = [0, 1, 3, 10, 31, 32, 33, 100, 255, 256, 513, 900, 1024]
+
+
+def _docs(rng, sizes):
+    return [bytes(rng.choice(list(ALPHABET), size=int(n)).astype(np.uint8))
+            for n in sizes]
+
+
+def _assert_matches_sequential(matcher, docs, engines):
+    res = matcher.membership_batch(docs)
+    for i, d in enumerate(docs):
+        for k, eng in enumerate(engines):
+            want = eng.membership_sequential(d)
+            off = int(matcher.packed.offsets[k])
+            assert int(res.final_states[i, k]) - off == want.final_state, (i, k)
+            assert bool(res.accepted[i, k]) == want.accepted
+    return res
+
+
+def _mesh_or_skip(d):
+    if len(jax.devices()) < d:
+        pytest.skip(f"needs {d} host devices (conftest forces 8)")
+    return make_matcher_mesh(d)
+
+
+# --------------------------------------------------------------------------
+# bit-identity on 1 and 8 devices, uniform and capacity-weighted
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices", [1, 8])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_sharded_equals_sequential_ragged(devices, weighted):
+    mesh = _mesh_or_skip(devices)
+    rng = np.random.default_rng(20 + devices)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    caps = synthetic_capacities(devices) if weighted else None
+    # capacities flow through profile_workers (Eq. 1) inside the facade
+    m = Matcher(dfas, num_chunks=8, backend="sharded", mesh=mesh,
+                capacities=caps)
+    engines = [SpecDFAEngine(d, num_chunks=8) for d in dfas]
+    docs = _docs(rng, RAGGED)
+    res = _assert_matches_sequential(m, docs, engines)
+    assert res.device_work is not None and res.device_work.shape == (devices,)
+    # every speculative document's real symbols are assigned to some device
+    spec = np.asarray(res.work_sequential) // len(PATTERNS) >= 4 * m.num_chunks
+    assert int(res.device_work.sum()) == int(
+        (np.asarray(res.work_sequential)[spec] // len(PATTERNS)).sum())
+
+
+def test_sharded_weighted_partition_from_profile_workers():
+    """The planner's weights must equal profile_workers of the capacities,
+    and the resulting chunk sizes must track them."""
+    mesh = _mesh_or_skip(8)
+    caps = synthetic_capacities(8)
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[0]))], num_chunks=16,
+                backend="sharded", mesh=mesh, capacities=caps)
+    np.testing.assert_allclose(m.planner.weights, profile_workers(caps))
+    layout = m.planner.layout_for(64)
+    per_dev = np.zeros(8)
+    np.add.at(per_dev, layout.device_of, layout.sizes)
+    ratio = (per_dev[0] / per_dev[-1])
+    assert ratio == pytest.approx(1.41, rel=0.1)
+
+
+def test_sharded_random_dfa_property():
+    mesh = _mesh_or_skip(8)
+    rng = np.random.default_rng(22)
+    for trial in range(3):
+        packed = pack_dfas([random_dfa(int(rng.integers(3, 20)),
+                                       int(rng.integers(2, 8)), rng=rng)
+                            for _ in range(int(rng.integers(1, 4)))])
+        m = Matcher(packed, num_chunks=8, backend="sharded", mesh=mesh,
+                    capacities=rng.uniform(0.5, 2.0, size=8))
+        docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8)
+                for n in rng.integers(0, 500, size=10)]
+        res = m.membership_batch(docs)
+        for i, d in enumerate(docs):
+            want = packed.run_all(d)
+            np.testing.assert_array_equal(res.final_states[i], want, err_msg=str((trial, i)))
+
+
+def test_all_backends_agree():
+    rng = np.random.default_rng(23)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS[:2]]
+    docs = _docs(rng, rng.integers(0, 600, size=16))
+    mesh = _mesh_or_skip(min(8, len(jax.devices())))
+    results = []
+    for kwargs in ({"backend": "local"}, {"backend": "pallas"},
+                   {"backend": "sharded", "mesh": mesh},
+                   {"backend": "sharded", "mesh": mesh,
+                    "capacities": synthetic_capacities(int(mesh.shape["data"]))}):
+        m = Matcher(dfas, num_chunks=8, batch_tile=8, **kwargs)
+        results.append(m.membership_batch(docs))
+    for r in results[1:]:
+        np.testing.assert_array_equal(r.final_states, results[0].final_states)
+        np.testing.assert_array_equal(r.accepted, results[0].accepted)
+
+
+def test_sharded_retrace_bound_sticky_buckets():
+    mesh = _mesh_or_skip(8)
+    rng = np.random.default_rng(24)
+    m = Matcher([make_search_dfa(compile_regex(p)) for p in PATTERNS],
+                num_chunks=8, backend="sharded", mesh=mesh, max_buckets=2)
+    corpus = _docs(rng, rng.integers(40, 3000, size=60))
+    m.membership_batch(corpus[:30])
+    m.membership_batch(corpus[30:])
+    assert len(m._spec_keys) <= 2
+    assert m.trace_count <= 2
+
+
+# --------------------------------------------------------------------------
+# on-device classification vs the retired numpy reference
+# --------------------------------------------------------------------------
+
+def test_on_device_classify_matches_numpy_ref():
+    rng = np.random.default_rng(25)
+    packed = pack_dfas([make_search_dfa(compile_regex(p)) for p in PATTERNS])
+    tables = DeviceTables.build(packed)
+    ex = LocalExecutor(tables, num_chunks=4)
+    for trial in range(5):
+        b, w = int(rng.integers(1, 6)), int(rng.integers(1, 200))
+        buf = rng.integers(0, 256, size=(b, w), dtype=np.uint8)
+        lens = rng.integers(0, w + 1, size=b).astype(np.int32)
+        got = np.asarray(ex._classify(jnp.asarray(buf), jnp.asarray(lens)))
+        want = kref.classify_pad_ref(packed.byte_to_class, buf, lens,
+                                     tables.pad_cls)
+        np.testing.assert_array_equal(got, want)
+        # per-doc: the in-range prefix equals the plain host classify
+        for r in range(b):
+            np.testing.assert_array_equal(
+                got[r, :lens[r]],
+                kref.classify_ref(packed.byte_to_class, buf[r, :lens[r]]))
+
+
+# --------------------------------------------------------------------------
+# absorbing-state early exit
+# --------------------------------------------------------------------------
+
+def test_early_exit_retires_absorbed_docs_and_stays_exact():
+    """Docs whose every lane absorbs early are counted and still exact.
+
+    A speculative chunk's lanes all absorb only when the chunk *itself*
+    drives every candidate into the absorbing accept — i.e. the pattern
+    occurs inside every chunk — so the retiring corpus repeats the pattern
+    densely; the clean doc never retires.
+    """
+    dfa = make_search_dfa(compile_regex(".*(hit)"))
+    eng = SpecDFAEngine(dfa, num_chunks=4)
+    docs = [b"hit " * 250, b"x" * 1000, b"hit " * 64]
+    m = Matcher(dfa, num_chunks=4, early_exit_segments=8)
+    res = m.membership_batch(docs)
+    for i, d in enumerate(docs):
+        want = eng.membership_sequential(d)
+        assert int(res.final_states[i, 0]) == want.final_state
+    assert res.early_exits == 2  # the two dense-hit docs retire early
+    # disabling the early exit changes stats only, never decisions
+    m1 = Matcher(dfa, num_chunks=4, early_exit_segments=1)
+    res1 = m1.membership_batch(docs)
+    np.testing.assert_array_equal(res1.final_states, res.final_states)
+    assert res1.early_exits == 0
+
+
+def test_early_exit_seq_path():
+    """Short docs (batched sequential scan) also retire when absorbed."""
+    dfa = make_search_dfa(compile_regex(".*(z)"))
+    m = Matcher(dfa, num_chunks=8, early_exit_segments=8)
+    docs = [b"z" + b"a" * 30, b"a" * 31]  # n < 4C -> seq path
+    res = m.membership_batch(docs)
+    assert bool(res.accepted[0, 0]) and not bool(res.accepted[1, 0])
+    assert res.early_exits == 1
+
+
+def test_early_exit_never_fires_without_absorption():
+    from repro.core import DFA
+    rng = np.random.default_rng(26)
+    q, ncls = 6, 3
+    # cyclic DFA: delta(s, c) = s + 1 + c (mod Q) — no self-loops anywhere,
+    # so no state is absorbing and no document can ever retire early
+    table = (np.arange(q)[:, None] + 1 + np.arange(ncls)[None, :]) % q
+    dfa = DFA(table=table.astype(np.int32),
+              accepting=np.array([True] + [False] * (q - 1)), start=0, sink=-1,
+              byte_to_class=(np.arange(256) % ncls).astype(np.int32))
+    tables = DeviceTables.build(pack_dfas([dfa]))
+    assert not bool(np.asarray(tables.absorbing_j).any())
+    m = Matcher(dfa, num_chunks=4, early_exit_segments=8)
+    docs = [rng.integers(0, 256, size=256, dtype=np.uint8) for _ in range(4)]
+    res = m.membership_batch(docs)
+    assert res.early_exits == 0
+    for i, d in enumerate(docs):
+        assert int(res.final_states[i, 0]) == dfa.run(d)
+
+
+# --------------------------------------------------------------------------
+# consumers on the new layers
+# --------------------------------------------------------------------------
+
+def test_corpus_filter_sharded_backend():
+    from repro.data.filter import CorpusFilter
+    mesh = _mesh_or_skip(8)
+    rng = np.random.default_rng(27)
+    patterns = [r"SECRET-[0-9]+", r"key=[a-z]{4}"]
+    base = CorpusFilter(patterns, num_chunks=8)
+    # default mesh = all 8 forced host devices (make_matcher_mesh)
+    shard = CorpusFilter(patterns, num_chunks=8, backend="sharded",
+                         capacities=synthetic_capacities(int(mesh.shape["data"])))
+    docs = []
+    for n in rng.integers(5, 500, size=20):
+        d = bytearray(rng.choice(list(b"abc 01xyz"), size=int(n)).astype(np.uint8))
+        if rng.random() < 0.5:
+            d[2:2] = b"SECRET-7"
+        docs.append(bytes(d))
+    np.testing.assert_array_equal(shard.scan_batch(docs), base.scan_batch(docs))
