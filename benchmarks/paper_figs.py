@@ -361,3 +361,84 @@ def bench_batch_throughput(n_docs: int = 64, doc_len: int = 512) -> None:
     # pattern amortization: packed K=8 sweep vs running the K=1 sweep 8 times
     emit("batch_throughput/pattern_amortization/K8", us_bn_by_k[8],
          8.0 * us_bn_by_k[1] / max(us_bn_by_k[8], 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Streaming runtime: resumable cursors + micro-batched scheduler (PR 3)
+# --------------------------------------------------------------------------
+
+def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
+                            stream_counts: tuple[int, ...] = (64, 256)) -> None:
+    """Throughput of the streaming runtime vs the one-shot batch pipeline.
+
+    N concurrent streams each deliver a ``doc_len``-byte document in
+    ``seg_len`` segments, round-robin (the chunked-upload arrival order).
+    Baseline: ``Matcher.membership_batch`` (num_chunks=8, the
+    batch_throughput configuration) over the same documents, whole.
+
+    The streaming matcher is the ``StreamMatcher`` default — ``num_chunks=1``
+    (batched sequential scan): with hundreds of concurrent streams the row
+    axis is the parallelism, and per-segment chunk speculation would add
+    C x S redundant lanes per stream.  Two tick policies bound the
+    latency/throughput tradeoff:
+
+      * ``eager``     — every arrival round dispatches (minimum latency);
+      * ``coalesce4`` — a stream's segments may wait 4 rounds and merge into
+        one scan (the scheduler's micro-batching lever).
+
+    Derived columns per (streams, policy): segments/sec, bytes/sec, the
+    bytes/sec ratio to the one-shot baseline (acceptance: >= 0.5x at 256
+    streams), and per-tick batch occupancy (real segments per padded device
+    row; >= 0.5 target).
+    """
+    from repro.core import Matcher, compile_regex, make_search_dfa
+    from repro.core.patterns import PCRE_PATTERNS
+    from repro.streaming import StreamMatcher, TickPolicy
+
+    rng = np.random.default_rng(13)
+    pats = list(PCRE_PATTERNS.values())[:4]
+    dfas = [make_search_dfa(compile_regex(".*(" + p + ")")) for p in pats]
+
+    for n_streams in stream_counts:
+        docs = [rng.integers(0, 256, size=doc_len, dtype=np.uint8).tobytes()
+                for _ in range(n_streams)]
+        total_bytes = n_streams * doc_len
+        n_rounds = doc_len // seg_len
+
+        m = Matcher(dfas, num_chunks=8, batch_tile=64)
+        m.membership_batch(docs)  # compile + warm buckets
+        us_batch = time_us(lambda: m.membership_batch(docs), repeats=2)
+        bs_batch = total_bytes / (us_batch / 1e6)
+        want = m.membership_batch(docs)
+
+        seg_matcher = Matcher(dfas, num_chunks=1, batch_tile=64)
+        for policy_name, rounds_per_tick in (("eager", 1), ("coalesce4", 4)):
+            sm = StreamMatcher(
+                seg_matcher,
+                policy=TickPolicy(max_batch=(n_streams if rounds_per_tick == 1
+                                             else n_streams + 1),
+                                  max_delay=rounds_per_tick * n_streams))
+
+            def run_streams():
+                sessions = [sm.open() for _ in range(n_streams)]
+                for r in range(n_rounds):
+                    lo = r * seg_len
+                    for s, d in zip(sessions, docs):
+                        s.feed(d[lo:lo + seg_len])
+                return [s.close() for s in sessions]
+
+            # correctness guard: streamed decisions == one-shot decisions
+            got = run_streams()
+            assert all(
+                np.array_equal(got[i].final_states, want.final_states[i])
+                for i in range(n_streams))
+
+            us_stream = time_us(run_streams, repeats=2)
+            segs = n_streams * n_rounds
+            bs_stream = total_bytes / (us_stream / 1e6)
+            tag = f"stream_throughput/S{n_streams}/{policy_name}"
+            emit(f"{tag}/segments_per_s", us_stream / segs,
+                 segs / (us_stream / 1e6))
+            emit(f"{tag}/bytes_per_s", 0.0, bs_stream)
+            emit(f"{tag}/occupancy", 0.0, sm.stats.occupancy)
+            emit(f"{tag}/vs_batch", 0.0, bs_stream / max(bs_batch, 1e-9))

@@ -36,6 +36,7 @@ def main() -> None:
         ("merge_strategies", pf.bench_merge_strategies),     # Sec 5.2
         ("batch_throughput", pf.bench_batch_throughput),     # batched pipeline
         ("capacity_balance", pf.bench_capacity_balance),     # sharded runtime
+        ("stream_throughput", pf.bench_stream_throughput),   # streaming runtime
     ]
     if args.only:
         names = set(args.only.split(","))

@@ -3,8 +3,9 @@
 from .automata import DFA, NFA, PackedDFA, make_search_dfa, pack_dfas, random_dfa
 from .determinize import compile_prosite, compile_regex, minimize, nfa_to_dfa
 from .engine import (BatchMatcher, BatchResult, ChunkLayout, DeviceTables,
-                     Matcher, MatchPlan, MatchResult, Planner, ShardedExecutor,
-                     SpecDFAEngine, match_chunks_lanes, sequential_state)
+                     Matcher, MatchPlan, MatchResult, Planner,
+                     SegmentBatchResult, ShardedExecutor, SpecDFAEngine,
+                     match_chunks_lanes, sequential_state)
 from .lookahead import (LookaheadTables, PackedLookaheadTables,
                         build_lookahead_tables, build_packed_lookahead_tables,
                         i_max_r, i_sigma_sets)
@@ -18,7 +19,8 @@ from .regex import parse_regex, prosite_to_regex, regex_to_nfa
 __all__ = [
     "DFA", "NFA", "PackedDFA", "make_search_dfa", "pack_dfas", "random_dfa",
     "compile_regex", "compile_prosite", "minimize", "nfa_to_dfa",
-    "MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher", "Matcher",
+    "MatchResult", "BatchResult", "SegmentBatchResult", "SpecDFAEngine",
+    "BatchMatcher", "Matcher",
     "MatchPlan", "Planner", "ChunkLayout", "DeviceTables", "ShardedExecutor",
     "match_chunks_lanes", "sequential_state",
     "LookaheadTables", "PackedLookaheadTables", "build_lookahead_tables",

@@ -20,18 +20,22 @@ Module map — how a membership query flows through the layers:
                   states before the Eq. 8 merge.
     facade.py     ``Matcher``: packs patterns, owns a Planner + an executor
                   backend ("local" | "pallas" | "sharded"), exposes
-                  ``membership_batch``; ``BatchMatcher`` compat shim.
+                  ``membership_batch`` (whole documents) and
+                  ``advance_segments`` (the streaming runtime's resumable
+                  segment tick — see ``repro.streaming``); ``BatchMatcher``
+                  compat shim.
 
-Adding an executor backend: implement the three-method protocol in
-``executors.Executor`` (``run_spec``, ``run_seq``, ``steps_for``) over the
-shared ``DeviceTables`` bundle — inputs are raw byte buffers + lengths and a
-``ChunkLayout``; results must stay bit-identical to sequential matching —
-then route it from ``Matcher.__init__``.  See ROADMAP.md §Plan/executor
-layering.
+Adding an executor backend: implement the executor protocol in
+``executors.Executor`` (``run_spec``/``run_seq`` for whole documents, the
+``run_spec_entry``/``run_seq_entry`` segment-entry variants for streaming,
+and ``steps_for``) over the shared ``DeviceTables`` bundle — inputs are raw
+byte buffers + lengths and a ``ChunkLayout``; results must stay bit-identical
+to sequential matching — then route it from ``Matcher.__init__``.  See
+ROADMAP.md §Plan/executor layering and §Streaming runtime.
 """
 
 from .executors import Executor, LocalExecutor
-from .facade import BatchMatcher, BatchResult, Matcher
+from .facade import BatchMatcher, BatchResult, Matcher, SegmentBatchResult
 from .plan import (BucketPlan, ChunkLayout, DeviceTables, MatchPlan, Planner,
                    expand_device_weights, layout_device_work, next_pow2)
 from .sharded import ShardedExecutor
@@ -39,7 +43,8 @@ from .spec import (VPU_LANES, MatcherFn, MatchResult, SpecDFAEngine,
                    match_chunks_lanes, sequential_state)
 
 __all__ = [
-    "MatchResult", "BatchResult", "SpecDFAEngine", "BatchMatcher", "Matcher",
+    "MatchResult", "BatchResult", "SegmentBatchResult", "SpecDFAEngine",
+    "BatchMatcher", "Matcher",
     "sequential_state", "match_chunks_lanes", "VPU_LANES", "MatcherFn",
     "Planner", "MatchPlan", "BucketPlan", "ChunkLayout", "DeviceTables",
     "expand_device_weights", "layout_device_work", "next_pow2",

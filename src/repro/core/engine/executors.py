@@ -32,6 +32,15 @@ both return ``(finals [B, K], absorbed_pos [B])`` where ``absorbed_pos`` is
 the scan position (chunk-local for spec, stream for seq) at which the
 document's lanes all became absorbing, or a sentinel >= the scan length.
 ``traces`` counts jit retraces (side effect fires at trace time only).
+
+**Segment entry (the streaming runtime)**: ``run_seq_entry`` /
+``run_spec_entry`` additionally take per-document entry states ``[B, K]`` and
+start matching there instead of at the pattern starts — chunk 0 of the
+speculative path becomes "exact from the entry states".  This is what makes
+matching *resumable*: a ``streaming.MatchCursor`` carries the states across
+segment boundaries and the composition is bit-identical to matching the
+concatenated stream in one shot (Eq. 8 is associative; cf. simultaneous-FA
+transition composition, arXiv:1405.0562).
 """
 
 from __future__ import annotations
@@ -59,6 +68,13 @@ class Executor(Protocol):
     def run_seq(self, bytes_buf: jnp.ndarray,
                 lengths: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
 
+    def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                       layout: ChunkLayout, entry: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+
+    def run_seq_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                      entry: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+
     def steps_for(self, layout: ChunkLayout) -> int: ...
 
 
@@ -78,6 +94,7 @@ class _ExecutorBase:
         self.traces = 0
         donate = (0,) if jax.default_backend() != "cpu" else ()
         self._seq_fn = jax.jit(self._seq_impl, donate_argnums=donate)
+        self._seq_entry_fn = jax.jit(self._seq_entry_impl, donate_argnums=donate)
 
     # -- fused classification (the retired host numpy path lives in
     # kernels/ref.classify_pad_ref as the oracle) ---------------------------
@@ -144,22 +161,37 @@ class _ExecutorBase:
 
     # -- batched sequential path (short documents) --------------------------
 
-    def _seq_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        """Batched Algorithm 1: classify + one scan, [B, K] finals.  Rows are
-        independent, so this body is also the per-shard program of the
+    def _seq_entry_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                        entry: jnp.ndarray):
+        """Batched Algorithm 1 from per-document entry states [B, K].  Rows
+        are independent, so this body is also the per-shard program of the
         sharded backend's document-axis split."""
-        b, w = bytes_buf.shape
+        w = bytes_buf.shape[1]
         cls = self._classify(bytes_buf, lengths)
+        return self._segmented_match(cls.T, entry.astype(jnp.int32),
+                                     jnp.minimum(lengths, w), w)
+
+    def _seq_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
+        b = bytes_buf.shape[0]
         s0 = jnp.broadcast_to(
-            self.t.starts_j[None, :], (b, self.t.n_patterns)).astype(jnp.int32)
-        return self._segmented_match(cls.T, s0, jnp.minimum(lengths, w), w)
+            self.t.starts_j[None, :], (b, self.t.n_patterns))
+        return self._seq_entry_body(bytes_buf, lengths, s0)
 
     def _seq_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
         self.traces += 1
         return self._seq_body(bytes_buf, lengths)
 
+    def _seq_entry_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                        entry: jnp.ndarray):
+        self.traces += 1
+        return self._seq_entry_body(bytes_buf, lengths, entry)
+
     def run_seq(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
         return self._seq_fn(bytes_buf, lengths)
+
+    def run_seq_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                      entry: jnp.ndarray):
+        return self._seq_entry_fn(bytes_buf, lengths, entry)
 
 
 class LocalExecutor(_ExecutorBase):
@@ -178,16 +210,37 @@ class LocalExecutor(_ExecutorBase):
         self.use_kernel = bool(use_kernel)
         donate = (0,) if jax.default_backend() != "cpu" else ()
         self._spec_fn = jax.jit(self._spec_impl, donate_argnums=donate)
+        self._spec_entry_fn = jax.jit(self._spec_entry_impl,
+                                      donate_argnums=donate)
 
     def steps_for(self, layout: ChunkLayout) -> int:
         return layout.lmax  # uniform layout: lmax == chunk_len
 
     def _spec_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        """Fused classify/chunk/candidate-gather/match/merge, one bucket."""
+        self.traces += 1  # side effect fires at trace time only
+        b = bytes_buf.shape[0]
+        entry = jnp.broadcast_to(self.t.starts_j[None, :],
+                                 (b, self.t.n_patterns))
+        return self._spec_body(bytes_buf, lengths, entry)
+
+    def _spec_entry_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                         entry: jnp.ndarray):
+        self.traces += 1
+        return self._spec_body(bytes_buf, lengths, entry)
+
+    def _spec_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                   entry: jnp.ndarray):
+        """Fused classify/chunk/candidate-gather/match/merge, one bucket.
+
+        ``entry [B, K]`` seeds chunk 0 exactly (all its lanes carry the entry
+        state — the pattern starts for whole documents, a stream cursor's
+        states for resumed segments); later chunks stay speculative from the
+        Eq. 11 candidate rows.  The fused Pallas path needs no kernel change:
+        the injection happens where the init lanes are built.
+        """
         from ...kernels import ops as kops
         from ...kernels import ref as kref
 
-        self.traces += 1  # side effect fires at trace time only
         t = self.t
         b, w = bytes_buf.shape
         c = self.num_chunks
@@ -198,7 +251,8 @@ class LocalExecutor(_ExecutorBase):
         la = jnp.concatenate(
             [jnp.zeros((b, 1), jnp.int32), body[:, :-1, -1]], axis=1)
         cand = t.cand_pad_j[la[:, 1:]]                         # [B, C-1, K, S]
-        start = jnp.broadcast_to(t.starts_j[None, None, :, None], (b, 1, k, s))
+        start = jnp.broadcast_to(
+            entry.astype(jnp.int32)[:, None, :, None], (b, 1, k, s))
         init = jnp.concatenate([start, cand], axis=1).reshape(b, c, k * s)
         if self.use_kernel:
             finals = kops.spec_match_merge(t.table_pad_j, body, init, la,
@@ -216,3 +270,7 @@ class LocalExecutor(_ExecutorBase):
     def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
                  layout: ChunkLayout):
         return self._spec_fn(bytes_buf, lengths)
+
+    def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                       layout: ChunkLayout, entry: jnp.ndarray):
+        return self._spec_entry_fn(bytes_buf, lengths, entry)

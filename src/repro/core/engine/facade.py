@@ -29,7 +29,7 @@ from ..partition import capacity_weights
 from .executors import LocalExecutor
 from .plan import DeviceTables, Planner, layout_device_work, next_pow2
 
-__all__ = ["BatchResult", "Matcher", "BatchMatcher"]
+__all__ = ["BatchResult", "SegmentBatchResult", "Matcher", "BatchMatcher"]
 
 BACKENDS = ("local", "pallas", "sharded")
 
@@ -63,6 +63,26 @@ class BatchResult:
         return float(self.work_sequential.sum()) / max(float(self.time_steps.sum()), 1.0)
 
 
+@dataclasses.dataclass
+class SegmentBatchResult:
+    """Outcome of ``Matcher.advance_segments`` (the streaming tick call).
+
+    ``final_states[i]`` is the exact [K] packed states after advancing
+    segment ``i`` from its entry states — i.e. the next cursor states.
+    ``absorbed`` marks patterns that landed in absorbing states (further
+    bytes cannot move them; the scheduler's stream-level early exit).
+    ``padded_rows`` counts the device rows actually dispatched (tile-padded)
+    — the denominator of the scheduler's batch-occupancy metric.
+    """
+
+    final_states: np.ndarray  # [B, K] int32 packed states after the segment
+    absorbed: np.ndarray      # [B, K] bool
+    lengths: np.ndarray       # [B] int64 segment byte lengths
+    bucket_calls: int         # fused device dispatches consumed
+    padded_rows: int          # batch_tile rows dispatched across all tiles
+    early_exits: int          # segments retired by the absorbing early exit
+
+
 class Matcher:
     """Batched, multi-pattern membership over padded shape buckets.
 
@@ -89,6 +109,12 @@ class Matcher:
     spec_m       : weighted-layout work model: 1 = lane-parallel chunk sizes
                    proportional to capacity (default); ``i_max`` reproduces
                    the paper's scalar-worker Eqs. 2–7.
+    calibrate    : sharded backend only — when True and no ``capacities``
+                   were passed, measure per-device symbols/sec at
+                   construction (``core.profiling.profile_capacity`` with
+                   ``devices=``, the paper's Sec. 4.1 step 1 run at cluster
+                   start) and feed the measurements into the
+                   capacity-weighted chunk layout automatically.
     early_exit_segments : absorbing-state early-exit granularity per scan
                    (1 disables; pow2, local/seq paths only).
     """
@@ -96,7 +122,8 @@ class Matcher:
     def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
                  batch_tile: int = 64, backend: str = "local", mesh=None,
                  capacities: Optional[Sequence[float]] = None,
-                 spec_m: int = 1, early_exit_segments: int = 4):
+                 spec_m: int = 1, calibrate: bool = False,
+                 early_exit_segments: int = 4):
         if isinstance(source, PackedDFA):
             packed = source
         elif isinstance(source, DFA):
@@ -123,6 +150,13 @@ class Matcher:
                 from ...launch.mesh import make_matcher_mesh
                 mesh = make_matcher_mesh()
             devices = int(mesh.shape["data"])
+            if calibrate and capacities is None:
+                from ..profiling import profile_capacity
+                data_devs = list(mesh.devices.reshape(devices, -1)[:, 0])
+                capacities = profile_capacity(devices=data_devs,
+                                              n_symbols=20_000, repeats=3)
+            self.capacities = (None if capacities is None
+                               else np.asarray(capacities, np.float64))
             weights = (None if capacities is None
                        else capacity_weights(np.asarray(capacities, np.float64)))
             self.planner = Planner(num_chunks=num_chunks,
@@ -139,6 +173,10 @@ class Matcher:
                 raise ValueError("mesh only applies to the sharded backend")
             if spec_m != 1:
                 raise ValueError("spec_m only applies to the sharded backend")
+            if calibrate:
+                raise ValueError("calibrate only applies to the sharded "
+                                 "backend (single-device layouts are uniform)")
+            self.capacities = None
             self.planner = Planner(num_chunks=num_chunks,
                                    max_buckets=max_buckets, devices=1)
             self.executor = LocalExecutor(
@@ -240,6 +278,72 @@ class Matcher:
         """[B, K] accept matrix (convenience wrapper)."""
         return self.membership_batch(docs).accepted
 
+    # -- streaming hook ------------------------------------------------------
+
+    def advance_segments(self, segments: Sequence[bytes | np.ndarray],
+                         entry_states: np.ndarray) -> SegmentBatchResult:
+        """Advance B independent streams by one segment each, batched.
+
+        ``segments[i]`` is the next byte segment of stream ``i`` and
+        ``entry_states[i]`` its current [K] exact packed states (a
+        ``streaming.MatchCursor``'s states; the pattern starts for a fresh
+        stream).  Segments share the planner's sticky shape buckets with
+        whole-document matching, and each bucket tile is one fused device
+        call through the executor's segment-entry path — so segments from
+        many unrelated streams coalesce exactly like documents of a batch.
+        Results are bit-identical to matching each stream's concatenated
+        bytes in one shot (Eq. 8 composition is associative).
+        """
+        b = len(segments)
+        k = self.packed.n_patterns
+        entry = np.ascontiguousarray(np.asarray(entry_states, np.int32))
+        if entry.shape != (b, k):
+            raise ValueError(f"entry_states must be [{b}, {k}], "
+                             f"got {entry.shape}")
+        if b == 0:
+            return SegmentBatchResult(entry.copy(), np.zeros((0, k), bool),
+                                      np.zeros(0, np.int64), 0, 0, 0)
+        arrs = [np.frombuffer(d, np.uint8)
+                if isinstance(d, (bytes, bytearray))
+                else np.asarray(d, np.uint8) for d in segments]
+        lengths = np.array([a.shape[0] for a in arrs], np.int64)
+        plan = self.planner.plan(lengths)
+        finals = entry.copy()  # zero-length segments pass through unchanged
+        calls = rows = early = 0
+
+        for bucket in plan.buckets:
+            spec = bucket.kind == "spec"
+            layout = self.planner.layout_for(bucket.chunk_len) if spec else None
+            for lo in range(0, bucket.doc_idx.size, self.batch_tile):
+                sel = bucket.doc_idx[lo:lo + self.batch_tile]
+                buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
+                lens = np.zeros(self.batch_tile, np.int32)
+                ent = np.tile(self.packed.starts, (self.batch_tile, 1))
+                for r, i in enumerate(sel):
+                    buf[r, :lengths[i]] = arrs[i]
+                    lens[r] = lengths[i]
+                ent[:sel.size] = entry[sel]
+                if spec:
+                    out, pos = self.executor.run_spec_entry(
+                        jnp.asarray(buf), jnp.asarray(lens), layout,
+                        jnp.asarray(ent.astype(np.int32)))
+                else:
+                    out, pos = self.executor.run_seq_entry(
+                        jnp.asarray(buf), jnp.asarray(lens),
+                        jnp.asarray(ent.astype(np.int32)))
+                out, pos = np.asarray(out), np.asarray(pos)
+                finals[sel] = out[:sel.size]
+                eff = (np.minimum(bucket.chunk_len, lengths[sel]) if spec
+                       else lengths[sel])
+                early += int((pos[:sel.size] < eff).sum())
+                calls += 1
+                rows += self.batch_tile
+
+        return SegmentBatchResult(final_states=finals,
+                                  absorbed=self.dev.absorbing[finals],
+                                  lengths=lengths, bucket_calls=calls,
+                                  padded_rows=rows, early_exits=early)
+
     # -- serving hook -------------------------------------------------------
 
     def _advance_impl(self, states: jnp.ndarray, classes: jnp.ndarray) -> jnp.ndarray:
@@ -270,10 +374,16 @@ class BatchMatcher(Matcher):
 
     ``use_kernel=True`` routes chunk matching + merge through the fused
     Pallas kernel (the ``pallas`` backend); everything else is the facade.
+    Deprecated — new code should construct ``Matcher(..., backend=...)``
+    directly (tests/test_compat_shims.py keeps this path covered).
     """
 
     def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
                  batch_tile: int = 64, use_kernel: bool = False):
+        import warnings
+        warnings.warn("BatchMatcher is a compatibility shim; use "
+                      "Matcher(..., backend='pallas'|'local') instead",
+                      DeprecationWarning, stacklevel=2)
         super().__init__(source, num_chunks=num_chunks, max_buckets=max_buckets,
                          batch_tile=batch_tile,
                          backend="pallas" if use_kernel else "local")

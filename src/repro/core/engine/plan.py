@@ -78,8 +78,12 @@ class DeviceTables:
         self.starts_j = jnp.asarray(packed.starts)        # [K] int32
         self.sinks_j = jnp.asarray(packed.sinks)          # [K] int32
         self.byte_to_class_j = jnp.asarray(packed.byte_to_class)  # [256]
-        self.absorbing_j = jnp.asarray(                   # [Q] bool
-            (packed.table == np.arange(q, dtype=np.int32)[:, None]).all(axis=1))
+        # host copy kept for the streaming cursor layer (absorbed flags /
+        # stream-level early exit) — the pad column is identity by
+        # construction, so absorbing-over-real-classes is absorbing outright
+        self.absorbing = (packed.table
+                          == np.arange(q, dtype=np.int32)[:, None]).all(axis=1)
+        self.absorbing_j = jnp.asarray(self.absorbing)    # [Q] bool
 
     @classmethod
     def build(cls, packed: PackedDFA) -> "DeviceTables":

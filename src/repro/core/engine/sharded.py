@@ -69,6 +69,8 @@ class ShardedExecutor(_ExecutorBase):
                 f"data extent {self.devices} (the planner rounds up for you)")
         self._spec_fns: dict[int, object] = {}
         self._seq_fns: dict[int, object] = {}
+        self._spec_entry_fns: dict[int, object] = {}
+        self._seq_entry_fns: dict[int, object] = {}
 
     def _replicated_tables(self):
         """Pin the constant matcher tables onto every mesh device up front
@@ -100,10 +102,22 @@ class ShardedExecutor(_ExecutorBase):
             self._seq_fns[b] = fn
         return fn(bytes_buf, lengths)
 
-    def _build_seq_fn(self, batch: int):
+    def run_seq_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                      entry: jnp.ndarray):
+        b = bytes_buf.shape[0]
+        if self.devices == 1 or b % self.devices != 0:
+            return super().run_seq_entry(bytes_buf, lengths, entry)
+        fn = self._seq_entry_fns.get(b)
+        if fn is None:
+            fn = self._build_seq_fn(b, with_entry=True)
+            self._seq_entry_fns[b] = fn
+        return fn(bytes_buf, lengths, entry)
+
+    def _build_seq_fn(self, batch: int, *, with_entry: bool = False):
         """Short documents are independent rows, so the document axis shards
         cleanly over "data" (distributed.sharding.doc_batch_spec) — each
-        device classifies and scans B/D rows, nothing is exchanged."""
+        device classifies and scans B/D rows, nothing is exchanged.  The
+        entry variant also splits the [B, K] segment entry states row-wise."""
         from jax.sharding import PartitionSpec as P
 
         from ...distributed.sharding import doc_batch_spec
@@ -111,6 +125,19 @@ class ShardedExecutor(_ExecutorBase):
 
         row_ax = tuple(doc_batch_spec(self.mesh, batch))
         buf_spec, len_spec = P(*row_ax, None), P(*row_ax)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+
+        if with_entry:
+            body = shard_map(self._seq_entry_body, mesh=self.mesh,
+                             in_specs=(buf_spec, len_spec, P(*row_ax, None)),
+                             out_specs=(buf_spec, len_spec), check_vma=False)
+
+            def impl_entry(bytes_buf, lengths, entry):
+                self.traces += 1  # side effect fires at trace time only
+                return body(bytes_buf, lengths, entry)
+
+            return jax.jit(impl_entry, donate_argnums=donate)
+
         body = shard_map(self._seq_body, mesh=self.mesh,
                          in_specs=(buf_spec, len_spec),
                          out_specs=(buf_spec, len_spec), check_vma=False)
@@ -119,7 +146,6 @@ class ShardedExecutor(_ExecutorBase):
             self.traces += 1  # side effect fires at trace time only
             return body(bytes_buf, lengths)
 
-        donate = (0,) if jax.default_backend() != "cpu" else ()
         return jax.jit(impl, donate_argnums=donate)
 
     def steps_for(self, layout: ChunkLayout) -> int:
@@ -135,7 +161,15 @@ class ShardedExecutor(_ExecutorBase):
             self._spec_fns[layout.width] = fn
         return fn(bytes_buf, lengths)
 
-    def _build_spec_fn(self, layout: ChunkLayout):
+    def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
+                       layout: ChunkLayout, entry: jnp.ndarray):
+        fn = self._spec_entry_fns.get(layout.width)
+        if fn is None:
+            fn = self._build_spec_fn(layout, with_entry=True)
+            self._spec_entry_fns[layout.width] = fn
+        return fn(bytes_buf, lengths, entry)
+
+    def _build_spec_fn(self, layout: ChunkLayout, *, with_entry: bool = False):
         """Jit one bucket width; the layout's boundaries are baked in as
         static slices (deterministic per width, so the cache key is width)."""
         from ...distributed.sharding import matcher_chunk_specs
@@ -148,13 +182,15 @@ class ShardedExecutor(_ExecutorBase):
         in_specs, out_spec = matcher_chunk_specs(self.mesh)
         table_pad, cand_pad, cidx_pad = self._replicated_tables()
 
-        def body(chunk_loc, la_loc, exact_loc):
-            # chunk_loc [C_loc, B, Lmax]; la_loc [C_loc, B]; exact_loc [C_loc]
+        def body(chunk_loc, la_loc, exact_loc, entry):
+            # chunk_loc [C_loc, B, Lmax]; la_loc [C_loc, B]; exact_loc
+            # [C_loc]; entry [B, K] replicated segment entry states — exact
+            # chunks (stream position 0) seed from them instead of the starts
             c_loc, b = chunk_loc.shape[0], chunk_loc.shape[1]
             k, s = t.n_patterns, t.i_max
             cand = cand_pad[la_loc]                      # [C_loc, B, K, S]
             start = jnp.broadcast_to(
-                t.starts_j[None, None, :, None], (c_loc, b, k, s))
+                entry.astype(jnp.int32)[None, :, :, None], (c_loc, b, k, s))
             init = jnp.where(exact_loc[:, None, None, None], start, cand)
             sym_t = chunk_loc.reshape(c_loc * b, lmax).T
 
@@ -173,7 +209,7 @@ class ShardedExecutor(_ExecutorBase):
         sharded_body = shard_map(body, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=out_spec, check_vma=False)
 
-        def impl(bytes_buf, lengths):
+        def run(bytes_buf, lengths, entry):
             self.traces += 1  # side effect fires at trace time only
             b = bytes_buf.shape[0]
             cls = self._classify(bytes_buf, lengths)     # [B, W]
@@ -188,11 +224,19 @@ class ShardedExecutor(_ExecutorBase):
                                else jnp.zeros((b,), jnp.int32))
             chunk_buf = jnp.stack(pieces)                # [C, B, Lmax]
             la = jnp.stack(la_rows)                      # [C, B]
-            finals = sharded_body(chunk_buf, la, jnp.asarray(exact_np))
+            finals = sharded_body(chunk_buf, la, jnp.asarray(exact_np), entry)
             return finals, jnp.full((b,), NO_EXIT, jnp.int32)
 
         donate = (0,) if jax.default_backend() != "cpu" else ()
-        return jax.jit(impl, donate_argnums=donate)
+        if with_entry:
+            return jax.jit(run, donate_argnums=donate)
+
+        def run0(bytes_buf, lengths):
+            b = bytes_buf.shape[0]
+            entry = jnp.broadcast_to(t.starts_j[None, :], (b, t.n_patterns))
+            return run(bytes_buf, lengths, entry)
+
+        return jax.jit(run0, donate_argnums=donate)
 
     def _merge_gathered(self, lv_all: jnp.ndarray, la_all: jnp.ndarray,
                         exact_all: jnp.ndarray,

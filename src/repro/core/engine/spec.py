@@ -233,8 +233,8 @@ class SpecDFAEngine:
         regardless of this engine's ``partition`` setting.
         """
         if self._batch is None:
-            from .facade import BatchMatcher  # local import: facade layers on us
-            self._batch = BatchMatcher(self.dfa, num_chunks=self.num_chunks)
+            from .facade import Matcher  # local import: facade layers on us
+            self._batch = Matcher(self.dfa, num_chunks=self.num_chunks)
         return self._batch.membership_batch(docs)
 
     # -- partition bodies -----------------------------------------------------

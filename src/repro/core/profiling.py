@@ -26,22 +26,47 @@ __all__ = ["profile_capacity", "profile_workers", "synthetic_capacities"]
 
 
 def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
-                     repeats: int = 5, seed: int = 0) -> float:
-    """Median symbols/us of the sequential matcher on this host."""
+                     repeats: int = 5, seed: int = 0,
+                     devices=None) -> float | np.ndarray:
+    """Median symbols/us of the sequential matcher (paper Sec. 4.1 step 1).
+
+    With ``devices=None`` (the default): one measurement on the default
+    device, returned as a float — the original single-host behavior.
+
+    With ``devices=`` a sequence of jax devices: the same benchmark run is
+    timed *per device* (tables and symbol stream placed there explicitly)
+    and a [D] symbols/us array comes back — ready to feed
+    ``Matcher(capacities=...)`` / ``profile_workers`` as the Eq. 1 inputs.
+    This is the multi-worker hook ``Matcher(..., calibrate=True)`` and
+    ``StreamMatcher`` run at start; re-running it at cluster (re)start is
+    the straggler-mitigation path (a persistently slow device simply gets a
+    proportionally smaller chunk of every bucket, Eq. 5).
+    """
     rng = np.random.default_rng(seed)
     if dfa is None:
         dfa = random_dfa(64, 16, rng=rng)
-    table = jnp.asarray(dfa.table)
-    classes = jnp.asarray(rng.integers(0, dfa.n_classes, size=n_symbols, dtype=np.int32))
-    start = jnp.int32(dfa.start)
-    sequential_state(table, classes, start).block_until_ready()  # warmup/compile
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        sequential_state(table, classes, start).block_until_ready()
-        times.append(time.perf_counter() - t0)
-    med = float(np.median(times))
-    return n_symbols / (med * 1e6)
+    table_np = dfa.table
+    classes_np = rng.integers(0, dfa.n_classes, size=n_symbols, dtype=np.int32)
+
+    def measure(device) -> float:
+        if device is None:
+            table = jnp.asarray(table_np)
+            classes = jnp.asarray(classes_np)
+        else:
+            table = jax.device_put(jnp.asarray(table_np), device)
+            classes = jax.device_put(jnp.asarray(classes_np), device)
+        start = jnp.int32(dfa.start)
+        sequential_state(table, classes, start).block_until_ready()  # warmup
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            sequential_state(table, classes, start).block_until_ready()
+            times.append(time.perf_counter() - t0)
+        return n_symbols / (float(np.median(times)) * 1e6)
+
+    if devices is None:
+        return measure(None)
+    return np.array([measure(d) for d in devices], dtype=np.float64)
 
 
 def profile_workers(capacities: np.ndarray | list[float]) -> np.ndarray:

@@ -11,7 +11,14 @@ are scanned either
     patterns, and only one [B, K] decision array returns to the host; or
   * **per-document** (``document_ok``): each pattern's ``SpecDFAEngine`` runs
     in turn with an early exit on the first hit (remaining patterns are not
-    scanned; ``FilterStats.patterns_scanned`` records how many were).
+    scanned; ``FilterStats.patterns_scanned`` records how many were); or
+  * **streaming** (``scan_stream``): documents arriving as interleaved byte
+    chunks — a corpus being downloaded, log tails — are filtered *as the
+    bytes land*: every open document rides a resumable cursor
+    (``streaming.StreamMatcher``) and chunks from many documents coalesce
+    into shared micro-batched device ticks.  Decisions are bit-identical to
+    ``scan_batch`` on the assembled documents, and fully-matched documents
+    stop being scanned at all (absorbed early exit).
 
 At fleet scale the byte stream is split across hosts with the paper's
 weighted partitioning (loader.py) and per-host scans use these engines.
@@ -155,3 +162,82 @@ class CorpusFilter:
             for d, ok in zip(pending, self.scan_batch(pending)):
                 if ok:
                     yield d
+
+    # -- streaming path (documents arrive as interleaved chunks) -------------
+
+    def scan_stream(self, events, *, max_batch: int = 64,
+                    max_delay: int = 8):
+        """Filter documents that arrive as interleaved byte chunks.
+
+        ``events`` yields ``(key, chunk)`` pairs: ``chunk`` is the next bytes
+        of document ``key`` (documents interleave freely — concurrent
+        downloads), and ``chunk=None`` marks the document complete.  Yields
+        ``(key, keep)`` as each document completes; documents still open when
+        ``events`` is exhausted are finalized in arrival order.
+
+        Matching is resumable and micro-batched: chunks only *admit* work,
+        and the tick policy (``max_batch`` pending documents, or a chunk
+        waiting ``max_delay`` admission events) decides when one fused device
+        round advances every pending document at once.  A document whose
+        patterns have all absorbed (e.g. a block-list hit) stops being
+        scanned entirely; its remaining bytes are only counted.
+        """
+        from ..streaming import StreamMatcher, TickPolicy
+
+        if self.batch is None:  # no patterns: keep everything
+            open_counts: dict = {}
+            for key, chunk in events:
+                if chunk is None:
+                    self._stream_account(open_counts.pop(key, 0))
+                    yield key, True
+                else:
+                    open_counts[key] = open_counts.get(key, 0) + len(chunk)
+            for key, n in open_counts.items():
+                self._stream_account(n)
+                yield key, True
+            return
+
+        sm = StreamMatcher(self.batch,
+                           policy=TickPolicy(max_batch=max_batch,
+                                             max_delay=max_delay))
+        open_sessions: dict = {}
+        # device ticks fire while events are consumed, so fold the scheduler
+        # stats in even when the consumer abandons the generator early
+        seen_skips = seen_calls = 0
+
+        def sync_stats():
+            nonlocal seen_skips, seen_calls
+            self.stats.early_exits += sm.stats.absorbed_skips - seen_skips
+            self.stats.batch_calls += sm.stats.bucket_calls - seen_calls
+            seen_skips = sm.stats.absorbed_skips
+            seen_calls = sm.stats.bucket_calls
+
+        try:
+            for key, chunk in events:
+                if chunk is None:
+                    sess = open_sessions.pop(key, None) or sm.open()
+                    yield key, self._stream_close(sm, sess)
+                else:
+                    sess = open_sessions.get(key)
+                    if sess is None:
+                        sess = open_sessions[key] = sm.open()
+                    sess.feed(chunk)
+            for key, sess in open_sessions.items():
+                yield key, self._stream_close(sm, sess)
+        finally:
+            sync_stats()
+
+    def _stream_account(self, n_bytes: int) -> None:
+        self.stats.scanned += 1
+        self.stats.bytes_scanned += n_bytes
+
+    def _stream_close(self, sm, sess) -> bool:
+        res = sm.close(sess)
+        hit = bool(res.accepted.any())
+        self.stats.scanned += 1
+        self.stats.bytes_scanned += res.byte_count
+        self.stats.dropped += int(hit)
+        self.stats.patterns_scanned += self.batch.n_patterns
+        self.stats.work_parallel += res.byte_count * self.batch.n_patterns
+        self.stats.work_sequential += res.byte_count * self.batch.n_patterns
+        return not hit

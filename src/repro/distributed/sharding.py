@@ -188,15 +188,18 @@ def matcher_table_specs(mesh) -> dict[str, P]:
     }
 
 
-def matcher_chunk_specs(mesh) -> tuple[tuple[P, P, P], P]:
+def matcher_chunk_specs(mesh) -> tuple[tuple[P, P, P, P], P]:
     """in/out specs for the mesh-sharded matcher body (engine/sharded.py).
 
     Inputs (chunk-major): chunks [C, B, Lmax], lookahead [C, B], exact [C] —
-    all sharded over "data" on the chunk axis.  Output [B, K] finals are
-    replicated (every device folds the same gathered lane states).
+    all sharded over "data" on the chunk axis — plus the per-document segment
+    entry states [B, K], replicated (every device's exact chunks seed from
+    them; for whole documents they are the broadcast pattern starts).  Output
+    [B, K] finals are replicated (every device folds the same gathered lane
+    states).
     """
     ax = "data" if "data" in mesh.axis_names else None
-    return (P(ax, None, None), P(ax, None), P(ax)), P(None, None)
+    return (P(ax, None, None), P(ax, None), P(ax), P(None, None)), P(None, None)
 
 
 def doc_batch_spec(mesh, batch: int) -> P:

@@ -115,7 +115,12 @@ def spec_match_merge_kernel(table_ref, chunks_ref, init_ref, la_ref, cidx_ref,
 
     table_ref : [Q_total * n_cls_pad] int32 pre-scaled flat packed table (VMEM)
     chunks_ref: [1, C, l_blk] int32 joint classes for this doc/symbol block
-    init_ref  : [1, C, K * S] int32 candidate initial packed states
+    init_ref  : [1, C, K * S] int32 candidate initial packed states.  Chunk
+                0's lanes are *exact* entry states and its merge reads lane
+                0 — the pattern starts for whole documents, or a streaming
+                cursor's resumed states (the segment-entry injection of
+                ``engine.executors.LocalExecutor.run_spec_entry``; the
+                kernel is agnostic to which, by construction).
     la_ref    : [1, C] int32 per-chunk reverse-lookahead class (entry 0 unused)
     cidx_ref  : [n_cls_pad, Q_total] int32 candidate-lane index (VMEM, whole)
     sinks_ref : [K] int32 packed sink per pattern (-1 if none)

@@ -1,6 +1,6 @@
 """Serving: batched prefill/decode engine + grammar-constrained decoding."""
 
-from .constrained import GrammarConstraint
+from .constrained import DecodeStream, GrammarConstraint
 from .engine import ServeConfig, ServingEngine
 
-__all__ = ["GrammarConstraint", "ServeConfig", "ServingEngine"]
+__all__ = ["DecodeStream", "GrammarConstraint", "ServeConfig", "ServingEngine"]

@@ -20,7 +20,73 @@ import jax.numpy as jnp
 from ..core import DFA, Matcher
 from ..kernels import ops as kops
 
-__all__ = ["GrammarConstraint"]
+__all__ = ["GrammarConstraint", "DecodeStream"]
+
+
+class DecodeStream:
+    """Incremental grammar state over streaming cursors (one per sequence).
+
+    The pre-streaming prefill (``advance_tokens``) re-scans the whole prompt
+    from the start states on every call — fine once, wrong for prompts that
+    arrive in chunks (chunked uploads, multi-turn).  A ``DecodeStream``
+    instead holds one resumable ``StreamSession`` per batch row: each
+    ``feed_tokens`` call scans *only the new tokens*, and the B per-row
+    segments coalesce into one micro-batched device tick (the stream's
+    matcher tiles its batch to cover all B rows — the constraint's own
+    single-row matcher would dispatch per row).  Special (non-byte) tokens
+    are identity moves, exactly as in ``advance_tokens``, so the states are
+    bit-identical to a one-shot prefill of the concatenation.
+
+    Division of labor with the decode loop: ``feed_tokens`` is for *segment*
+    arrivals (prompt chunks, accepted draft runs); the per-token inner loop
+    should keep using ``GrammarConstraint.advance`` — a single fused [B]
+    gather with states resident on device — and sync back with
+    ``feed_tokens`` only when a stream-level view is needed.
+    """
+
+    def __init__(self, constraint: "GrammarConstraint", batch: int):
+        from ..core.engine.plan import next_pow2
+        from ..streaming import StreamMatcher, TickPolicy
+
+        self.constraint = constraint
+        # ticks only on explicit flush: feed_tokens admits all B rows first,
+        # then dispatches them as one coalesced round.  One device tile
+        # covers the whole decode batch (the constraint's own matcher has
+        # batch_tile=1 for single-row advance and would dispatch B times).
+        self.stream = StreamMatcher(
+            constraint.matcher.packed,
+            batch_tile=next_pow2(batch),
+            policy=TickPolicy(max_batch=1 << 30, max_delay=1 << 30))
+        self.sessions = [self.stream.open() for _ in range(batch)]
+
+    @property
+    def batch(self) -> int:
+        return len(self.sessions)
+
+    @property
+    def states(self) -> jnp.ndarray:
+        """[B] current DFA states (grammar DFAs are packed alone, so packed
+        state ids are plain state ids)."""
+        return jnp.asarray(
+            np.stack([s.cursor.states[0] for s in self.sessions]), jnp.int32)
+
+    def feed_tokens(self, tokens: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """Advance every row by its new tokens [B, T]; returns the states.
+
+        Byte-valued tokens (< 256) feed the row's cursor; special tokens are
+        identity moves and are simply skipped (same semantics as the pad
+        class in ``advance_tokens``).
+        """
+        toks = np.asarray(tokens)
+        if toks.ndim != 2 or toks.shape[0] != self.batch:
+            raise ValueError(f"expected [{self.batch}, T] tokens, "
+                             f"got {toks.shape}")
+        for row, sess in zip(toks, self.sessions):
+            data = row[(row >= 0) & (row < 256)].astype(np.uint8).tobytes()
+            if data:
+                sess.feed(data)
+        self.stream.flush()  # one coalesced tick for all B rows
+        return self.states
 
 
 class GrammarConstraint:
@@ -65,6 +131,12 @@ class GrammarConstraint:
 
     def init_states(self, batch: int) -> jnp.ndarray:
         return jnp.full((batch,), self.dfa.start, jnp.int32)
+
+    def open_decode(self, batch: int) -> DecodeStream:
+        """Open resumable per-sequence cursors for incremental prefill/decode
+        (see ``DecodeStream``); used by ``ServingEngine.generate`` so prompt
+        chunks and decode steps never re-prefill from the start states."""
+        return DecodeStream(self, batch)
 
     def mask_logits(self, states: jnp.ndarray, logits: jnp.ndarray) -> jnp.ndarray:
         """[B] states x [B, V] logits -> masked logits."""

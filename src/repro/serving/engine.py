@@ -58,8 +58,19 @@ class ServingEngine:
         return jax.random.categorical(
             key, logits / self.serve.temperature, axis=-1).astype(jnp.int32)
 
-    def generate(self, prompts: np.ndarray, *, seed: int = 0) -> np.ndarray:
-        """prompts [B, T_prompt] int32 -> generated tokens [B, max_new]."""
+    def generate(self, prompts: np.ndarray, *, seed: int = 0,
+                 decode_stream=None) -> np.ndarray:
+        """prompts [B, T_prompt] int32 -> generated tokens [B, max_new].
+
+        Grammar prefill rides resumable cursors (``GrammarConstraint.
+        open_decode``): the prompt is fed once — in chunks, if it arrived
+        that way — and never re-scanned.  Pass ``decode_stream`` (a
+        ``DecodeStream`` already fed with the prompt, e.g. from a chunked
+        streaming endpoint) to skip the prompt prefill entirely.  The
+        per-token inner loop advances states with the fused single-gather
+        ``constraint.advance`` (states stay device-resident; the cursors are
+        a prefill/segment-level view and are not mutated per token).
+        """
         b, t_prompt = prompts.shape
         max_len = t_prompt + self.serve.max_new_tokens
         cache = TF.init_cache(self.cfg, b, max_len)
@@ -67,12 +78,19 @@ class ServingEngine:
                                       jnp.asarray(prompts), cache=cache,
                                       mesh=self.mesh)
         key = jax.random.PRNGKey(seed)
-        states = (self.constraint.init_states(b)
-                  if self.constraint is not None else None)
-        if states is not None:
-            # replay prompt tokens through the DFA in one vectorized call so
-            # constraints continue mid-text (specials are identity moves)
-            states = self.constraint.advance_tokens(states, prompts)
+        states = None
+        stream = decode_stream
+        if self.constraint is not None:
+            if stream is None:
+                stream = self.constraint.open_decode(b)
+                states = stream.feed_tokens(prompts)
+            else:
+                if stream.batch != b:
+                    raise ValueError(f"decode_stream holds {stream.batch} "
+                                     f"sessions for a batch of {b}")
+                states = stream.states  # prompt already fed incrementally
+        elif decode_stream is not None:
+            raise ValueError("decode_stream requires a grammar constraint")
 
         out = np.full((b, self.serve.max_new_tokens), self.serve.eos_id,
                       np.int32)

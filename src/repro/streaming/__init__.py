@@ -1,0 +1,139 @@
+"""Streaming match runtime: resumable cursors + micro-batched scheduling.
+
+The batched runtime (``core.engine.Matcher``) answers "does this whole
+document match?"; this package answers the serving-tier question "keep
+matching these million byte streams as their bytes arrive".  Three layers:
+
+    cursor.py     ``MatchCursor`` / ``segment_result`` / ``merge`` — the pure
+                  Eq. 8 composition that makes matching resumable: per-stream
+                  speculative lane states, absorbed flags and byte counts
+                  carried across segment boundaries, bit-identical to
+                  one-shot matching under any segmentation.
+    scheduler.py  ``MicroBatchScheduler`` + ``TickPolicy`` — an admission
+                  queue that coalesces pending segments from many unrelated
+                  streams into the sticky pow2 shape buckets and dispatches
+                  one fused device round per tick via
+                  ``Matcher.advance_segments`` (local / pallas / sharded).
+    session.py    ``StreamSession`` / ``StreamResult`` — the per-stream
+                  handle a serving tier holds per live connection.
+
+``StreamMatcher`` below is the public facade:
+
+    sm = StreamMatcher([r"SECRET-[0-9]+", r"key=[a-z]{8}"],
+                       policy=TickPolicy(max_batch=256, max_delay=8))
+    s = sm.open()
+    s.feed(chunk)            # admits; scheduler decides when to dispatch
+    ...
+    res = s.close()          # flushes; [K] accept flags + final states
+
+Consumers: ``data.filter.CorpusFilter.scan_stream`` (filter a corpus as it
+downloads), ``serving.constrained.GrammarConstraint.open_decode``
+(incremental grammar prefill/decode over cursors), and the ``--stream`` path
+of ``launch.serve``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.engine.facade import Matcher
+from .cursor import (ENTRY_EXACT, MatchCursor, SegmentResult, merge,
+                     open_cursor, segment_result)
+from .scheduler import MicroBatchScheduler, SchedulerStats, TickPolicy
+from .session import StreamResult, StreamSession
+
+__all__ = ["StreamMatcher", "StreamSession", "StreamResult", "TickPolicy",
+           "SchedulerStats", "MicroBatchScheduler", "MatchCursor",
+           "SegmentResult", "ENTRY_EXACT", "open_cursor", "segment_result",
+           "merge"]
+
+
+class StreamMatcher:
+    """Resumable, continuously micro-batched matching over byte streams.
+
+    ``source`` is anything ``core.engine.Matcher`` accepts (a DFA, a
+    ``PackedDFA``, a sequence of DFAs) — or an existing ``Matcher``, whose
+    compiled buckets, backend and capacity layout are then shared with
+    whole-document matching.  Results are bit-identical to
+    ``Matcher.membership_batch`` on each stream's concatenated bytes,
+    regardless of how the bytes were split across ``feed`` calls.
+
+    ``policy`` sets the tick policy (default: eager flush).  Remaining
+    keyword arguments (``backend=``, ``capacities=``, ``calibrate=``,
+    ``num_chunks=``, ...) construct the underlying ``Matcher``.  When the
+    matcher is built here, ``num_chunks`` defaults to 1 (batched sequential
+    scan): with many concurrent streams the *row* axis already saturates the
+    device, and per-segment chunk speculation would add C x S redundant
+    lanes per stream — ``benchmarks --only stream_throughput`` measures the
+    difference.  Pass ``num_chunks>1`` (or a pre-built ``Matcher``) for few
+    heavy streams, where in-segment speculation is the only parallelism.
+    """
+
+    def __init__(self, source, *, policy: TickPolicy | None = None,
+                 **matcher_kwargs):
+        if isinstance(source, Matcher):
+            if matcher_kwargs:
+                raise ValueError("matcher kwargs conflict with a pre-built "
+                                 f"Matcher: {sorted(matcher_kwargs)}")
+            self.matcher = source
+        else:
+            matcher_kwargs.setdefault("num_chunks", 1)
+            self.matcher = Matcher(source, **matcher_kwargs)
+        self.scheduler = MicroBatchScheduler(self.matcher, policy)
+        self._next_sid = 0
+
+    # -- session lifecycle ---------------------------------------------------
+
+    def open(self) -> StreamSession:
+        """Open a stream at byte position 0 (exact cursor at the starts)."""
+        sid = self._next_sid
+        self._next_sid += 1
+        return StreamSession(sid, self, open_cursor(self.matcher.dev))
+
+    def feed(self, session: StreamSession, data: bytes | np.ndarray, *,
+             flush: bool = False) -> None:
+        """Admit the stream's next segment; dispatch is up to the policy
+        (``flush=True`` forces a tick after admission)."""
+        if session.closed:
+            raise ValueError("stream session is closed")
+        if session.owner is not self:
+            raise ValueError("session belongs to a different StreamMatcher")
+        buf = (bytes(data) if isinstance(data, (bytes, bytearray))
+               else np.asarray(data, np.uint8).tobytes())
+        session.segments_fed += 1
+        if buf:
+            self.scheduler.enqueue(session, buf)
+        if flush:
+            self.scheduler.tick()
+
+    def flush(self) -> int:
+        """Force one tick over everything pending; returns streams advanced."""
+        return self.scheduler.tick()
+
+    def close(self, session: StreamSession) -> StreamResult:
+        """Flush the stream's pending bytes and return its final decision."""
+        if session.closed:
+            raise ValueError("stream session is already closed")
+        if session.owner is not self:
+            raise ValueError("session belongs to a different StreamMatcher")
+        if session.pending_bytes:
+            # one tick drains the whole queue, so closing one stream still
+            # coalesces every other pending stream into the same device round
+            self.scheduler.tick()
+        session.closed = True
+        states = session.cursor.states
+        return StreamResult(
+            accepted=self.matcher.packed.accepting[states].copy(),
+            final_states=states.copy(),
+            byte_count=session.cursor.byte_count,
+            segments_fed=session.segments_fed)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def stats(self) -> SchedulerStats:
+        return self.scheduler.stats
+
+    @property
+    def n_patterns(self) -> int:
+        return self.matcher.n_patterns

@@ -1,0 +1,347 @@
+"""Streaming match runtime: segment-split invariance, Eq. 8 composition,
+micro-batching scheduler policies, and the streaming consumers.
+
+The tentpole guarantee under test: feeding a document through
+``StreamMatcher`` in *any* segmentation — empty segments, 1-byte dribbles,
+arbitrary random splits — is bit-identical to ``Matcher.membership_batch``
+on the whole document, on every backend and on 1 and 8 simulated devices
+(tests/conftest.py forces 8 host devices).  A hypothesis property test
+drives the same invariant when hypothesis is installed; the seeded random
+sweep below always runs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (Matcher, compile_regex, make_search_dfa, pack_dfas,
+                        random_dfa, synthetic_capacities)
+from repro.launch.mesh import make_matcher_mesh
+from repro.streaming import (ENTRY_EXACT, StreamMatcher, TickPolicy, merge,
+                             open_cursor, segment_result)
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = list(b"abxy0189")
+
+
+def _mesh_or_skip(d):
+    if len(jax.devices()) < d:
+        pytest.skip(f"needs {d} host devices (conftest forces 8)")
+    return make_matcher_mesh(d)
+
+
+def _docs(rng, sizes):
+    return [bytes(rng.choice(ALPHABET, size=int(n)).astype(np.uint8))
+            for n in sizes]
+
+
+def _random_splits(rng, doc, n_cuts):
+    cuts = sorted(rng.integers(0, len(doc) + 1, size=n_cuts).tolist())
+    bounds = [0] + cuts + [len(doc)]
+    return [doc[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def _feed_stream(sm, doc, segments):
+    s = sm.open()
+    for seg in segments:
+        s.feed(seg)
+    return s.close()
+
+
+# --------------------------------------------------------------------------
+# tentpole: segment-split invariance on every backend, 1 and 8 devices
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,devices", [
+    ("local", 1), ("pallas", 1), ("sharded", 1), ("sharded", 8)])
+def test_segment_split_invariance(backend, devices):
+    rng = np.random.default_rng(40 + devices)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    kwargs = {}
+    if backend == "sharded":
+        kwargs = {"mesh": _mesh_or_skip(devices),
+                  "capacities": synthetic_capacities(devices)}
+    m = Matcher(dfas, num_chunks=8, batch_tile=8, backend=backend, **kwargs)
+    docs = _docs(rng, [0, 1, 2, 31, 32, 100, 400, 999])
+    want = m.membership_batch(docs)
+    sm = StreamMatcher(m, policy=TickPolicy(max_batch=4, max_delay=3))
+    for i, doc in enumerate(docs):
+        segments = _random_splits(rng, doc, int(rng.integers(0, 8)))
+        res = _feed_stream(sm, doc, segments)
+        np.testing.assert_array_equal(res.final_states, want.final_states[i],
+                                      err_msg=f"doc {i} split {len(segments)}")
+        np.testing.assert_array_equal(res.accepted, want.accepted[i])
+        assert res.byte_count == len(doc)
+
+
+def test_empty_and_single_byte_segments():
+    rng = np.random.default_rng(41)
+    m = Matcher([make_search_dfa(compile_regex(p)) for p in PATTERNS],
+                num_chunks=4)
+    doc = bytes(rng.choice(ALPHABET, size=73).astype(np.uint8))
+    want = m.membership_batch([doc])
+    sm = StreamMatcher(m)  # eager flush: every feed is its own tick
+    # 1-byte dribble interleaved with empty feeds
+    s = sm.open()
+    for i, b in enumerate(doc):
+        s.feed(b"")
+        s.feed(doc[i:i + 1])
+    res = s.close()
+    np.testing.assert_array_equal(res.final_states, want.final_states[0])
+    # a stream closed with zero bytes decides on the start states
+    empty = sm.open().close()
+    np.testing.assert_array_equal(
+        empty.accepted, m.packed.accepting[m.packed.starts])
+    assert empty.byte_count == 0
+
+
+def test_streaming_random_dfa_property():
+    rng = np.random.default_rng(42)
+    for trial in range(3):
+        packed = pack_dfas([random_dfa(int(rng.integers(3, 16)),
+                                       int(rng.integers(2, 6)), rng=rng)
+                            for _ in range(int(rng.integers(1, 4)))])
+        m = Matcher(packed, num_chunks=4, batch_tile=4)
+        sm = StreamMatcher(m, policy=TickPolicy(max_batch=3, max_delay=2))
+        for n in (0, 1, 17, 300):
+            doc = bytes(rng.integers(0, 256, size=n, dtype=np.uint8))
+            segments = _random_splits(rng, doc, int(rng.integers(0, 5)))
+            res = _feed_stream(sm, doc, segments)
+            np.testing.assert_array_equal(res.final_states,
+                                          packed.run_all(doc),
+                                          err_msg=str((trial, n)))
+
+
+def test_segment_split_invariance_hypothesis():
+    """Any random split of a document into 1..N segments (hypothesis)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    m = Matcher(dfas, num_chunks=4, batch_tile=4)
+    sm = StreamMatcher(m, policy=TickPolicy(max_batch=2, max_delay=1))
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(
+        doc=st.binary(max_size=200),
+        cuts=st.lists(st.integers(min_value=0, max_value=200), max_size=6))
+    def check(doc, cuts):
+        bounds = [0] + sorted(min(c, len(doc)) for c in cuts) + [len(doc)]
+        segments = [doc[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+        res = _feed_stream(sm, doc, segments)
+        np.testing.assert_array_equal(res.final_states, m.packed.run_all(doc))
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# pure Eq. 8 composition (independently matched segment maps)
+# --------------------------------------------------------------------------
+
+def test_host_merge_composes_independent_segments():
+    """Segments matched independently (candidate-keyed lane maps) compose
+    via the pure ``merge`` to the exact whole-document answer — the SFA-style
+    transition-function composition, with no device in the loop."""
+    rng = np.random.default_rng(43)
+    m = Matcher([make_search_dfa(compile_regex(p)) for p in PATTERNS])
+    dev = m.dev
+    for trial in range(5):
+        doc = bytes(rng.choice(ALPHABET,
+                               size=int(rng.integers(1, 300))).astype(np.uint8))
+        segments = _random_splits(rng, doc, int(rng.integers(0, 6)))
+        cur = open_cursor(dev)
+        for seg_bytes in segments:
+            ec = ENTRY_EXACT if cur.byte_count == 0 else cur.last_class
+            # the map depends only on (bytes, entry class): it could have
+            # been computed before any earlier segment was seen
+            seg = segment_result(dev, seg_bytes, ec)
+            cur = merge(cur, seg, tables=dev)
+        np.testing.assert_array_equal(cur.states, m.packed.run_all(doc),
+                                      err_msg=str(trial))
+        assert cur.byte_count == len(doc)
+
+
+def test_merge_rejects_mismatched_entry_class():
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[0]))])
+    dev = m.dev
+    cur = merge(open_cursor(dev), segment_result(dev, b"ab"), tables=dev)
+    wrong = (cur.last_class + 1) % m.packed.n_classes
+    with pytest.raises(ValueError):
+        merge(cur, segment_result(dev, b"ba", wrong), tables=dev)
+    with pytest.raises(ValueError):  # exact segments need a pristine cursor
+        merge(cur, segment_result(dev, b"ba"), tables=dev)
+
+
+# --------------------------------------------------------------------------
+# scheduler: tick policies, coalescing, occupancy, absorbed early exit
+# --------------------------------------------------------------------------
+
+def test_eager_policy_ticks_every_feed():
+    # a non-matching stream: ".*[0-9]{3}" never absorbs on letters, so every
+    # feed really is matched (no absorbed skip interfering with the counts)
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[1]))])
+    sm = StreamMatcher(m)  # default TickPolicy: max_delay=0 -> eager
+    s = sm.open()
+    for _ in range(5):
+        s.feed(b"abba")
+    assert sm.stats.ticks == 5 and sm.stats.segments == 5
+    s.close()
+
+
+def test_max_batch_policy_coalesces():
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[1]))])
+    sm = StreamMatcher(m, policy=TickPolicy(max_batch=4, max_delay=100))
+    streams = [sm.open() for _ in range(4)]
+    for s in streams[:3]:
+        s.feed(b"ab" * 10)
+    assert sm.stats.ticks == 0          # below max_batch, within max_delay
+    streams[3].feed(b"ba" * 10)
+    assert sm.stats.ticks == 1          # 4th pending stream trips the batch
+    assert sm.stats.segments == 4
+    # several feeds to one stream coalesce into one scanned segment
+    streams[0].feed(b"ab")
+    streams[0].feed(b"b8")
+    streams[0].feed(b"ab")
+    sm.flush()
+    assert sm.stats.segments == 5
+    assert sm.stats.coalescing > 1.0
+    doc = b"ab" * 10 + b"ab" + b"b8" + b"ab"
+    np.testing.assert_array_equal(
+        streams[0].close().final_states,
+        m.membership_batch([doc]).final_states[0])
+
+
+def test_max_delay_policy_bounds_latency():
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[1]))])
+    sm = StreamMatcher(m, policy=TickPolicy(max_batch=100, max_delay=2))
+    s0, s1 = sm.open(), sm.open()
+    s0.feed(b"ab")                       # waits...
+    s1.feed(b"ba")                       # 1 subsequent feed: still waiting
+    assert sm.stats.ticks == 0
+    s1.feed(b"ab")                       # 2nd subsequent feed: forced tick
+    assert sm.stats.ticks == 1
+    s0.close(), s1.close()
+
+
+def test_full_tiles_reach_full_occupancy():
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[1]))],
+                num_chunks=8, batch_tile=16)
+    sm = StreamMatcher(m, policy=TickPolicy(max_batch=32, max_delay=1000))
+    streams = [sm.open() for _ in range(32)]
+    for r in range(3):
+        for s in streams:
+            s.feed(b"abxy0a1b" * 16)     # 128 B, same bucket, never absorbs
+    sm.flush()
+    assert sm.stats.occupancy == 1.0     # full 16-row tiles every tick
+    assert sm.stats.segments == 96
+    for s in streams:
+        s.close()
+
+
+def test_absorbed_streams_skip_the_device():
+    """Once every pattern of a stream is absorbing, further segments are
+    accounted but never matched — and the decision stays exact."""
+    m = Matcher(make_search_dfa(compile_regex(".*(hit)")))
+    sm = StreamMatcher(m)
+    s = sm.open()
+    s.feed(b"xx hit xx", flush=True)
+    assert bool(s.cursor.absorbed.all())
+    before = sm.stats.segments
+    for _ in range(4):
+        s.feed(b"more bytes that cannot change anything")
+    assert sm.stats.segments == before
+    assert sm.stats.absorbed_skips == 4
+    res = s.close()
+    assert bool(res.accepted[0])
+    assert res.byte_count == len(b"xx hit xx") + 4 * len(
+        b"more bytes that cannot change anything")
+    np.testing.assert_array_equal(
+        res.final_states,
+        m.membership_batch([b"xx hit xx" + b"more bytes that cannot change "
+                            b"anything" * 4]).final_states[0])
+
+
+def test_session_lifecycle_errors():
+    m = Matcher(make_search_dfa(compile_regex(".*(ab)")))
+    sm, sm2 = StreamMatcher(m), StreamMatcher(Matcher(
+        make_search_dfa(compile_regex(".*(ab)"))))
+    s = sm.open()
+    with pytest.raises(ValueError):
+        sm2.feed(s, b"x")                # wrong owner
+    s.close()
+    with pytest.raises(ValueError):
+        s.feed(b"x")                     # closed
+    with pytest.raises(ValueError):
+        s.close()                        # double close
+    with pytest.raises(ValueError):
+        StreamMatcher(m, backend="local")  # kwargs conflict with a Matcher
+
+
+# --------------------------------------------------------------------------
+# facade-level segment API
+# --------------------------------------------------------------------------
+
+def test_advance_segments_matches_concatenation():
+    rng = np.random.default_rng(44)
+    m = Matcher([make_search_dfa(compile_regex(p)) for p in PATTERNS],
+                num_chunks=4, batch_tile=4)
+    b, k = 6, m.n_patterns
+    entry = np.tile(m.packed.starts, (b, 1))
+    prefixes = _docs(rng, [0, 3, 50, 200, 64, 17])
+    res1 = m.advance_segments(prefixes, entry)
+    suffixes = _docs(rng, [10, 0, 1, 128, 300, 33])
+    res2 = m.advance_segments(suffixes, res1.final_states)
+    whole = m.membership_batch([p + s for p, s in zip(prefixes, suffixes)])
+    np.testing.assert_array_equal(res2.final_states, whole.final_states)
+    assert res2.padded_rows >= b
+    assert res2.absorbed.shape == (b, k)
+
+
+# --------------------------------------------------------------------------
+# consumers
+# --------------------------------------------------------------------------
+
+def test_corpus_filter_scan_stream_matches_scan_batch():
+    from repro.data.filter import CorpusFilter
+    rng = np.random.default_rng(45)
+    pats = [r"SECRET-[0-9]+", r"key=[a-z]{4}"]
+    docs = {}
+    for i in range(10):
+        d = bytearray(rng.choice(list(b"abc 01xyz"),
+                                 size=int(rng.integers(0, 300))).astype(np.uint8))
+        if rng.random() < 0.5:
+            d[1:1] = b"SECRET-9"
+        docs[i] = bytes(d)
+    want = CorpusFilter(pats).scan_batch(list(docs.values()))
+
+    # interleaved chunk arrivals across all documents
+    events, cursors, live = [], {i: 0 for i in docs}, list(docs)
+    while live:
+        i = live[int(rng.integers(len(live)))]
+        if cursors[i] >= len(docs[i]):
+            events.append((i, None))
+            live.remove(i)
+        else:
+            step = int(rng.integers(1, 50))
+            events.append((i, docs[i][cursors[i]:cursors[i] + step]))
+            cursors[i] += step
+    filt = CorpusFilter(pats)
+    got = dict(filt.scan_stream(iter(events), max_batch=4, max_delay=6))
+    assert got == {i: bool(want[j]) for j, i in enumerate(docs)}
+    assert filt.stats.scanned == len(docs)
+    assert filt.stats.bytes_scanned == sum(len(d) for d in docs.values())
+
+
+def test_decode_stream_matches_one_shot_prefill():
+    from repro.serving import GrammarConstraint
+    rng = np.random.default_rng(46)
+    gc = GrammarConstraint(compile_regex(r"[a-d]+x"), vocab_size=300)
+    toks = rng.integers(0, 300, size=(4, 12)).astype(np.int32)
+    want = np.asarray(gc.advance_tokens(gc.init_states(4), toks))
+    ds = gc.open_decode(4)
+    for lo in range(0, 12, 3):           # chunked upload, 3 tokens at a time
+        got = ds.feed_tokens(toks[:, lo:lo + 3])
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # each 4-row round coalesced into one tick
+    assert ds.stream.stats.ticks == 4
