@@ -295,8 +295,10 @@ def bench_capacity_balance(d: int = 8, n_docs: int = 32,
          skews["uniform"] / max(skews["weighted"], 1e-9))
 
     # end-to-end docs/sec through the sharded executor on the local mesh
+    # (1-D chunk layout; mesh_shape="auto" would also split the doc axis)
+    from repro.launch.mesh import matcher_mesh_extents
     mesh = make_matcher_mesh()
-    d_loc = int(mesh.shape["data"])
+    d_loc = int(np.prod(matcher_mesh_extents(mesh)))
     docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8) for n in sizes]
     pats = list(PCRE_PATTERNS.values())[:4]
     dfas = [make_search_dfa(compile_regex(".*(" + p + ")")) for p in pats]

@@ -3,7 +3,7 @@
 from .automata import DFA, NFA, PackedDFA, make_search_dfa, pack_dfas, random_dfa
 from .determinize import compile_prosite, compile_regex, minimize, nfa_to_dfa
 from .engine import (BatchMatcher, BatchResult, ChunkLayout, DeviceTables,
-                     Matcher, MatchPlan, MatchResult, Planner,
+                     Matcher, MatchPlan, MatchResult, MeshLayout, Planner,
                      SegmentBatchResult, ShardedExecutor, SpecDFAEngine,
                      match_chunks_lanes, sequential_state)
 from .lookahead import (LookaheadTables, PackedLookaheadTables,
@@ -21,7 +21,8 @@ __all__ = [
     "compile_regex", "compile_prosite", "minimize", "nfa_to_dfa",
     "MatchResult", "BatchResult", "SegmentBatchResult", "SpecDFAEngine",
     "BatchMatcher", "Matcher",
-    "MatchPlan", "Planner", "ChunkLayout", "DeviceTables", "ShardedExecutor",
+    "MatchPlan", "Planner", "ChunkLayout", "MeshLayout", "DeviceTables",
+    "ShardedExecutor",
     "match_chunks_lanes", "sequential_state",
     "LookaheadTables", "PackedLookaheadTables", "build_lookahead_tables",
     "build_packed_lookahead_tables", "i_max_r", "i_sigma_sets",

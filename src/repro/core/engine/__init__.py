@@ -14,10 +14,12 @@ Module map — how a membership query flows through the layers:
     executors.py  Executor protocol + ``LocalExecutor`` (jitted jnp reference
                   and fused Pallas kernel backends), on-device byte->class
                   classification, absorbing-state early exit.
-    sharded.py    ``ShardedExecutor``: chunk axis sharded over the mesh
-                  "data" axis via shard_map; capacity-weighted chunk
-                  boundaries; devices exchange only per-chunk L-vector lane
-                  states before the Eq. 8 merge.
+    sharded.py    ``ShardedExecutor``: the 2-D ("doc", "chunk") mesh backend
+                  via shard_map — document rows sharded over "doc", chunk
+                  lanes over "chunk", capacity-weighted boundaries per doc
+                  row-block; the per-chunk L-vector lane states are
+                  all_gathered over "chunk" only before the Eq. 8 merge
+                  (doc shards never communicate).
     facade.py     ``Matcher``: packs patterns, owns a Planner + an executor
                   backend ("local" | "pallas" | "sharded"), exposes
                   ``membership_batch`` (whole documents) and
@@ -25,19 +27,17 @@ Module map — how a membership query flows through the layers:
                   segment tick — see ``repro.streaming``); ``BatchMatcher``
                   compat shim.
 
-Adding an executor backend: implement the executor protocol in
-``executors.Executor`` (``run_spec``/``run_seq`` for whole documents, the
-``run_spec_entry``/``run_seq_entry`` segment-entry variants for streaming,
-and ``steps_for``) over the shared ``DeviceTables`` bundle — inputs are raw
-byte buffers + lengths and a ``ChunkLayout``; results must stay bit-identical
-to sequential matching — then route it from ``Matcher.__init__``.  See
-ROADMAP.md §Plan/executor layering and §Streaming runtime.
+Adding an executor backend: see docs/architecture.md ("Adding an executor
+backend") — implement the ``executors.Executor`` protocol over the shared
+``DeviceTables`` bundle and route it from ``Matcher.__init__``; results must
+stay bit-identical to sequential matching.
 """
 
 from .executors import Executor, LocalExecutor
 from .facade import BatchMatcher, BatchResult, Matcher, SegmentBatchResult
-from .plan import (BucketPlan, ChunkLayout, DeviceTables, MatchPlan, Planner,
-                   expand_device_weights, layout_device_work, next_pow2)
+from .plan import (BucketPlan, ChunkLayout, DeviceTables, MatchPlan,
+                   MeshLayout, Planner, expand_device_weights,
+                   layout_device_work, next_pow2)
 from .sharded import ShardedExecutor
 from .spec import (VPU_LANES, MatcherFn, MatchResult, SpecDFAEngine,
                    match_chunks_lanes, sequential_state)
@@ -46,7 +46,8 @@ __all__ = [
     "MatchResult", "BatchResult", "SegmentBatchResult", "SpecDFAEngine",
     "BatchMatcher", "Matcher",
     "sequential_state", "match_chunks_lanes", "VPU_LANES", "MatcherFn",
-    "Planner", "MatchPlan", "BucketPlan", "ChunkLayout", "DeviceTables",
+    "Planner", "MatchPlan", "BucketPlan", "ChunkLayout", "MeshLayout",
+    "DeviceTables",
     "expand_device_weights", "layout_device_work", "next_pow2",
     "Executor", "LocalExecutor", "ShardedExecutor",
 ]

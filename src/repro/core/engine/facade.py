@@ -8,10 +8,13 @@ the pre-refactor ``BatchMatcher`` API:
     Matcher(dfas, backend="pallas")                     # fused Pallas kernel
     Matcher(dfas, backend="sharded", capacities=[...])  # mesh-sharded,
                                                         # capacity-balanced
+    Matcher(dfas, backend="sharded", mesh_shape=(2, 4)) # 2-D doc x chunk
 
 ``BatchMatcher`` remains as a compatibility shim (``use_kernel=True`` maps to
 the ``pallas`` backend).  Decisions stay bit-identical to per-document
-sequential matching on every backend, device count and capacity profile.
+sequential matching on every backend, mesh shape and capacity profile.
+See README.md for the backend/mesh support matrix and docs/architecture.md
+for the layer map.
 """
 
 from __future__ import annotations
@@ -27,7 +30,8 @@ import jax.numpy as jnp
 from ..automata import DFA, PackedDFA, pack_dfas
 from ..partition import capacity_weights
 from .executors import LocalExecutor
-from .plan import DeviceTables, Planner, layout_device_work, next_pow2
+from .plan import (DeviceTables, MeshLayout, Planner, layout_device_work,
+                   next_pow2)
 
 __all__ = ["BatchResult", "SegmentBatchResult", "Matcher", "BatchMatcher"]
 
@@ -42,7 +46,8 @@ class BatchResult:
     work arrays are per-document model quantities mirroring ``MatchResult``.
     ``early_exits`` counts documents retired by the absorbing-state early
     exit before their real end; ``device_work`` (sharded backend) is the [D]
-    real symbols assigned per device by the plan's chunk layouts.
+    real symbols assigned per device by the plan's chunk layouts, in mesh
+    row-major order (device (doc r, chunk c) at index ``r * Dc + c``).
     """
 
     accepted: np.ndarray        # [B, K] bool
@@ -91,21 +96,37 @@ class Matcher:
     retracing policy (see ``engine.plan``); the executor owns the device
     dispatch (see ``engine.executors`` / ``engine.sharded``).
 
+    **Bit-identity guarantee**: every public decision — ``membership_batch``,
+    ``accepts_batch``, ``advance_segments``, ``advance_classes`` — is
+    bit-identical to per-document sequential matching, on every backend,
+    mesh shape and capacity profile.
+
     Parameters
     ----------
     source       : DFA | PackedDFA | sequence of DFA.
     num_chunks   : uniform chunk count C per document (rounded up to a
-                   multiple of the mesh data extent on the sharded backend).
+                   multiple of the mesh chunk extent on the sharded backend).
     max_buckets  : lifetime compiled-shape budget for the speculative path.
     batch_tile   : fixed row count of every device call (rounded up to a
-                   power of two).
+                   power of two; must be a multiple of the mesh doc extent
+                   on a 2-D sharded mesh).
     backend      : "local" | "pallas" | "sharded".
-    mesh         : sharded backend only — mesh with a "data" axis (defaults
-                   to ``launch.mesh.make_matcher_mesh`` over all devices).
+    mesh         : sharded backend only — a ("doc", "chunk") mesh from
+                   ``launch.mesh.make_matcher_mesh`` (legacy 1-D "data"
+                   meshes count as doc extent 1).
+    mesh_shape   : sharded backend only, alternative to ``mesh`` — passed to
+                   ``make_matcher_mesh(devices, shape=mesh_shape)``: ``None``
+                   for the 1-D (1, D) chunk layout, ``"auto"`` for
+                   near-square auto-factoring (8 devices -> 2x4), or an
+                   explicit ``(doc, chunk)`` tuple.
+    devices      : sharded backend only, with ``mesh_shape`` — how many local
+                   devices the built mesh uses (default: all).
     capacities   : sharded backend only — measured per-device capacities
-                   (symbols/us, e.g. from ``core.profiling.profile_workers``
-                   inputs); normalized to Eq. 1 weights for the planner's
-                   capacity-balanced chunk layout.  ``None`` = uniform.
+                   (symbols/us, e.g. from ``core.profiling.profile_capacity``
+                   with ``devices=``), one per mesh device in row-major
+                   (doc, chunk) order; normalized to Eq. 1 weights *per doc
+                   row* for the planner's capacity-balanced chunk layouts.
+                   ``None`` = uniform.
     spec_m       : weighted-layout work model: 1 = lane-parallel chunk sizes
                    proportional to capacity (default); ``i_max`` reproduces
                    the paper's scalar-worker Eqs. 2–7.
@@ -121,6 +142,7 @@ class Matcher:
 
     def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
                  batch_tile: int = 64, backend: str = "local", mesh=None,
+                 mesh_shape=None, devices: Optional[int] = None,
                  capacities: Optional[Sequence[float]] = None,
                  spec_m: int = 1, calibrate: bool = False,
                  early_exit_segments: int = 4):
@@ -146,31 +168,51 @@ class Matcher:
         self.pad_cls = self.dev.pad_cls
 
         if backend == "sharded":
+            from ...launch.mesh import make_matcher_mesh, matcher_mesh_extents
             if mesh is None:
-                from ...launch.mesh import make_matcher_mesh
-                mesh = make_matcher_mesh()
-            devices = int(mesh.shape["data"])
+                mesh = make_matcher_mesh(devices, shape=mesh_shape)
+            elif mesh_shape is not None or devices is not None:
+                raise ValueError("pass either mesh= or mesh_shape=/devices=, "
+                                 "not both")
+            doc_shards, chunk_shards = matcher_mesh_extents(mesh)
+            n_dev = doc_shards * chunk_shards
+            if self.batch_tile % doc_shards:
+                raise ValueError(
+                    f"batch_tile={self.batch_tile} must be a multiple of the "
+                    f"mesh doc extent {doc_shards}")
             if calibrate and capacities is None:
                 from ..profiling import profile_capacity
-                data_devs = list(mesh.devices.reshape(devices, -1)[:, 0])
-                capacities = profile_capacity(devices=data_devs,
+                mesh_devs = list(np.asarray(mesh.devices).reshape(-1))[:n_dev]
+                capacities = profile_capacity(devices=mesh_devs,
                                               n_symbols=20_000, repeats=3)
-            self.capacities = (None if capacities is None
-                               else np.asarray(capacities, np.float64))
-            weights = (None if capacities is None
-                       else capacity_weights(np.asarray(capacities, np.float64)))
+            if capacities is None:
+                self.capacities = weights = None
+            else:
+                caps = np.asarray(capacities, np.float64)
+                if caps.size != n_dev:
+                    raise ValueError(f"need {n_dev} capacities (one per mesh "
+                                     f"device), got {caps.size}")
+                self.capacities = caps
+                # Eq. 1 weights per doc row-block: each mesh row balances its
+                # own chunk axis; rows split documents, not symbols
+                caps2 = caps.reshape(doc_shards, chunk_shards)
+                weights = np.stack([capacity_weights(caps2[r])
+                                    for r in range(doc_shards)])
             self.planner = Planner(num_chunks=num_chunks,
-                                   max_buckets=max_buckets, devices=devices,
-                                   weights=weights, spec_m=spec_m)
+                                   max_buckets=max_buckets,
+                                   devices=chunk_shards, weights=weights,
+                                   spec_m=spec_m, doc_shards=doc_shards)
             from .sharded import ShardedExecutor
             self.executor = ShardedExecutor(
                 self.dev, num_chunks=self.planner.num_chunks, mesh=mesh,
                 early_exit_segments=early_exit_segments)
+            self.n_devices = n_dev
         else:
             if capacities is not None:
                 raise ValueError("capacities only apply to the sharded backend")
-            if mesh is not None:
-                raise ValueError("mesh only applies to the sharded backend")
+            if mesh is not None or mesh_shape is not None or devices is not None:
+                raise ValueError("mesh/mesh_shape/devices only apply to the "
+                                 "sharded backend")
             if spec_m != 1:
                 raise ValueError("spec_m only applies to the sharded backend")
             if calibrate:
@@ -183,6 +225,7 @@ class Matcher:
                 self.dev, num_chunks=self.planner.num_chunks,
                 use_kernel=(backend == "pallas"),
                 early_exit_segments=early_exit_segments)
+            self.n_devices = 1
         self.num_chunks = self.planner.num_chunks
         self._advance_fn = jax.jit(self._advance_impl)
 
@@ -215,8 +258,11 @@ class Matcher:
     def membership_batch(self, docs: Sequence[bytes | np.ndarray]) -> BatchResult:
         """Match every doc against every packed pattern; no per-doc syncs.
 
-        Returns a ``BatchResult`` whose decisions are bit-identical to running
-        each document through sequential matching per pattern.
+        ``docs`` is a ragged sequence of B byte strings / uint8 arrays.
+        Returns a ``BatchResult`` whose [B, K] decisions are bit-identical to
+        running each document through sequential matching per pattern — on
+        every backend and mesh shape (the sharded backend's 2-D doc x chunk
+        split changes only *where* chunks are matched, never the answer).
         """
         b = len(docs)
         k = self.packed.n_patterns
@@ -233,15 +279,16 @@ class Matcher:
         steps = np.where(plan.spec_mask, 0, lengths)
         calls = 0
         early = 0
-        device_work = (np.zeros(self.planner.devices, np.int64)
+        device_work = (np.zeros(self.n_devices, np.int64)
                        if self.backend == "sharded" else None)
 
         for bucket in plan.buckets:
             spec = bucket.kind == "spec"
             layout = self.planner.layout_for(bucket.chunk_len) if spec else None
+            mesh_layout = isinstance(layout, MeshLayout)
             if spec:
                 steps[bucket.doc_idx] = self.executor.steps_for(layout)
-                if device_work is not None:
+                if device_work is not None and not mesh_layout:
                     device_work += layout_device_work(layout,
                                                       lengths[bucket.doc_idx])
             for lo in range(0, bucket.doc_idx.size, self.batch_tile):
@@ -251,6 +298,10 @@ class Matcher:
                 for r, i in enumerate(sel):
                     buf[r, :lengths[i]] = arrs[i]
                     lens[r] = lengths[i]
+                if spec and device_work is not None and mesh_layout:
+                    # 2-D layouts assign work positionally (tile row-block ->
+                    # mesh row), so account per tile; pad rows carry 0 symbols
+                    device_work += layout.device_work(lens.astype(np.int64))
                 if spec:
                     out, pos = self.executor.run_spec(
                         jnp.asarray(buf), jnp.asarray(lens), layout)
@@ -275,7 +326,8 @@ class Matcher:
                            calls, early_exits=early, device_work=device_work)
 
     def accepts_batch(self, docs: Sequence[bytes | np.ndarray]) -> np.ndarray:
-        """[B, K] accept matrix (convenience wrapper)."""
+        """[B, K] bool accept matrix (convenience ``membership_batch`` wrapper,
+        same bit-identity guarantee)."""
         return self.membership_batch(docs).accepted
 
     # -- streaming hook ------------------------------------------------------
@@ -287,12 +339,15 @@ class Matcher:
         ``segments[i]`` is the next byte segment of stream ``i`` and
         ``entry_states[i]`` its current [K] exact packed states (a
         ``streaming.MatchCursor``'s states; the pattern starts for a fresh
-        stream).  Segments share the planner's sticky shape buckets with
-        whole-document matching, and each bucket tile is one fused device
-        call through the executor's segment-entry path — so segments from
-        many unrelated streams coalesce exactly like documents of a batch.
-        Results are bit-identical to matching each stream's concatenated
-        bytes in one shot (Eq. 8 composition is associative).
+        stream), so ``entry_states`` is [B, K] int32.  Segments share the
+        planner's sticky shape buckets with whole-document matching, and
+        each bucket tile is one fused device call through the executor's
+        segment-entry path — so segments from many unrelated streams
+        coalesce exactly like documents of a batch.  On the sharded backend
+        the same 2-D doc x chunk mesh split applies (entry states shard over
+        "doc" with their rows).  Results are bit-identical to matching each
+        stream's concatenated bytes in one shot (Eq. 8 composition is
+        associative), on every backend and mesh shape.
         """
         b = len(segments)
         k = self.packed.n_patterns

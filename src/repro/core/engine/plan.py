@@ -40,8 +40,9 @@ from ..automata import PackedDFA
 from ..lookahead import PackedLookaheadTables, build_packed_lookahead_tables
 from ..partition import Partition, uniform_partition, weighted_partition
 
-__all__ = ["next_pow2", "DeviceTables", "ChunkLayout", "BucketPlan",
-           "MatchPlan", "Planner", "expand_device_weights", "layout_device_work"]
+__all__ = ["next_pow2", "DeviceTables", "ChunkLayout", "MeshLayout",
+           "BucketPlan", "MatchPlan", "Planner", "expand_device_weights",
+           "layout_device_work"]
 
 
 def next_pow2(n: int) -> int:
@@ -189,6 +190,56 @@ class ChunkLayout:
                                   width, devices)
 
 
+@dataclasses.dataclass
+class MeshLayout:
+    """Per-doc-shard chunk layouts of one bucket width on a 2-D mesh.
+
+    A ("doc", "chunk") mesh splits a bucket tile both ways: doc row-block
+    ``r`` (tile rows ``[r * B/Dd, (r+1) * B/Dd)``) is owned by mesh row ``r``,
+    and ``rows[r]`` is that row's own ``ChunkLayout`` — its chunk boundaries
+    are capacity-weighted by *that row's* chunk-axis devices (the paper's
+    Eqs. 1–7 applied per doc row-block), so a heterogeneous fleet stays
+    balanced along both axes.  All rows share ``width``; ``lmax`` is the
+    maximum padded chunk buffer over the rows, so the SPMD chunk buffer keeps
+    a single shape (shorter chunks tail-pad with the identity class — free in
+    state space).
+    """
+
+    width: int
+    rows: tuple[ChunkLayout, ...]
+
+    @property
+    def doc_shards(self) -> int:
+        return len(self.rows)
+
+    @property
+    def num_chunks(self) -> int:
+        return self.rows[0].num_chunks
+
+    @property
+    def lmax(self) -> int:
+        return max(r.lmax for r in self.rows)
+
+    @property
+    def num_devices(self) -> int:
+        return self.doc_shards * self.rows[0].num_devices
+
+    def device_work(self, lengths: np.ndarray) -> np.ndarray:
+        """Real symbols per device for one full tile of document lengths.
+
+        ``lengths [B]`` must cover the whole tile (pad rows as zeros) since
+        row-block membership is positional; returns ``[Dd * Dc]`` in mesh
+        row-major order (device (r, c) at index ``r * Dc + c``)."""
+        lengths = np.asarray(lengths, dtype=np.int64)
+        if lengths.shape[0] % self.doc_shards:
+            raise ValueError(f"tile of {lengths.shape[0]} rows does not "
+                             f"split over {self.doc_shards} doc shards")
+        rps = lengths.shape[0] // self.doc_shards
+        return np.concatenate(
+            [layout_device_work(row, lengths[r * rps:(r + 1) * rps])
+             for r, row in enumerate(self.rows)])
+
+
 def layout_device_work(layout: ChunkLayout, lengths: np.ndarray) -> np.ndarray:
     """Real symbols matched per device for documents of the given lengths.
 
@@ -244,43 +295,76 @@ class Planner:
     short-document sequential width is fixed at ``next_pow2(4C - 1)`` so the
     seq path compiles exactly once (it grows only in the ``num_chunks <= 1``
     everything-sequential configuration).
+
+    ``devices`` is the *chunk-axis* extent; ``doc_shards`` the doc-axis
+    extent of a 2-D ("doc", "chunk") matcher mesh (1 for every single-host
+    backend).  ``weights`` holds per-device capacity weights — a flat
+    ``[doc_shards * devices]`` array in mesh row-major order (or an already
+    2-D ``[doc_shards, devices]``); with ``doc_shards > 1`` the planner
+    emits a ``MeshLayout`` whose row ``r`` applies Eqs. 1–7 with mesh row
+    ``r``'s weights only.
     """
 
     def __init__(self, *, num_chunks: int = 8, max_buckets: int = 2,
                  devices: int = 1, weights: Optional[np.ndarray] = None,
-                 spec_m: int = 1):
+                 spec_m: int = 1, doc_shards: int = 1):
         if num_chunks < 1:
             raise ValueError("num_chunks must be >= 1")
         if max_buckets < 1:
             raise ValueError("max_buckets must be >= 1")
         if devices < 1:
             raise ValueError("devices must be >= 1")
+        if doc_shards < 1:
+            raise ValueError("doc_shards must be >= 1")
         # round the chunk count up to a device multiple so the chunk axis
         # shards evenly (a no-op for the single-device executors)
         self.num_chunks = -(-int(num_chunks) // int(devices)) * int(devices)
         self.max_buckets = int(max_buckets)
         self.devices = int(devices)
+        self.doc_shards = int(doc_shards)
         self.spec_m = int(spec_m)
-        self.weights = None if weights is None else np.asarray(weights, np.float64)
-        if self.weights is not None and self.weights.shape != (self.devices,):
-            raise ValueError("need one capacity weight per device")
+        if weights is None:
+            self.weights = None
+        else:
+            w = np.asarray(weights, np.float64)
+            if w.ndim == 1:
+                w = w.reshape(self.doc_shards, -1)
+            if w.shape != (self.doc_shards, self.devices):
+                raise ValueError("need one capacity weight per (doc, chunk) "
+                                 f"device: expected {self.doc_shards}x"
+                                 f"{self.devices}, got {w.shape}")
+            self.weights = w
         self.spec_keys: list[int] = []
         self.seq_width = next_pow2(max(4 * self.num_chunks - 1, 1))
-        self._layouts: dict[int, ChunkLayout] = {}
+        self._layouts: dict[int, ChunkLayout | MeshLayout] = {}
 
     # -- chunk layouts ------------------------------------------------------
 
-    def layout_for(self, chunk_len: int) -> ChunkLayout:
-        """Chunk boundaries for one spec bucket width (cached, deterministic)."""
+    def layout_for(self, chunk_len: int) -> ChunkLayout | MeshLayout:
+        """Chunk boundaries for one spec bucket width (cached, deterministic).
+
+        Returns a ``ChunkLayout`` for single-row meshes (unchanged contract
+        for the local/pallas backends and the 1-D sharded layout) and a
+        ``MeshLayout`` of per-doc-row-block layouts when ``doc_shards > 1``.
+        """
         if chunk_len not in self._layouts:
             width = self.num_chunks * chunk_len
-            if self.weights is None:
-                self._layouts[chunk_len] = ChunkLayout.uniform(
-                    width, self.num_chunks, self.devices)
+
+            def row_layout(r: int) -> ChunkLayout:
+                if self.weights is None:
+                    return ChunkLayout.uniform(width, self.num_chunks,
+                                               self.devices)
+                return ChunkLayout.weighted(width, self.num_chunks,
+                                            self.devices, self.weights[r],
+                                            m=self.spec_m)
+
+            if self.doc_shards == 1:
+                self._layouts[chunk_len] = row_layout(0)
             else:
-                self._layouts[chunk_len] = ChunkLayout.weighted(
-                    width, self.num_chunks, self.devices, self.weights,
-                    m=self.spec_m)
+                self._layouts[chunk_len] = MeshLayout(
+                    width=width,
+                    rows=tuple(row_layout(r)
+                               for r in range(self.doc_shards)))
         return self._layouts[chunk_len]
 
     # -- batch planning -----------------------------------------------------

@@ -1,72 +1,84 @@
-"""Mesh-sharded executor: capacity-balanced chunk matching across devices.
+"""Mesh-sharded executor: capacity-balanced matching on a (doc, chunk) mesh.
 
 The paper's cloud result (288 EC2 cores) comes from two ingredients: split
 the input across workers, and size each worker's slice by its *measured
 matching capacity* (Eq. 1, ``core.profiling.profile_workers``).  This
-executor is the device-mesh version of that scheme:
+executor is the device-mesh version of that scheme, on a 2-D
+``("doc", "chunk")`` mesh (``launch.mesh.make_matcher_mesh``):
 
-  * the **chunk axis is sharded** over the mesh's ``data`` axis
-    (``launch.mesh.make_matcher_mesh`` + ``jax_compat.shard_map``): each
-    device matches its contiguous run of chunks x candidate lanes locally;
-  * chunk boundaries come from the planner's ``ChunkLayout`` — uniform, or
+  * the **chunk axis is sharded over "chunk"** (``jax_compat.shard_map``):
+    each device matches its contiguous run of chunks x candidate lanes
+    locally;
+  * the **document axis is sharded over "doc"**: mesh row ``r`` owns tile
+    row-block ``r`` outright, so batch sizes beyond one host's memory scale
+    along "doc" with no extra traffic — speculative documents no longer
+    replicate on every device;
+  * chunk boundaries come from the planner's layout — uniform, or
     capacity-weighted via the paper's Eqs. 2–7 so a device with twice the
-    measured capacity receives twice the real symbols (trailing identity-pad
-    columns equalize the SPMD buffer shapes; they advance no DFA and carry no
-    model work);
+    measured capacity receives twice the real symbols.  On a 2-D mesh each
+    doc row-block gets its *own* ``ChunkLayout`` weighted by that mesh row's
+    devices (``plan.MeshLayout``); trailing identity-pad columns equalize the
+    SPMD buffer shapes and advance no DFA;
   * devices exchange **only the per-chunk L-vector lane states**
-    (``[C, B, K, S]`` int32, independent of chunk length) in one
-    ``all_gather`` before the Eq. 8 merge — the documents' bytes never cross
-    devices;
-  * the merge folds the gathered lane states per document, exactly as the
-    single-device reference, so results are bit-identical to sequential
-    matching for any device count and any capacity profile.
+    (``[C, B/Dd, K, S]`` int32, independent of chunk length) in one
+    ``all_gather`` **over the "chunk" axis only** — doc shards never
+    communicate, and the documents' bytes never cross devices;
+  * each doc shard folds its gathered lane states per document (Eq. 8),
+    exactly as the single-device reference, so results are bit-identical to
+    sequential matching for any mesh shape and any capacity profile
+    (tests/test_sharded_executor.py sweeps 1x1, 2x4, 4x2, 8x1).
 
-Axis split: the **batched sequential path shards the document axis** over
-"data" (``distributed.sharding.doc_batch_spec`` — rows are independent, each
-device scans B/D of them, nothing is exchanged).  The speculative path keeps
-document rows replicated and shards chunks instead: the L-vector exchange
-only exists *because* one document's chunks live on different devices, which
-is the paper's architecture and what capacity weighting balances.  A 2-D
-document x chunk mesh for batches beyond one host's memory is a recorded
-ROADMAP follow-up.
+The **batched sequential path** needs no exchange at all: short documents
+are independent rows, so the document axis shards over *both* mesh axes
+jointly (``distributed.sharding.doc_batch_spec``) and every device scans
+``B / (Dd * Dc)`` rows.
+
+See docs/architecture.md for the data-flow diagram and the "adding an
+executor backend" guide.
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from .executors import NO_EXIT, _ExecutorBase
-from .plan import ChunkLayout, DeviceTables
+from .plan import ChunkLayout, DeviceTables, MeshLayout
 
 __all__ = ["ShardedExecutor"]
 
 
 class ShardedExecutor(_ExecutorBase):
-    """shard_map-backed executor over the mesh ``data`` axis.
+    """shard_map-backed executor over a ("doc", "chunk") matcher mesh.
 
     Parameters
     ----------
     tables      : shared ``DeviceTables`` bundle.
-    num_chunks  : total chunk count C (a multiple of the mesh data extent;
+    num_chunks  : total chunk count C (a multiple of the mesh chunk extent;
                   the planner rounds up).
-    mesh        : mesh with a ``data`` axis; defaults to
-                  ``launch.mesh.make_matcher_mesh()`` over all local devices.
+    mesh        : mesh from ``launch.mesh.make_matcher_mesh`` (legacy 1-D
+                  "data" meshes count as doc extent 1); defaults to a 1-D
+                  chunk mesh over all local devices.
     """
 
     def __init__(self, tables: DeviceTables, *, num_chunks: int,
                  mesh=None, early_exit_segments: int = 4):
         super().__init__(tables, num_chunks=num_chunks,
                          early_exit_segments=early_exit_segments)
+        from ...launch.mesh import make_matcher_mesh, matcher_mesh_extents
         if mesh is None:
-            from ...launch.mesh import make_matcher_mesh
             mesh = make_matcher_mesh()
         self.mesh = mesh
-        self.devices = int(mesh.shape["data"])
-        if self.num_chunks % self.devices != 0:
+        self.doc_shards, self.chunk_shards = matcher_mesh_extents(mesh)
+        self.chunk_axis = "chunk" if "chunk" in mesh.axis_names else "data"
+        self.devices = self.doc_shards * self.chunk_shards
+        if self.num_chunks % self.chunk_shards != 0:
             raise ValueError(
                 f"num_chunks={self.num_chunks} must be a multiple of the mesh "
-                f"data extent {self.devices} (the planner rounds up for you)")
+                f"chunk extent {self.chunk_shards} (the planner rounds up "
+                "for you)")
         self._spec_fns: dict[int, object] = {}
         self._seq_fns: dict[int, object] = {}
         self._spec_entry_fns: dict[int, object] = {}
@@ -90,7 +102,7 @@ class ShardedExecutor(_ExecutorBase):
                 repl("cand_pad", t.cand_pad_j),
                 repl("cidx_pad", t.cidx_pad_j))
 
-    # -- batched sequential path: document axis sharded over "data" ---------
+    # -- batched sequential path: document axis over both mesh axes ---------
 
     def run_seq(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
         b = bytes_buf.shape[0]
@@ -115,8 +127,8 @@ class ShardedExecutor(_ExecutorBase):
 
     def _build_seq_fn(self, batch: int, *, with_entry: bool = False):
         """Short documents are independent rows, so the document axis shards
-        cleanly over "data" (distributed.sharding.doc_batch_spec) — each
-        device classifies and scans B/D rows, nothing is exchanged.  The
+        cleanly over every mesh axis jointly (doc_batch_spec) — each device
+        classifies and scans B/(Dd*Dc) rows, nothing is exchanged.  The
         entry variant also splits the [B, K] segment entry states row-wise."""
         from jax.sharding import PartitionSpec as P
 
@@ -148,13 +160,13 @@ class ShardedExecutor(_ExecutorBase):
 
         return jax.jit(impl, donate_argnums=donate)
 
-    def steps_for(self, layout: ChunkLayout) -> int:
+    def steps_for(self, layout: ChunkLayout | MeshLayout) -> int:
         return layout.lmax  # lane-parallel wall steps = longest chunk buffer
 
     # -- speculative path ---------------------------------------------------
 
     def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                 layout: ChunkLayout):
+                 layout: ChunkLayout | MeshLayout):
         fn = self._spec_fns.get(layout.width)
         if fn is None:
             fn = self._build_spec_fn(layout)
@@ -162,69 +174,116 @@ class ShardedExecutor(_ExecutorBase):
         return fn(bytes_buf, lengths)
 
     def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                       layout: ChunkLayout, entry: jnp.ndarray):
+                       layout: ChunkLayout | MeshLayout, entry: jnp.ndarray):
         fn = self._spec_entry_fns.get(layout.width)
         if fn is None:
             fn = self._build_spec_fn(layout, with_entry=True)
             self._spec_entry_fns[layout.width] = fn
         return fn(bytes_buf, lengths, entry)
 
-    def _build_spec_fn(self, layout: ChunkLayout, *, with_entry: bool = False):
-        """Jit one bucket width; the layout's boundaries are baked in as
+    def _layout_rows(self, layout: ChunkLayout | MeshLayout
+                     ) -> tuple[ChunkLayout, ...]:
+        """Per-doc-shard row layouts; a plain ChunkLayout broadcasts to every
+        row (uniform boundaries on every row-block)."""
+        if isinstance(layout, MeshLayout):
+            if layout.doc_shards != self.doc_shards:
+                raise ValueError(f"layout has {layout.doc_shards} doc shards, "
+                                 f"mesh has {self.doc_shards}")
+            return layout.rows
+        return (layout,) * self.doc_shards
+
+    def _build_spec_fn(self, layout: ChunkLayout | MeshLayout, *,
+                       with_entry: bool = False):
+        """Jit one bucket width; every row-block's boundaries are baked in as
         static slices (deterministic per width, so the cache key is width)."""
         from ...distributed.sharding import matcher_chunk_specs
         from ...jax_compat import shard_map
 
         t = self.t
-        lmax = layout.lmax
-        bounds = list(zip(layout.starts.tolist(), layout.ends.tolist()))
-        exact_np = layout.exact.copy()
+        rows = self._layout_rows(layout)
+        lmax = max(r.lmax for r in rows)
+        n_chunks = rows[0].num_chunks
+        row_bounds = [list(zip(r.starts.tolist(), r.ends.tolist()))
+                      for r in rows]
+        row_exact = [r.exact.copy() for r in rows]
+        chunk_ax = self.chunk_axis
         in_specs, out_spec = matcher_chunk_specs(self.mesh)
         table_pad, cand_pad, cidx_pad = self._replicated_tables()
 
-        def body(chunk_loc, la_loc, exact_loc, entry):
-            # chunk_loc [C_loc, B, Lmax]; la_loc [C_loc, B]; exact_loc
-            # [C_loc]; entry [B, K] replicated segment entry states — exact
-            # chunks (stream position 0) seed from them instead of the starts
-            c_loc, b = chunk_loc.shape[0], chunk_loc.shape[1]
+        def body(chunk_loc, la_loc, exact_loc, entry_loc):
+            # chunk_loc [C_loc, B_loc, Lmax]; la_loc/exact_loc [C_loc,
+            # B_loc]; entry_loc [B_loc, K] — this doc shard's segment entry
+            # states; exact chunks (stream position 0) seed from them instead
+            # of the Eq. 11 candidates.  All rows of this shard belong to one
+            # doc row-block, so they share one set of chunk boundaries.
+            c_loc, b_loc = chunk_loc.shape[0], chunk_loc.shape[1]
             k, s = t.n_patterns, t.i_max
-            cand = cand_pad[la_loc]                      # [C_loc, B, K, S]
+            cand = cand_pad[la_loc]                    # [C_loc, B_loc, K, S]
             start = jnp.broadcast_to(
-                entry.astype(jnp.int32)[None, :, :, None], (c_loc, b, k, s))
-            init = jnp.where(exact_loc[:, None, None, None], start, cand)
-            sym_t = chunk_loc.reshape(c_loc * b, lmax).T
+                entry_loc.astype(jnp.int32)[None, :, :, None],
+                (c_loc, b_loc, k, s))
+            init = jnp.where(exact_loc[:, :, None, None], start, cand)
+            sym_t = chunk_loc.reshape(c_loc * b_loc, lmax).T
 
             def step(st, row):
                 return table_pad[st, row[:, None]], None
 
             lvecs, _ = jax.lax.scan(
-                step, init.reshape(c_loc * b, k * s).astype(jnp.int32), sym_t)
-            # the only cross-device exchange: lane states, not symbols
+                step, init.reshape(c_loc * b_loc, k * s).astype(jnp.int32),
+                sym_t)
+            # the only cross-device exchange, and only over "chunk": lane
+            # states, not symbols; doc shards stay silent
             lv_all = jax.lax.all_gather(
-                lvecs.reshape(c_loc, b, k, s), "data", axis=0, tiled=True)
-            la_all = jax.lax.all_gather(la_loc, "data", axis=0, tiled=True)
-            ex_all = jax.lax.all_gather(exact_loc, "data", axis=0, tiled=True)
-            return self._merge_gathered(lv_all, la_all, ex_all, cidx_pad)
+                lvecs.reshape(c_loc, b_loc, k, s), chunk_ax, axis=0,
+                tiled=True)
+            la_all = jax.lax.all_gather(la_loc, chunk_ax, axis=0, tiled=True)
+            ex_all = jax.lax.all_gather(exact_loc, chunk_ax, axis=0,
+                                        tiled=True)
+            # every chunk device of this mesh row now folds the same gathered
+            # states; return the copy behind a leading chunk-axis dim so the
+            # out spec mentions every mesh axis (see matcher_chunk_specs)
+            return self._merge_gathered(lv_all, la_all, ex_all,
+                                        cidx_pad)[None]
 
         sharded_body = shard_map(body, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=out_spec, check_vma=False)
 
         def run(bytes_buf, lengths, entry):
             self.traces += 1  # side effect fires at trace time only
-            b = bytes_buf.shape[0]
+            b, w = bytes_buf.shape
+            if b % self.doc_shards:
+                raise ValueError(f"batch of {b} rows does not split over "
+                                 f"{self.doc_shards} doc shards (raise "
+                                 "batch_tile to a doc-shard multiple)")
+            rps = b // self.doc_shards
             cls = self._classify(bytes_buf, lengths)     # [B, W]
-            pieces, la_rows = [], []
-            for s0, e0 in bounds:
-                piece = cls[:, s0:e0]
-                if e0 - s0 < lmax:  # tail-pad to the SPMD buffer length
-                    piece = jnp.pad(piece, ((0, 0), (0, lmax - (e0 - s0))),
-                                    constant_values=t.pad_cls)
-                pieces.append(piece)
-                la_rows.append(cls[:, s0 - 1] if s0 > 0
-                               else jnp.zeros((b,), jnp.int32))
-            chunk_buf = jnp.stack(pieces)                # [C, B, Lmax]
-            la = jnp.stack(la_rows)                      # [C, B]
-            finals = sharded_body(chunk_buf, la, jnp.asarray(exact_np), entry)
+            # one extra identity-pad column makes column index w the "no
+            # symbol here" slot — chunk tails past a boundary and the absent
+            # predecessor of exact chunks both point at it
+            cls_pad = jnp.pad(cls, ((0, 0), (0, 1)),
+                              constant_values=t.pad_cls)
+            # static (trace-time) gather maps: row-block r's documents read
+            # row r's chunk boundaries.  A single gather assembles the whole
+            # [C, B, Lmax] buffer — per-piece stack/concat assembly miscompiles
+            # under jit-of-shard_map resharding on jax<0.5 (values arrive
+            # psum-scaled by the chunk extent), a gather does not.
+            col_idx = np.full((n_chunks, b, lmax), w, np.int32)
+            la_idx = np.full((n_chunks, b), w, np.int32)
+            ex_np = np.zeros((n_chunks, b), bool)
+            for r in range(self.doc_shards):
+                rows = slice(r * rps, (r + 1) * rps)
+                for ci, (s0, e0) in enumerate(row_bounds[r]):
+                    span = np.arange(lmax)
+                    col_idx[ci, rows] = np.where(span < e0 - s0, s0 + span, w)
+                    if s0 > 0:
+                        la_idx[ci, rows] = s0 - 1
+                    ex_np[ci, rows] = bool(row_exact[r][ci])
+            rows_b = jnp.arange(b, dtype=jnp.int32)
+            chunk_buf = cls_pad[rows_b[None, :, None],
+                                jnp.asarray(col_idx)]    # [C, B, Lmax]
+            la = cls_pad[rows_b[None, :], jnp.asarray(la_idx)]  # [C, B]
+            ex = jnp.asarray(ex_np)                      # [C, B] bool
+            finals = sharded_body(chunk_buf, la, ex, entry)[0]
             return finals, jnp.full((b,), NO_EXIT, jnp.int32)
 
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -243,15 +302,18 @@ class ShardedExecutor(_ExecutorBase):
                         cidx_pad: jnp.ndarray) -> jnp.ndarray:
         """Eq. 8 fold over gathered chunk lane states, with exact-chunk flags.
 
-        lv_all [C, B, K, S]; la_all [C, B]; exact_all [C] — a chunk starting
-        at stream position 0 is matched exactly from the start states, so the
-        merge reads its lane 0 instead of a candidate lookup.  Delegates to
-        the one shared merge definition (``kernels.ref.spec_merge_ref``,
-        doc-major) so sharded and local stay bit-identical by construction.
+        lv_all [C, B_loc, K, S]; la_all/exact_all [C, B_loc] — a chunk
+        starting at stream position 0 is matched exactly from its entry
+        states, so the merge reads its lane 0 instead of a candidate lookup.
+        Every local row belongs to the same doc row-block (shard_map places
+        whole row-blocks), so the per-chunk exact flags are constant across
+        the local rows and column 0 carries them.  Delegates to the one
+        shared merge definition (``kernels.ref.spec_merge_ref``, doc-major)
+        so sharded and local stay bit-identical by construction.
         """
         from ...kernels.ref import spec_merge_ref
 
         t = self.t
         return spec_merge_ref(jnp.swapaxes(lv_all, 0, 1), la_all.T,
                               cidx_pad, t.sinks_j, pad_cls=t.pad_cls,
-                              exact=exact_all)
+                              exact=exact_all[:, 0])

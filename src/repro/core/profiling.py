@@ -37,10 +37,13 @@ def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
     timed *per device* (tables and symbol stream placed there explicitly)
     and a [D] symbols/us array comes back — ready to feed
     ``Matcher(capacities=...)`` / ``profile_workers`` as the Eq. 1 inputs.
-    This is the multi-worker hook ``Matcher(..., calibrate=True)`` and
-    ``StreamMatcher`` run at start; re-running it at cluster (re)start is
-    the straggler-mitigation path (a persistently slow device simply gets a
-    proportionally smaller chunk of every bucket, Eq. 5).
+    On a 2-D ("doc", "chunk") matcher mesh, pass the mesh devices flattened
+    row-major — ``Matcher`` consumes capacities in that order and weights
+    each mesh row's chunk axis by its own devices.  This is the multi-worker
+    hook ``Matcher(..., calibrate=True)`` and ``StreamMatcher`` run at
+    start; re-running it at cluster (re)start is the straggler-mitigation
+    path (a persistently slow device simply gets a proportionally smaller
+    chunk of every bucket, Eq. 5).
     """
     rng = np.random.default_rng(seed)
     if dfa is None:

@@ -70,17 +70,21 @@ class CorpusFilter:
 
     ``num_chunks``/``mode``/``partition``/``lookahead_r`` configure the
     per-document engines; ``batch_tile``/``max_buckets``/``backend``/
-    ``capacities``/``mesh`` configure the packed batch matcher facade (see
-    ``core.engine.Matcher`` — ``backend="sharded"`` with measured
-    ``capacities`` runs the capacity-balanced mesh executor on ``mesh`` or
-    all local devices).
+    ``capacities``/``mesh``/``mesh_shape``/``devices`` configure the packed
+    batch matcher facade (see ``core.engine.Matcher`` — ``backend="sharded"``
+    with measured ``capacities`` runs the capacity-balanced mesh executor;
+    ``mesh_shape=(doc, chunk)`` or ``"auto"`` spreads large batches over a
+    2-D doc x chunk mesh).  Keep/drop decisions are [B] bool and
+    bit-identical across all backends, mesh shapes and scan paths
+    (``scan_batch`` / ``filter`` / ``scan_stream``).
     """
 
     def __init__(self, patterns: Iterable[str], *, num_chunks: int = 8,
                  mode: str = "lookahead", partition: str = "balanced",
                  lookahead_r: int = 1, batch_tile: int = 64,
                  max_buckets: int = 2, backend: str = "local",
-                 capacities=None, mesh=None):
+                 capacities=None, mesh=None, mesh_shape=None,
+                 devices=None):
         self.dfas = [make_search_dfa(compile_regex(".*(" + pat + ")"))
                      for pat in patterns]
         self.engines = [
@@ -94,7 +98,8 @@ class CorpusFilter:
                               max_buckets=max_buckets,
                               backend=backend,
                               capacities=capacities,
-                              mesh=mesh)
+                              mesh=mesh, mesh_shape=mesh_shape,
+                              devices=devices)
                       if self.dfas else None)
         self.stats = FilterStats()
 

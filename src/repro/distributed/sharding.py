@@ -191,26 +191,53 @@ def matcher_table_specs(mesh) -> dict[str, P]:
 def matcher_chunk_specs(mesh) -> tuple[tuple[P, P, P, P], P]:
     """in/out specs for the mesh-sharded matcher body (engine/sharded.py).
 
-    Inputs (chunk-major): chunks [C, B, Lmax], lookahead [C, B], exact [C] —
-    all sharded over "data" on the chunk axis — plus the per-document segment
-    entry states [B, K], replicated (every device's exact chunks seed from
-    them; for whole documents they are the broadcast pattern starts).  Output
-    [B, K] finals are replicated (every device folds the same gathered lane
-    states).
+    The speculative path lives on a 2-D ("doc", "chunk") matcher mesh
+    (``launch.mesh.make_matcher_mesh``); legacy 1-D "data" meshes degrade to
+    pure chunk sharding (doc axis absent -> replicated rows).
+
+    Inputs (chunk-major):
+      chunks [C, B, Lmax]  P(chunk, doc, None)  class ids per chunk slice
+      lookahead [C, B]     P(chunk, doc)        boundary class before a chunk
+      exact [C, B]         P(chunk, doc)        chunk matched exactly from
+                                                its row-block's entry states
+      entry [B, K]         P(doc, None)         per-document entry states
+                                                (pattern starts, or a stream
+                                                cursor's states)
+    Output [Dc, B, K] finals: P(chunk, doc, None) — each doc shard folds only
+    its own row block after the "chunk"-axis all_gather; doc shards never
+    communicate, so every chunk device of a mesh row holds the same [B/Dd, K]
+    answer.  The copies are returned behind an explicit leading chunk-axis
+    dim (callers read ``out[0]``) so the out spec mentions *every* mesh axis:
+    under jit, shard_map with ``check_vma=False`` turns an out spec that
+    omits an axis into a psum over it when the operands were assembled inside
+    the jit — 4x-scaled garbage, not a copy (jax 0.4 GSPMD lowering).
     """
-    ax = "data" if "data" in mesh.axis_names else None
-    return (P(ax, None, None), P(ax, None), P(ax), P(None, None)), P(None, None)
+    if "chunk" in mesh.axis_names:
+        c_ax = "chunk"
+        d_ax = "doc" if "doc" in mesh.axis_names else None
+    else:
+        c_ax = "data" if "data" in mesh.axis_names else None
+        d_ax = None
+    return ((P(c_ax, d_ax, None), P(c_ax, d_ax), P(c_ax, d_ax),
+             P(d_ax, None)), P(c_ax, d_ax, None))
+
+
+_DOC_AXES = ("pod", "data", "doc", "chunk")
 
 
 def doc_batch_spec(mesh, batch: int) -> P:
-    """Document-batch spec [B, ...]: shard the doc axis over dp when it
-    divides, replicate otherwise (mirrors ``batch_specs`` for raw byte
-    buffers handed to the matching runtime)."""
-    dp = _dp(mesh)
+    """Document-batch spec [B, ...]: shard the doc axis over the mesh's
+    data-parallel axes when they divide it, replicate otherwise.
+
+    On production meshes the dp axes are (pod, data); on a matcher mesh the
+    batched *sequential* path treats every device as a row worker, so the doc
+    axis spreads over ("doc", "chunk") jointly — rows are independent and
+    nothing is exchanged, unlike the speculative chunk split."""
+    axes = tuple(a for a in _DOC_AXES if a in mesh.axis_names)
     import math
-    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
-    if dp and dp_size > 1 and batch % dp_size == 0:
-        return P(dp)
+    dp_size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if axes and dp_size > 1 and batch % dp_size == 0:
+        return P(axes)
     return P()
 
 

@@ -12,10 +12,13 @@ before any device query).
 
 from __future__ import annotations
 
+import math
+
 import jax
 
 __all__ = ["make_production_mesh", "make_local_mesh", "make_matcher_mesh",
-           "dp_axes", "mesh_info"]
+           "factor_matcher_mesh", "matcher_mesh_extents", "dp_axes",
+           "mesh_info"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -33,15 +36,70 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
                          devices=jax.devices()[: data * model])
 
 
-def make_matcher_mesh(devices: int | None = None) -> jax.sharding.Mesh:
-    """Data-only mesh for the sharded matching executor (engine/sharded.py).
+def factor_matcher_mesh(devices: int) -> tuple[int, int]:
+    """Auto-factor a device count into a near-square (doc, chunk) shape.
 
-    The matcher shards its chunk axis over "data" and keeps no model
-    parallelism, so the mesh is (D, 1) over all (or the first ``devices``)
-    local devices.
+    The doc extent is the largest divisor of ``devices`` at most
+    ``sqrt(devices)`` and the chunk extent takes the rest, so e.g. 8 -> 2x4,
+    16 -> 4x4, 6 -> 2x3, and primes degrade to 1xN (pure chunk sharding).
+    Biasing the larger extent toward chunks keeps the all_gather volume (the
+    only cross-device traffic, per-chunk lane states over "chunk") spread
+    over more links while still splitting document rows across hosts.
     """
-    d = len(jax.devices()) if devices is None else int(devices)
-    return make_local_mesh(data=d, model=1)
+    if devices < 1:
+        raise ValueError("devices must be >= 1")
+    doc = max(d for d in range(1, math.isqrt(devices) + 1) if devices % d == 0)
+    return doc, devices // doc
+
+
+def make_matcher_mesh(devices: int | None = None, *,
+                      shape: tuple[int, int] | str | None = None
+                      ) -> jax.sharding.Mesh:
+    """("doc", "chunk") mesh for the sharded matching executor.
+
+    The speculative path shards chunk lanes over "chunk" (the only axis that
+    communicates — one all_gather of per-chunk lane states) and document rows
+    over "doc" (doc shards never exchange anything), so batches larger than
+    one host's memory scale along "doc" while chunk matching stays balanced
+    along "chunk".
+
+    shape=None        -> (1, D): every device on the chunk axis (the 1-D
+                         layout of the original sharded backend).
+    shape="auto"      -> ``factor_matcher_mesh``: near-square, e.g. 8 -> 2x4.
+    shape=(doc, chunk)-> explicit extents (``devices`` may be omitted).
+    """
+    n_avail = len(jax.devices())
+    d = n_avail if devices is None else int(devices)
+    if shape is None:
+        doc, chunk = 1, d
+    elif shape == "auto":
+        doc, chunk = factor_matcher_mesh(d)
+    else:
+        doc, chunk = int(shape[0]), int(shape[1])
+        if devices is not None and doc * chunk != d:
+            raise ValueError(f"mesh shape {doc}x{chunk} does not use "
+                             f"devices={d}")
+    if doc < 1 or chunk < 1:
+        raise ValueError(f"mesh extents must be >= 1, got {doc}x{chunk}")
+    if doc * chunk > n_avail:
+        raise ValueError(f"mesh {doc}x{chunk} needs {doc * chunk} devices, "
+                         f"have {n_avail}")
+    return jax.make_mesh((doc, chunk), ("doc", "chunk"),
+                         devices=jax.devices()[: doc * chunk])
+
+
+def matcher_mesh_extents(mesh: jax.sharding.Mesh) -> tuple[int, int]:
+    """(doc, chunk) extents of a matcher mesh.
+
+    Legacy 1-D matcher meshes (a "data" axis from older ``make_local_mesh``
+    setups) count as (1, data) — pure chunk sharding.
+    """
+    if "chunk" in mesh.axis_names:
+        return int(mesh.shape.get("doc", 1)), int(mesh.shape["chunk"])
+    if "data" in mesh.axis_names:
+        return 1, int(mesh.shape["data"])
+    raise ValueError(f"not a matcher mesh (axes {mesh.axis_names}); expected "
+                     "('doc', 'chunk') from launch.mesh.make_matcher_mesh")
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
@@ -53,7 +111,6 @@ def mesh_info(mesh: jax.sharding.Mesh) -> dict:
     return {
         "axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "n_devices": int(mesh.devices.size),
-        "dp": int(
-            __import__("math").prod(mesh.shape[a] for a in dp_axes(mesh))),
+        "dp": int(math.prod(mesh.shape[a] for a in dp_axes(mesh))),
         "tp": int(mesh.shape.get("model", 1)),
     }

@@ -90,7 +90,18 @@ class DecodeStream:
 
 
 class GrammarConstraint:
-    """Per-state token masks + batched state advance for byte-level vocabs."""
+    """Per-state token masks + batched state advance for byte-level vocabs.
+
+    State advance rides the matching runtime facade (``core.engine.Matcher``
+    with ``num_chunks=1``): special (non-byte) tokens map to the padded
+    table's identity column, so no masking branch exists, and every advance
+    is bit-identical to stepping the raw DFA token by token.  Shapes:
+    ``states`` are [B] int32 DFA state ids, token blocks are [B, T], logits
+    [B, V].  The mesh/backend options of ``Matcher`` do not apply here — a
+    grammar DFA advances one state per sequence, which is row-parallel
+    already; ``open_decode`` (incremental prefill over streaming cursors) is
+    the batched path.
+    """
 
     def __init__(self, dfa: DFA, vocab_size: int, *, use_kernel: bool = True,
                  allow_specials: tuple[int, ...] = (), eos_id: int = 258):

@@ -54,23 +54,31 @@ class StreamMatcher:
     ``source`` is anything ``core.engine.Matcher`` accepts (a DFA, a
     ``PackedDFA``, a sequence of DFAs) — or an existing ``Matcher``, whose
     compiled buckets, backend and capacity layout are then shared with
-    whole-document matching.  Results are bit-identical to
-    ``Matcher.membership_batch`` on each stream's concatenated bytes,
-    regardless of how the bytes were split across ``feed`` calls.
+    whole-document matching.
 
-    ``policy`` sets the tick policy (default: eager flush).  Remaining
-    keyword arguments (``backend=``, ``capacities=``, ``calibrate=``,
-    ``num_chunks=``, ...) construct the underlying ``Matcher``.  When the
-    matcher is built here, ``num_chunks`` defaults to 1 (batched sequential
-    scan): with many concurrent streams the *row* axis already saturates the
-    device, and per-segment chunk speculation would add C x S redundant
-    lanes per stream — ``benchmarks --only stream_throughput`` measures the
-    difference.  Pass ``num_chunks>1`` (or a pre-built ``Matcher``) for few
-    heavy streams, where in-segment speculation is the only parallelism.
+    **Bit-identity guarantee**: a closed stream's [K] ``accepted`` /
+    ``final_states`` equal ``Matcher.membership_batch`` on the stream's
+    concatenated bytes, regardless of how the bytes were split across
+    ``feed`` calls — on every backend ("local" / "pallas" / "sharded") and
+    mesh shape, including 2-D doc x chunk meshes where each tick's segment
+    rows shard over "doc" (large tick batches scale past one host).
+
+    ``policy`` sets the tick policy (default: eager flush; see
+    ``TickPolicy`` — ``max_batch`` pending streams, ``max_delay`` feed
+    events, or a ``max_delay_s`` wall-clock deadline).  Remaining keyword
+    arguments (``backend=``, ``capacities=``, ``mesh_shape=``,
+    ``calibrate=``, ``num_chunks=``, ...) construct the underlying
+    ``Matcher``.  When the matcher is built here, ``num_chunks`` defaults
+    to 1 (batched sequential scan): with many concurrent streams the *row*
+    axis already saturates the device, and per-segment chunk speculation
+    would add C x S redundant lanes per stream — ``benchmarks --only
+    stream_throughput`` measures the difference.  Pass ``num_chunks>1`` (or
+    a pre-built ``Matcher``) for few heavy streams, where in-segment
+    speculation is the only parallelism.
     """
 
     def __init__(self, source, *, policy: TickPolicy | None = None,
-                 **matcher_kwargs):
+                 clock=None, **matcher_kwargs):
         if isinstance(source, Matcher):
             if matcher_kwargs:
                 raise ValueError("matcher kwargs conflict with a pre-built "
@@ -79,7 +87,12 @@ class StreamMatcher:
         else:
             matcher_kwargs.setdefault("num_chunks", 1)
             self.matcher = Matcher(source, **matcher_kwargs)
-        self.scheduler = MicroBatchScheduler(self.matcher, policy)
+        # clock (default time.monotonic) feeds the max_delay_s deadline;
+        # simulated event loops and tests inject their own
+        self.scheduler = (MicroBatchScheduler(self.matcher, policy)
+                          if clock is None else
+                          MicroBatchScheduler(self.matcher, policy,
+                                              clock=clock))
         self._next_sid = 0
 
     # -- session lifecycle ---------------------------------------------------

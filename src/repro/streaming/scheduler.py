@@ -15,10 +15,13 @@ closes that gap:
     whole-document matching, on any backend (local / pallas / sharded);
   * streams whose cursor is **fully absorbed** skip the device entirely
     (absorbing states self-loop on every class, so skipping is exact);
-  * **tick policies** bound latency: ``max_delay == 0`` is eager flush
-    (every feed ticks), otherwise a tick fires when ``max_batch`` streams
-    have pending data or the oldest pending segment has waited ``max_delay``
-    feed events — whichever comes first.  ``flush()`` forces one.
+  * **tick policies** bound latency: eager flush (the default), or a tick
+    fires when ``max_batch`` streams have pending data, the oldest pending
+    segment has waited ``max_delay`` feed events, or it has waited
+    ``max_delay_s`` wall-clock seconds — whichever comes first.  ``flush()``
+    forces one.  Deadlines are evaluated at admission time (the scheduler
+    owns no timer thread); an async serving loop enforces ``max_delay_s``
+    between arrivals by calling ``flush()`` from its own timer.
 
 ``SchedulerStats.occupancy`` is real segments per padded device row — the
 measure of how well micro-batching fills the fused calls (benchmarks
@@ -28,6 +31,7 @@ measure of how well micro-batching fills the fused calls (benchmarks
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -40,24 +44,38 @@ __all__ = ["TickPolicy", "SchedulerStats", "MicroBatchScheduler"]
 class TickPolicy:
     """When the scheduler dispatches the admission queue.
 
-    max_batch : dispatch as soon as this many streams have pending segments.
-    max_delay : max number of subsequent ``feed`` events a pending segment
-                may wait before a forced dispatch; 0 = eager flush (every
-                feed dispatches immediately).
+    max_batch   : dispatch as soon as this many streams have pending
+                  segments.
+    max_delay   : max number of subsequent ``feed`` events a pending segment
+                  may wait before a forced dispatch; 0 disables the
+                  event-count deadline.
+    max_delay_s : max wall-clock seconds the oldest pending segment may wait
+                  before a forced dispatch; ``None`` disables the wall-clock
+                  deadline.  Checked when segments are admitted (the
+                  scheduler owns no timer — an async loop calls ``flush()``
+                  on its own timer to bound latency between arrivals).
+
+    With ``max_delay == 0`` and ``max_delay_s is None`` (the default) the
+    policy is *eager*: every feed dispatches immediately.  Otherwise a tick
+    fires on whichever deadline — batch, event-count or wall-clock — trips
+    first.
     """
 
     max_batch: int = 64
     max_delay: int = 0
+    max_delay_s: float | None = None
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.max_delay < 0:
             raise ValueError("max_delay must be >= 0")
+        if self.max_delay_s is not None and self.max_delay_s < 0:
+            raise ValueError("max_delay_s must be >= 0")
 
     @property
     def eager(self) -> bool:
-        return self.max_delay == 0
+        return self.max_delay == 0 and self.max_delay_s is None
 
 
 @dataclasses.dataclass
@@ -84,11 +102,18 @@ class SchedulerStats:
 
 
 class MicroBatchScheduler:
-    """Admission queue + tick dispatch over a ``Matcher`` facade."""
+    """Admission queue + tick dispatch over a ``Matcher`` facade.
 
-    def __init__(self, matcher: Matcher, policy: TickPolicy | None = None):
+    ``clock`` (default ``time.monotonic``) timestamps pending segments for
+    the ``max_delay_s`` wall-clock deadline; tests and simulated event loops
+    may inject their own.
+    """
+
+    def __init__(self, matcher: Matcher, policy: TickPolicy | None = None,
+                 *, clock=time.monotonic):
         self.matcher = matcher
         self.policy = policy or TickPolicy()
+        self._clock = clock
         # sid -> session; dict preserves admission order, and re-feeding an
         # already-queued session keeps its (oldest) position — so the first
         # entry always carries the oldest pending_since for the latency test
@@ -108,6 +133,7 @@ class MicroBatchScheduler:
         session._pending += data
         if session._pending_since is None:
             session._pending_since = self._feed_seq
+            session._pending_wall = self._clock()
         self._queue[session.sid] = session
         if self._should_tick():
             self.tick()
@@ -120,7 +146,12 @@ class MicroBatchScheduler:
         if len(self._queue) >= self.policy.max_batch:
             return True
         oldest = next(iter(self._queue.values()))
-        return self._feed_seq - oldest._pending_since >= self.policy.max_delay
+        if self.policy.max_delay > 0 and \
+                self._feed_seq - oldest._pending_since >= self.policy.max_delay:
+            return True
+        return (self.policy.max_delay_s is not None
+                and self._clock() - oldest._pending_wall
+                >= self.policy.max_delay_s)
 
     def tick(self) -> int:
         """Drain the queue in one coalesced device round; returns the number
@@ -134,6 +165,7 @@ class MicroBatchScheduler:
             data = bytes(s._pending)
             s._pending = bytearray()
             s._pending_since = None
+            s._pending_wall = None
             if not data:
                 continue
             last_class = int(self.matcher.packed.byte_to_class[data[-1]])

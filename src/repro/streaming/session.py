@@ -40,7 +40,7 @@ class StreamSession:
     """
 
     __slots__ = ("sid", "owner", "cursor", "segments_fed", "closed",
-                 "_pending", "_pending_since")
+                 "_pending", "_pending_since", "_pending_wall")
 
     def __init__(self, sid: int, owner, cursor: MatchCursor):
         self.sid = sid
@@ -50,6 +50,7 @@ class StreamSession:
         self.closed = False
         self._pending = bytearray()
         self._pending_since: int | None = None
+        self._pending_wall: float | None = None  # max_delay_s admission stamp
 
     @property
     def pending_bytes(self) -> int:

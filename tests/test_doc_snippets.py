@@ -1,0 +1,57 @@
+"""Documentation code must run: execute the README's ```python blocks.
+
+The CI docs job runs the same snippets via tools/run_doc_snippets.py (plus
+the examples); keeping a tier-1 copy means a doc-rotting change fails plain
+``pytest -x -q`` locally too, before any PR is opened.
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from run_doc_snippets import python_blocks, run_file  # noqa: E402
+
+
+def test_readme_exists_with_runnable_quickstart():
+    readme = ROOT / "README.md"
+    assert readme.exists(), "top-level README.md is part of the public API"
+    blocks = python_blocks(readme.read_text())
+    assert blocks, "README must carry at least one runnable python snippet"
+    # the quickstart exercises both entry points
+    joined = "\n".join(blocks)
+    assert "Matcher(" in joined and "StreamMatcher(" in joined
+
+
+def test_readme_snippets_execute():
+    assert run_file(ROOT / "README.md") >= 1
+
+
+def test_architecture_doc_exists_and_is_linked():
+    arch = ROOT / "docs" / "architecture.md"
+    assert arch.exists()
+    text = arch.read_text()
+    for anchor in ("Adding an executor backend", "doc", "chunk",
+                   "all_gather"):
+        assert anchor in text
+    assert "docs/architecture.md" in (ROOT / "README.md").read_text(), \
+        "README must link the architecture doc"
+    # any python blocks in the architecture doc must run too
+    if python_blocks(text):
+        run_file(arch)
+
+
+@pytest.mark.parametrize("name", ["quickstart.py", "corpus_filter.py"])
+def test_fast_examples_smoke(name):
+    """The two cheap examples run end to end (CI also runs the heavy ones)."""
+    import subprocess
+    env = {"PYTHONPATH": str(ROOT / "src")}
+    import os
+    env = {**os.environ, **env}
+    proc = subprocess.run([sys.executable, str(ROOT / "examples" / name)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]

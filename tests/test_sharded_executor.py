@@ -4,8 +4,12 @@ Runs in-process on the 8 simulated host devices that tests/conftest.py
 forces (no subprocess needed).  Covers the tentpole guarantees:
 
   * ``backend="sharded"`` results are bit-identical to sequential matching
-    for ragged multi-pattern corpora on 1 and 8 devices, uniform and with
-    capacity-weighted partitions drawn from ``profile_workers``;
+    for ragged multi-pattern corpora on every mesh shape — 1x1, 2x4, 4x2,
+    8x1 (doc x chunk) — uniform and with capacity-weighted partitions drawn
+    from ``profile_workers``, including profiles that skew *within* a mesh
+    row (per-doc-row-block Eqs. 1–7);
+  * the speculative path's only collective is an all_gather over the
+    "chunk" axis — doc shards never communicate;
   * all three executor backends agree with each other;
   * the on-device byte->class classification matches the retired numpy
     reference (``kernels.ref.classify_pad_ref``);
@@ -25,11 +29,13 @@ from repro.core import (Matcher, SpecDFAEngine, compile_regex, make_search_dfa,
                         synthetic_capacities)
 from repro.core.engine import DeviceTables, LocalExecutor
 from repro.kernels import ref as kref
-from repro.launch.mesh import make_matcher_mesh
+from repro.launch.mesh import (factor_matcher_mesh, make_matcher_mesh,
+                               matcher_mesh_extents)
 
 PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
 ALPHABET = b"abxy0189"
 RAGGED = [0, 1, 3, 10, 31, 32, 33, 100, 255, 256, 513, 900, 1024]
+MESH_SHAPES = [(1, 1), (2, 4), (4, 2), (8, 1)]
 
 
 def _docs(rng, sizes):
@@ -48,26 +54,37 @@ def _assert_matches_sequential(matcher, docs, engines):
     return res
 
 
-def _mesh_or_skip(d):
-    if len(jax.devices()) < d:
-        pytest.skip(f"needs {d} host devices (conftest forces 8)")
-    return make_matcher_mesh(d)
+def _mesh_or_skip(shape):
+    if isinstance(shape, int):
+        shape = (1, shape)
+    n = shape[0] * shape[1]
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices (conftest forces 8)")
+    return make_matcher_mesh(shape=shape)
+
+
+def _skewed_caps(shape, seed=0):
+    """Capacity profile that varies *within* each mesh row (so 2-D weighted
+    layouts actually differ per row) — deterministic, strictly positive."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.6, 1.8, size=shape[0] * shape[1])
 
 
 # --------------------------------------------------------------------------
-# bit-identity on 1 and 8 devices, uniform and capacity-weighted
+# bit-identity on every mesh shape, uniform and capacity-weighted
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("devices", [1, 8])
+@pytest.mark.parametrize("shape", MESH_SHAPES)
 @pytest.mark.parametrize("weighted", [False, True])
-def test_sharded_equals_sequential_ragged(devices, weighted):
-    mesh = _mesh_or_skip(devices)
-    rng = np.random.default_rng(20 + devices)
+def test_sharded_equals_sequential_ragged(shape, weighted):
+    mesh = _mesh_or_skip(shape)
+    devices = shape[0] * shape[1]
+    rng = np.random.default_rng(20 + devices + shape[0])
     dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
-    caps = synthetic_capacities(devices) if weighted else None
-    # capacities flow through profile_workers (Eq. 1) inside the facade
+    caps = _skewed_caps(shape) if weighted else None
+    # capacities flow through per-row Eq. 1 weights inside the facade
     m = Matcher(dfas, num_chunks=8, backend="sharded", mesh=mesh,
-                capacities=caps)
+                capacities=caps, batch_tile=8)
     engines = [SpecDFAEngine(d, num_chunks=8) for d in dfas]
     docs = _docs(rng, RAGGED)
     res = _assert_matches_sequential(m, docs, engines)
@@ -78,6 +95,92 @@ def test_sharded_equals_sequential_ragged(devices, weighted):
         (np.asarray(res.work_sequential)[spec] // len(PATTERNS)).sum())
 
 
+@pytest.mark.parametrize("shape", [(2, 4), (4, 2)])
+def test_sharded_2d_weighted_rows_differ(shape):
+    """Per-row capacity weighting: each mesh row's chunk boundaries track its
+    own devices' weights (MeshLayout rows), and results stay exact."""
+    from repro.core import MeshLayout
+    mesh = _mesh_or_skip(shape)
+    caps = _skewed_caps(shape, seed=3)
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[0]))], num_chunks=8,
+                backend="sharded", mesh=mesh, capacities=caps, batch_tile=8)
+    layout = m.planner.layout_for(64)
+    assert isinstance(layout, MeshLayout)
+    assert layout.doc_shards == shape[0]
+    caps2 = caps.reshape(shape)
+    for r, row in enumerate(layout.rows):
+        per_dev = np.zeros(shape[1])
+        np.add.at(per_dev, row.device_of, row.sizes)
+        # chunk symbols per device track that row's capacity ratios
+        want = caps2[r] / caps2[r].sum() * row.width
+        np.testing.assert_allclose(per_dev, want, atol=shape[1] * 8)
+    # rows with different weight vectors produce different boundaries
+    assert any(not np.array_equal(layout.rows[0].ends, row.ends)
+               for row in layout.rows[1:])
+
+
+def test_sharded_only_chunk_axis_gathers(monkeypatch):
+    """The speculative path's only collective is the lane-state all_gather
+    over "chunk" — doc shards must never communicate (acceptance criterion).
+    """
+    mesh = _mesh_or_skip((2, 4))
+    gathered_axes = []
+    orig = jax.lax.all_gather
+
+    def spy(x, axis_name, **kw):
+        gathered_axes.append(axis_name)
+        return orig(x, axis_name, **kw)
+
+    monkeypatch.setattr(jax.lax, "all_gather", spy)
+    rng = np.random.default_rng(29)
+    m = Matcher([make_search_dfa(compile_regex(p)) for p in PATTERNS],
+                num_chunks=8, backend="sharded", mesh=mesh, batch_tile=8)
+    docs = _docs(rng, [400, 700])
+    res = m.membership_batch(docs)
+    assert gathered_axes and set(gathered_axes) == {"chunk"}
+    want = Matcher([make_search_dfa(compile_regex(p)) for p in PATTERNS],
+                   num_chunks=8).membership_batch(docs)
+    np.testing.assert_array_equal(res.final_states, want.final_states)
+
+
+def test_matcher_mesh_factoring_and_extents():
+    assert factor_matcher_mesh(8) == (2, 4)
+    assert factor_matcher_mesh(16) == (4, 4)
+    assert factor_matcher_mesh(6) == (2, 3)
+    assert factor_matcher_mesh(7) == (1, 7)
+    assert factor_matcher_mesh(1) == (1, 1)
+    mesh = _mesh_or_skip((2, 4))
+    assert matcher_mesh_extents(mesh) == (2, 4)
+    assert matcher_mesh_extents(make_matcher_mesh(4)) == (1, 4)
+    auto = make_matcher_mesh(shape="auto")
+    assert matcher_mesh_extents(auto) == factor_matcher_mesh(
+        len(jax.devices()))
+    with pytest.raises(ValueError):
+        make_matcher_mesh(devices=8, shape=(2, 3))  # 6 != 8
+    legacy = jax.make_mesh((1, 1), ("data", "model"))
+    assert matcher_mesh_extents(legacy) == (1, 1)
+
+
+def test_matcher_mesh_shape_passthrough():
+    """mesh_shape=/devices= build the mesh inside the facade; conflicting
+    arguments are rejected."""
+    _mesh_or_skip((2, 4))
+    dfas = [make_search_dfa(compile_regex(PATTERNS[0]))]
+    m = Matcher(dfas, num_chunks=8, backend="sharded", mesh_shape=(2, 4),
+                batch_tile=8)
+    assert (m.executor.doc_shards, m.executor.chunk_shards) == (2, 4)
+    with pytest.raises(ValueError):
+        Matcher(dfas, backend="sharded", mesh=make_matcher_mesh(1),
+                mesh_shape=(1, 1))
+    with pytest.raises(ValueError):
+        Matcher(dfas, backend="local", mesh_shape=(1, 1))
+    with pytest.raises(ValueError):  # batch_tile must split over doc shards
+        Matcher(dfas, backend="sharded", mesh_shape=(2, 4), batch_tile=1)
+    with pytest.raises(ValueError):  # one capacity per mesh device
+        Matcher(dfas, backend="sharded", mesh_shape=(2, 4),
+                capacities=[1.0, 2.0], batch_tile=8)
+
+
 def test_sharded_weighted_partition_from_profile_workers():
     """The planner's weights must equal profile_workers of the capacities,
     and the resulting chunk sizes must track them."""
@@ -85,7 +188,8 @@ def test_sharded_weighted_partition_from_profile_workers():
     caps = synthetic_capacities(8)
     m = Matcher([make_search_dfa(compile_regex(PATTERNS[0]))], num_chunks=16,
                 backend="sharded", mesh=mesh, capacities=caps)
-    np.testing.assert_allclose(m.planner.weights, profile_workers(caps))
+    # the planner holds one weight row per doc shard (a single row on 1-D)
+    np.testing.assert_allclose(m.planner.weights[0], profile_workers(caps))
     layout = m.planner.layout_for(64)
     per_dev = np.zeros(8)
     np.add.at(per_dev, layout.device_of, layout.sizes)
@@ -93,15 +197,16 @@ def test_sharded_weighted_partition_from_profile_workers():
     assert ratio == pytest.approx(1.41, rel=0.1)
 
 
-def test_sharded_random_dfa_property():
-    mesh = _mesh_or_skip(8)
+@pytest.mark.parametrize("shape", [(1, 8), (2, 4)])
+def test_sharded_random_dfa_property(shape):
+    mesh = _mesh_or_skip(shape)
     rng = np.random.default_rng(22)
     for trial in range(3):
         packed = pack_dfas([random_dfa(int(rng.integers(3, 20)),
                                        int(rng.integers(2, 8)), rng=rng)
                             for _ in range(int(rng.integers(1, 4)))])
         m = Matcher(packed, num_chunks=8, backend="sharded", mesh=mesh,
-                    capacities=rng.uniform(0.5, 2.0, size=8))
+                    capacities=rng.uniform(0.5, 2.0, size=8), batch_tile=8)
         docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8)
                 for n in rng.integers(0, 500, size=10)]
         res = m.membership_batch(docs)
@@ -115,11 +220,16 @@ def test_all_backends_agree():
     dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS[:2]]
     docs = _docs(rng, rng.integers(0, 600, size=16))
     mesh = _mesh_or_skip(min(8, len(jax.devices())))
+    mesh2d = _mesh_or_skip((2, 4))
     results = []
     for kwargs in ({"backend": "local"}, {"backend": "pallas"},
                    {"backend": "sharded", "mesh": mesh},
                    {"backend": "sharded", "mesh": mesh,
-                    "capacities": synthetic_capacities(int(mesh.shape["data"]))}):
+                    "capacities": synthetic_capacities(
+                        int(np.prod(matcher_mesh_extents(mesh))))},
+                   {"backend": "sharded", "mesh": mesh2d},
+                   {"backend": "sharded", "mesh": mesh2d,
+                    "capacities": _skewed_caps((2, 4), seed=7)}):
         m = Matcher(dfas, num_chunks=8, batch_tile=8, **kwargs)
         results.append(m.membership_batch(docs))
     for r in results[1:]:
@@ -233,11 +343,18 @@ def test_corpus_filter_sharded_backend():
     base = CorpusFilter(patterns, num_chunks=8)
     # default mesh = all 8 forced host devices (make_matcher_mesh)
     shard = CorpusFilter(patterns, num_chunks=8, backend="sharded",
-                         capacities=synthetic_capacities(int(mesh.shape["data"])))
+                         capacities=synthetic_capacities(
+                             int(np.prod(matcher_mesh_extents(mesh)))))
+    # mesh_shape pass-through: same answers on the 2-D doc x chunk mesh
+    shard2d = CorpusFilter(patterns, num_chunks=8, backend="sharded",
+                           mesh_shape=(2, 4), batch_tile=8,
+                           capacities=_skewed_caps((2, 4), seed=9))
     docs = []
     for n in rng.integers(5, 500, size=20):
         d = bytearray(rng.choice(list(b"abc 01xyz"), size=int(n)).astype(np.uint8))
         if rng.random() < 0.5:
             d[2:2] = b"SECRET-7"
         docs.append(bytes(d))
-    np.testing.assert_array_equal(shard.scan_batch(docs), base.scan_batch(docs))
+    want = base.scan_batch(docs)
+    np.testing.assert_array_equal(shard.scan_batch(docs), want)
+    np.testing.assert_array_equal(shard2d.scan_batch(docs), want)

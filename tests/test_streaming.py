@@ -4,7 +4,8 @@ micro-batching scheduler policies, and the streaming consumers.
 The tentpole guarantee under test: feeding a document through
 ``StreamMatcher`` in *any* segmentation — empty segments, 1-byte dribbles,
 arbitrary random splits — is bit-identical to ``Matcher.membership_batch``
-on the whole document, on every backend and on 1 and 8 simulated devices
+on the whole document, on every backend and on every simulated mesh shape:
+1x1, 2x4, 4x2 and 8x1 (doc x chunk), uniform and capacity-weighted
 (tests/conftest.py forces 8 host devices).  A hypothesis property test
 drives the same invariant when hypothesis is installed; the seeded random
 sweep below always runs.
@@ -25,10 +26,13 @@ PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
 ALPHABET = list(b"abxy0189")
 
 
-def _mesh_or_skip(d):
-    if len(jax.devices()) < d:
-        pytest.skip(f"needs {d} host devices (conftest forces 8)")
-    return make_matcher_mesh(d)
+def _mesh_or_skip(shape):
+    if isinstance(shape, int):
+        shape = (1, shape)
+    n = shape[0] * shape[1]
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices (conftest forces 8)")
+    return make_matcher_mesh(shape=shape)
 
 
 def _docs(rng, sizes):
@@ -53,15 +57,21 @@ def _feed_stream(sm, doc, segments):
 # tentpole: segment-split invariance on every backend, 1 and 8 devices
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend,devices", [
-    ("local", 1), ("pallas", 1), ("sharded", 1), ("sharded", 8)])
-def test_segment_split_invariance(backend, devices):
-    rng = np.random.default_rng(40 + devices)
+@pytest.mark.parametrize("backend,shape", [
+    ("local", None), ("pallas", None),
+    ("sharded", (1, 1)), ("sharded", (2, 4)), ("sharded", (4, 2)),
+    ("sharded", (8, 1))])
+def test_segment_split_invariance(backend, shape):
+    devices = 1 if shape is None else shape[0] * shape[1]
+    rng = np.random.default_rng(40 + devices + (0 if shape is None
+                                                else shape[0]))
     dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
     kwargs = {}
     if backend == "sharded":
-        kwargs = {"mesh": _mesh_or_skip(devices),
-                  "capacities": synthetic_capacities(devices)}
+        # capacity profile skewed within mesh rows: the 2-D weighted layouts
+        # genuinely differ per doc row-block
+        caps = np.random.default_rng(5).uniform(0.6, 1.8, size=devices)
+        kwargs = {"mesh": _mesh_or_skip(shape), "capacities": caps}
     m = Matcher(dfas, num_chunks=8, batch_tile=8, backend=backend, **kwargs)
     docs = _docs(rng, [0, 1, 2, 31, 32, 100, 400, 999])
     want = m.membership_batch(docs)
@@ -222,6 +232,43 @@ def test_max_delay_policy_bounds_latency():
     s1.feed(b"ab")                       # 2nd subsequent feed: forced tick
     assert sm.stats.ticks == 1
     s0.close(), s1.close()
+
+
+def test_max_delay_s_policy_wall_clock_deadline():
+    """The wall-clock deadline dispatches once the oldest pending segment has
+    waited ``max_delay_s`` seconds (evaluated at admission; a fake clock
+    keeps the test deterministic)."""
+    m = Matcher([make_search_dfa(compile_regex(PATTERNS[1]))])
+    policy = TickPolicy(max_batch=100, max_delay=0, max_delay_s=10.0)
+    assert not policy.eager          # wall-clock deadline disables eager
+    now = [0.0]
+    sm = StreamMatcher(m, policy=policy, clock=lambda: now[0])
+    s0, s1 = sm.open(), sm.open()
+    s0.feed(b"ab")                   # pending since t=0
+    now[0] = 9.0
+    s1.feed(b"ba")                   # 9s < 10s: still waiting
+    assert sm.stats.ticks == 0
+    now[0] = 10.5
+    s1.feed(b"ab")                   # oldest has waited 10.5s: forced tick
+    assert sm.stats.ticks == 1
+    # decisions stay exact across the deadline-driven ticks
+    np.testing.assert_array_equal(
+        s0.close().final_states, m.membership_batch([b"ab"]).final_states[0])
+    np.testing.assert_array_equal(
+        s1.close().final_states,
+        m.membership_batch([b"baab"]).final_states[0])
+    # event-count and wall-clock deadlines compose: whichever trips first
+    sm2 = StreamMatcher(m, policy=TickPolicy(max_batch=100, max_delay=2,
+                                             max_delay_s=1e9))
+    t0, t1 = sm2.open(), sm2.open()
+    t0.feed(b"ab")
+    t1.feed(b"ba")
+    assert sm2.stats.ticks == 0
+    t1.feed(b"ab")                   # 2nd subsequent feed event
+    assert sm2.stats.ticks == 1
+    t0.close(), t1.close()
+    with pytest.raises(ValueError):
+        TickPolicy(max_delay_s=-1.0)
 
 
 def test_full_tiles_reach_full_occupancy():

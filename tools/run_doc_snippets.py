@@ -1,0 +1,48 @@
+"""Execute the ```python code blocks of markdown files, in order.
+
+Usage:  PYTHONPATH=src python tools/run_doc_snippets.py README.md [more.md]
+
+Each file's blocks run top-to-bottom in one shared namespace (so a later
+snippet may use names a previous one defined), with asserts enabled — this
+is what keeps documentation code from rotting: the CI docs job and
+tests/test_doc_snippets.py both run it.  Only ```python fences execute;
+```bash / ```text / plain fences are ignored.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def python_blocks(text: str) -> list[str]:
+    return [m.group(1) for m in FENCE.finditer(text)]
+
+
+def run_file(path: Path) -> int:
+    blocks = python_blocks(path.read_text())
+    ns: dict = {"__name__": f"doc_snippets:{path.name}"}
+    for i, block in enumerate(blocks):
+        print(f"[{path}] running python block {i + 1}/{len(blocks)} "
+              f"({len(block.splitlines())} lines)")
+        code = compile(block, f"{path}:block{i + 1}", "exec")
+        exec(code, ns)  # noqa: S102 - executing our own documentation
+    return len(blocks)
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    total = 0
+    for arg in argv:
+        total += run_file(Path(arg))
+    print(f"OK: {total} snippet(s) from {len(argv)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
