@@ -5,6 +5,14 @@ Wall-clock numbers are single-host CPU (this container); the paper's *model*
 quantities (work-based speedup, gamma, I_max reduction) are hardware-
 independent and are the reproduction targets.  See EXPERIMENTS.md
 §Paper-validation for the comparison against the paper's claims.
+
+Bench-path rule: *throughput* benchmarks (batch_throughput,
+capacity_balance, stream_throughput) go through the ``Matcher`` /
+``StreamMatcher`` facades only — the lane-program runtime cannot silently
+fork from what they measure.  Figure benchmarks for the paper's
+single-document algorithms use ``SpecDFAEngine`` and the
+``engine.baselines`` primitives (``sequential_state`` /
+``match_chunks_lanes``) — those *are* their subject.
 """
 
 from __future__ import annotations
@@ -325,7 +333,9 @@ def bench_batch_throughput(n_docs: int = 64, doc_len: int = 512) -> None:
     them.  doc_len=512 is the corpus-filtering regime where dispatch
     overhead, not matching compute, bounds per-document scanning.
     """
-    from repro.core import BatchMatcher, compile_regex, make_search_dfa
+    # the facade is the bench path: the lane-program runtime cannot fork
+    # from what this measures (BatchMatcher is only a deprecation shim)
+    from repro.core import Matcher, compile_regex, make_search_dfa
     from repro.core.patterns import PCRE_PATTERNS
 
     rng = np.random.default_rng(7)
@@ -339,10 +349,10 @@ def bench_batch_throughput(n_docs: int = 64, doc_len: int = 512) -> None:
 
     us_bn_by_k = {}
     for k in (1, 8):
-        bm = BatchMatcher(dfas[:k], num_chunks=8, batch_tile=n_docs)
+        bm = Matcher(dfas[:k], num_chunks=8, batch_tile=n_docs)
         bm.membership_batch(docs)  # compile + warm buckets
         # best-case per-document baseline: a 1-row tile (no row padding)
-        bm1 = BatchMatcher(dfas[:k], num_chunks=8, batch_tile=1)
+        bm1 = Matcher(dfas[:k], num_chunks=8, batch_tile=1)
         bm1.membership_batch(docs[:1])
 
         us_b1 = time_us(
@@ -370,7 +380,8 @@ def bench_batch_throughput(n_docs: int = 64, doc_len: int = 512) -> None:
 # --------------------------------------------------------------------------
 
 def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
-                            stream_counts: tuple[int, ...] = (64, 256)) -> None:
+                            stream_counts: tuple[int, ...] = (64, 256),
+                            smoke: bool = False) -> None:
     """Throughput of the streaming runtime vs the one-shot batch pipeline.
 
     N concurrent streams each deliver a ``doc_len``-byte document in
@@ -390,16 +401,28 @@ def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
 
     Derived columns per (streams, policy): segments/sec, bytes/sec, the
     bytes/sec ratio to the one-shot baseline (acceptance: >= 0.5x at 256
-    streams), and per-tick batch occupancy (real segments per padded device
-    row; >= 0.5 target).
+    streams), per-tick batch occupancy (real segments per padded device
+    row; >= 0.5 target), and ``host_ms_per_tick`` — wall milliseconds per
+    scheduler tick, the metric the on-device merge keeps flat as stream
+    counts grow (the pre-refactor per-stream host composition scaled it
+    linearly in N).
+
+    **Host-merge regression guard**: the tick path must perform *zero*
+    per-stream host merges (``streaming.cursor.merge_calls``) — the run
+    aborts with a nonzero exit if any sneak back in (``--smoke`` CI job).
+    ``smoke=True`` shrinks sizes for CI.
     """
     from repro.core import Matcher, compile_regex, make_search_dfa
     from repro.core.patterns import PCRE_PATTERNS
     from repro.streaming import StreamMatcher, TickPolicy
+    from repro.streaming.cursor import merge_calls
 
+    if smoke:
+        doc_len, seg_len, stream_counts = 512, 128, (32,)
     rng = np.random.default_rng(13)
     pats = list(PCRE_PATTERNS.values())[:4]
     dfas = [make_search_dfa(compile_regex(".*(" + p + ")")) for p in pats]
+    merges_before = merge_calls()
 
     for n_streams in stream_counts:
         docs = [rng.integers(0, 256, size=doc_len, dtype=np.uint8).tobytes()
@@ -435,7 +458,12 @@ def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
                 np.array_equal(got[i].final_states, want.final_states[i])
                 for i in range(n_streams))
 
-            us_stream = time_us(run_streams, repeats=2)
+            repeats, warmup = 2, 1
+            ticks_before = sm.stats.ticks
+            us_stream = time_us(run_streams, repeats=repeats, warmup=warmup)
+            # ticks accumulate over every timed+warmup run of the closure
+            ticks = max((sm.stats.ticks - ticks_before) // (repeats + warmup),
+                        1)
             segs = n_streams * n_rounds
             bs_stream = total_bytes / (us_stream / 1e6)
             tag = f"stream_throughput/S{n_streams}/{policy_name}"
@@ -444,3 +472,15 @@ def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
             emit(f"{tag}/bytes_per_s", 0.0, bs_stream)
             emit(f"{tag}/occupancy", 0.0, sm.stats.occupancy)
             emit(f"{tag}/vs_batch", 0.0, bs_stream / max(bs_batch, 1e-9))
+            # wall ms per scheduler tick over the timed repeats (the timed
+            # run re-opens its own streams; ticks delta tracks only those)
+            emit(f"{tag}/host_ms_per_tick", 0.0, us_stream / 1e3 / ticks)
+
+    host_merges = merge_calls() - merges_before
+    emit("stream_throughput/host_merges_on_tick_path", 0.0,
+         float(host_merges))
+    if host_merges:
+        raise SystemExit(
+            f"host-merge regression: the streaming tick path performed "
+            f"{host_merges} per-stream host merges (must be 0 — composition "
+            "belongs on device; see streaming.cursor.merge_calls)")

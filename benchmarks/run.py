@@ -10,6 +10,7 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -20,6 +21,9 @@ def main() -> None:
                     help="skip the 10M-symbol scaling points")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: tiny inputs, regression guards still "
+                         "enforced (benchmarks that accept smoke=)")
     args = ap.parse_args()
 
     from . import paper_figs as pf
@@ -48,7 +52,10 @@ def main() -> None:
         sys.stderr.write(f"[bench] {name}\n")
         if args.quick and name == "input_scaling":
             continue
-        fn()
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
+        fn(**kwargs)
     sys.stderr.write(f"[bench] total {time.time() - t0:.1f}s\n")
 
 

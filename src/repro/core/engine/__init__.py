@@ -2,40 +2,52 @@
 
 Module map — how a membership query flows through the layers:
 
-    spec.py       SpecDFAEngine: the paper's single-document speculative
-                  membership test (Sec. 4.1, Eqs. 2–8, Alg. 2/3 + Holub–Stekr
-                  baseline).  Also home of the jitted primitives
-                  ``sequential_state`` / ``match_chunks_lanes``.
     plan.py       Planner layer: spec-vs-seq split, sticky shape bucketing,
                   chunk partitioning + capacity weighting (Eqs. 1–7 via
                   core.partition / core.profiling), lookahead-table selection
-                  (``DeviceTables``).  Pure numpy; emits an explicit
-                  ``MatchPlan``.
-    executors.py  Executor protocol + ``LocalExecutor`` (jitted jnp reference
-                  and fused Pallas kernel backends), on-device byte->class
-                  classification, absorbing-state early exit.
-    sharded.py    ``ShardedExecutor``: the 2-D ("doc", "chunk") mesh backend
-                  via shard_map — document rows sharded over "doc", chunk
-                  lanes over "chunk", capacity-weighted boundaries per doc
-                  row-block; the per-chunk L-vector lane states are
+                  (``DeviceTables``) — and the ``LanePlan``: the one stage
+                  description (classify -> entry-seed -> chunk-scan ->
+                  merge) every backend lowers.  Pure numpy; emits an
+                  explicit ``MatchPlan`` per batch.
+    executors.py  ``Executor`` protocol (``run(plan, ...)``) +
+                  ``LaneExecutor`` shared stage implementations +
+                  ``LocalExecutor`` (jitted jnp reference and fused Pallas
+                  kernel lowerings), on-device byte->class classification,
+                  absorbing-state early exit, the device cursor merge.
+    sharded.py    ``ShardedExecutor``: the 2-D ("doc", "chunk") mesh
+                  lowering via shard_map — document rows sharded over "doc",
+                  chunk lanes over "chunk", capacity-weighted boundaries per
+                  doc row-block; the per-chunk L-vector lane states are
                   all_gathered over "chunk" only before the Eq. 8 merge
                   (doc shards never communicate).
     facade.py     ``Matcher``: packs patterns, owns a Planner + an executor
                   backend ("local" | "pallas" | "sharded"), exposes
-                  ``membership_batch`` (whole documents) and
+                  ``membership_batch`` (whole documents),
                   ``advance_segments`` (the streaming runtime's resumable
-                  segment tick — see ``repro.streaming``); ``BatchMatcher``
+                  segment tick) and ``advance_cursors`` (the candidate-keyed
+                  device merge — see ``repro.streaming``); ``BatchMatcher``
                   compat shim.
+    baselines.py  The paper's per-document reference implementations
+                  (Sec. 4.1, Eqs. 2–8, Alg. 2/3 + Holub–Stekr baseline,
+                  ``sequential_state`` / ``match_chunks_lanes``) — the
+                  figure-reproduction targets and verification oracles.
+    spec.py       ``SpecDFAEngine`` compatibility shim: per-document modes
+                  inherit the baselines, batched matching delegates to the
+                  facade; no logic of its own.
 
 Adding an executor backend: see docs/architecture.md ("Adding an executor
-backend") — implement the ``executors.Executor`` protocol over the shared
-``DeviceTables`` bundle and route it from ``Matcher.__init__``; results must
-stay bit-identical to sequential matching.
+backend") — lower the one ``LanePlan`` (subclass ``executors.LaneExecutor``
+and implement ``_lower``) over the shared ``DeviceTables`` bundle and route
+it from ``Matcher.__init__``; results must stay bit-identical to sequential
+matching.
 """
 
-from .executors import Executor, LocalExecutor
-from .facade import BatchMatcher, BatchResult, Matcher, SegmentBatchResult
-from .plan import (BucketPlan, ChunkLayout, DeviceTables, MatchPlan,
+from .baselines import PaperSpecEngine
+from .executors import Executor, LaneExecutor, LocalExecutor
+from .facade import (BatchMatcher, BatchResult, CursorBatchResult, Matcher,
+                     SegmentBatchResult)
+from .plan import (ENTRY_LANES, ENTRY_STARTS, ENTRY_STATES, BucketPlan,
+                   ChunkLayout, DeviceTables, LanePlan, MatchPlan,
                    MeshLayout, Planner, expand_device_weights,
                    layout_device_work, next_pow2)
 from .sharded import ShardedExecutor
@@ -43,11 +55,12 @@ from .spec import (VPU_LANES, MatcherFn, MatchResult, SpecDFAEngine,
                    match_chunks_lanes, sequential_state)
 
 __all__ = [
-    "MatchResult", "BatchResult", "SegmentBatchResult", "SpecDFAEngine",
-    "BatchMatcher", "Matcher",
+    "MatchResult", "BatchResult", "SegmentBatchResult", "CursorBatchResult",
+    "SpecDFAEngine", "PaperSpecEngine", "BatchMatcher", "Matcher",
     "sequential_state", "match_chunks_lanes", "VPU_LANES", "MatcherFn",
     "Planner", "MatchPlan", "BucketPlan", "ChunkLayout", "MeshLayout",
-    "DeviceTables",
+    "DeviceTables", "LanePlan",
+    "ENTRY_STARTS", "ENTRY_STATES", "ENTRY_LANES",
     "expand_device_weights", "layout_device_work", "next_pow2",
-    "Executor", "LocalExecutor", "ShardedExecutor",
+    "Executor", "LaneExecutor", "LocalExecutor", "ShardedExecutor",
 ]

@@ -1,0 +1,318 @@
+"""Paper baselines: the per-document speculative membership test, in JAX.
+
+This module is the faithful single-document reference of the paper's
+algorithms — the figure-reproduction target (``benchmarks/paper_figs.py``)
+and the oracle the production lane-program runtime (``plan.py`` /
+``executors.py`` / ``facade.py``) is verified against.  The public
+``SpecDFAEngine`` compatibility shim (``engine/spec.py``) delegates its
+per-document modes here and its batched path to the ``Matcher`` facade; no
+production code path runs through this module.
+
+Flow (Sec. 4.1 steps 2–4):
+
+  1. partition the class stream into chunks,
+  2. derive each chunk's reverse-lookahead class (last class of the previous
+     chunk) and its candidate initial states (Eq. 11 tables),
+  3. match all chunks x candidate lanes in one ``lax.scan`` over symbols
+     (the vectorized matching loop of Listing 2 — lanes = chunks x candidates,
+     8x128-wide on the TPU VPU instead of AVX2's 8),
+  4. fold the compressed L-vectors from the known start state (Eq. 8), with
+     the sink absorbing.
+
+Partition models (DESIGN.md §2):
+
+  * ``balanced`` (paper-faithful, Eqs. 2–7): chunk 0 is ``m``x longer and is
+    matched *exactly* (one state); the C-1 speculative chunks are equal-length.
+    Scalar per-processor work is balanced -> failure-free on scalar cores.
+  * ``uniform``: equal chunks, speculative lanes ride the vector unit.  On
+    lane-parallel hardware matching m states costs the same wall time as one,
+    so uniform chunks are optimal there (time = n/C steps); this is the
+    SPMD/TPU-native layout and a beyond-paper observation recorded in §Perf.
+
+Modes:
+  * ``lookahead``  — paper Alg. 3 (I_max candidate lanes).      [default]
+  * ``basic``      — paper Alg. 2 (all |Q| lanes, chunk 0 knows q0).
+  * ``holub``      — Holub–Stekr [19] baseline: full [Q]->[Q] maps per chunk,
+                     merged associatively; O(n|Q|/|P|) work, used by Fig. 11.
+
+The matcher callable is pluggable so the Pallas kernels (kernels/ops.py) slot
+in; the pure-jnp path below is their oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..automata import DFA
+from ..lookahead import LookaheadTables, build_lookahead_tables
+from ..lvector import merge_scan_jnp
+
+__all__ = ["MatchResult", "PaperSpecEngine", "sequential_state",
+           "match_chunks_lanes", "VPU_LANES", "MatcherFn"]
+
+VPU_LANES = 1024  # 8 sublanes x 128 lanes of int32 on a TPU core
+
+
+@dataclasses.dataclass
+class MatchResult:
+    final_state: int
+    accepted: bool
+    work_parallel: int    # scalar-model: max symbols matched by any processor
+    work_sequential: int  # n — the sequential matcher's symbol count
+    time_steps: int       # lane-parallel model: wall-clock matching steps
+    mode: str
+
+    @property
+    def model_speedup(self) -> float:
+        """Scalar-work speedup proxy (the paper's time-unit model, Sec. 3)."""
+        return self.work_sequential / max(self.work_parallel, 1)
+
+    @property
+    def lane_speedup(self) -> float:
+        return self.work_sequential / max(self.time_steps, 1)
+
+
+# --------------------------------------------------------------------------
+# jit kernels (pure-jnp reference path)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def sequential_state(table: jnp.ndarray, classes: jnp.ndarray, start: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1 matching loop: one gather per symbol."""
+
+    def step(s, cls):
+        return table[s, cls], None
+
+    final, _ = jax.lax.scan(step, jnp.asarray(start, jnp.int32), classes)
+    return final
+
+
+def match_chunks_lanes(table: jnp.ndarray, chunk_classes: jnp.ndarray,
+                       init_states: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized matching of [C] chunks x [S] speculative lanes.
+
+    chunk_classes: [C, L] int32;  init_states: [C, S] int32.
+    Returns final states [C, S].  One scan over L; each step is a batched
+    2-D gather — the TPU analogue of the AVX2 gather loop (Listing 2).
+    """
+    sym_major = chunk_classes.T  # [L, C]
+
+    def step(states, cls_row):  # states [C, S], cls_row [C]
+        nxt = table[states, cls_row[:, None]]
+        return nxt, None
+
+    final, _ = jax.lax.scan(step, init_states.astype(jnp.int32), sym_major)
+    return final
+
+
+@functools.partial(jax.jit, static_argnames=("sink",))
+def _merge_compressed_jnp(start_state: jnp.ndarray, lvecs: jnp.ndarray,
+                          cand_index: jnp.ndarray, lookahead_cls: jnp.ndarray,
+                          sink: int) -> jnp.ndarray:
+    """Eq. 8 fold over compressed per-chunk results from a known start state.
+
+    lvecs[i] holds chunk i's final state per candidate lane; lookahead_cls[i]
+    selects the candidate list.  The carried state is always a candidate of
+    the next chunk (Eq. 11) unless it is the absorbing sink.
+    """
+
+    def step(s, xs):
+        lv, la = xs
+        lane = cand_index[la, s]
+        nxt = jnp.where(lane < 0, jnp.int32(sink if sink >= 0 else 0),
+                        lv[jnp.maximum(lane, 0)])
+        if sink >= 0:
+            nxt = jnp.where(s == sink, jnp.int32(sink), nxt)
+        return nxt.astype(jnp.int32), None
+
+    final, _ = jax.lax.scan(step, jnp.asarray(start_state, jnp.int32),
+                            (lvecs, lookahead_cls))
+    return final
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+MatcherFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+class PaperSpecEngine:
+    """End-to-end speculative membership test for one DFA (paper reference).
+
+    Parameters
+    ----------
+    dfa          : complete DFA (core.automata).
+    num_chunks   : processor count P (defaults to 8; the distributed wrapper
+                   multiplies this by the mesh data extent).
+    mode         : "lookahead" | "basic" | "holub".
+    partition    : "balanced" (paper Eqs. 2–7) | "uniform" (SPMD lanes).
+    weights      : optional per-processor capacity weights (Eq. 1).
+    matcher      : optional replacement for the chunk matcher (Pallas kernel).
+    """
+
+    def __init__(self, dfa: DFA, *, num_chunks: int = 8, mode: str = "lookahead",
+                 partition: str = "balanced", weights: Optional[np.ndarray] = None,
+                 matcher: Optional[MatcherFn] = None, lookahead_r: int = 1):
+        if mode not in ("lookahead", "basic", "holub"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if partition not in ("balanced", "uniform"):
+            raise ValueError(f"unknown partition {partition!r}")
+        if lookahead_r not in (1, 2):
+            raise ValueError("runtime lookahead_r must be 1 or 2 (Sec. 4.3)")
+        self.dfa = dfa
+        self.mode = mode
+        self.lookahead_r = lookahead_r if mode == "lookahead" else 1
+        self.partition = "uniform" if mode == "holub" else partition
+        self.num_chunks = int(num_chunks)
+        self.weights = (np.ones(self.num_chunks) if weights is None
+                        else np.asarray(weights, dtype=np.float64))
+        if self.weights.shape != (self.num_chunks,):
+            raise ValueError("weights must have one entry per chunk")
+        self.tables: LookaheadTables = build_lookahead_tables(
+            dfa, r=self.lookahead_r)
+        self.matcher: MatcherFn = matcher or match_chunks_lanes
+
+        self._table_j = jnp.asarray(dfa.table)
+        self._cand_j = jnp.asarray(self.tables.candidates)
+        self._cidx_j = jnp.asarray(self.tables.cand_index)
+        self._all_states = jnp.arange(dfa.n_states, dtype=jnp.int32)
+        self._matcher_jit = jax.jit(self.matcher)
+
+    # -- public API ---------------------------------------------------------
+
+    @property
+    def gamma(self) -> float:
+        return self.tables.gamma
+
+    @property
+    def i_max(self) -> int:
+        return self.tables.i_max
+
+    @property
+    def lanes_per_chunk(self) -> int:
+        return self.dfa.n_states if self.mode in ("basic", "holub") else self.tables.i_max
+
+    def classes(self, data: bytes | np.ndarray) -> np.ndarray:
+        return self.dfa.classes_of(data).astype(np.int32)
+
+    def membership_sequential(self, data: bytes | np.ndarray) -> MatchResult:
+        cls = jnp.asarray(self.classes(data))
+        final = int(sequential_state(self._table_j, cls, self.dfa.start))
+        n = int(cls.shape[0])
+        return MatchResult(final, bool(self.dfa.accepting[final]), n, n, n, "sequential")
+
+    def membership(self, data: bytes | np.ndarray) -> MatchResult:
+        cls_np = self.classes(data)
+        n = int(cls_np.shape[0])
+        p = self.num_chunks
+        m = self.lanes_per_chunk
+        if p <= 1 or n < 4 * p:
+            return self.membership_sequential(data)
+        if self.partition == "uniform":
+            final, work, steps = self._run_uniform(cls_np)
+        else:
+            final, work, steps = self._run_balanced(cls_np, m)
+        final_i = int(final)
+        return MatchResult(final_i, bool(self.dfa.accepting[final_i]), work, n,
+                           steps, self.mode)
+
+    def accepts(self, data: bytes | np.ndarray) -> bool:
+        return self.membership(data).accepted
+
+    # -- partition bodies -----------------------------------------------------
+
+    def _run_balanced(self, cls_np: np.ndarray, m: int) -> tuple[jnp.ndarray, int, int]:
+        """Paper Eqs. 2–7: exact chunk 0 of length ~m*L, C-1 speculative chunks.
+
+        Speculative chunks are forced equal-length (L_spec) for the SPMD
+        matcher; chunk 0 absorbs the rounding remainder.  With capacity
+        weights w, L0 follows Eq. 5 with the w-weighted denominator.
+        """
+        n = cls_np.shape[0]
+        p = self.num_chunks
+        w = self.weights
+        l0 = n * m / (w[0] * m + w[1:].sum())  # Eq. 5
+        l_spec = max(1, int(np.floor(l0 / m * (w[1:].mean() if p > 1 else 1.0))))
+        l_spec = min(l_spec, (n - 1) // max(p - 1, 1))
+        l0_int = n - (p - 1) * l_spec
+        if l0_int <= 0 or l_spec <= 0:
+            seq = self.membership_sequential(cls_np)
+            return jnp.int32(seq.final_state), seq.work_parallel, seq.time_steps
+
+        head = jnp.asarray(cls_np[:l0_int])
+        body = jnp.asarray(cls_np[l0_int:]).reshape(p - 1, l_spec)
+        final0 = sequential_state(self._table_j, head, self.dfa.start)
+
+        la = jnp.concatenate([jnp.asarray(cls_np[l0_int - 1 : l0_int]), body[:-1, -1]])
+        if self.lookahead_r == 2:
+            if l0_int < 2 or l_spec < 2:
+                seq = self.membership_sequential(cls_np)
+                return jnp.int32(seq.final_state), seq.work_parallel, seq.time_steps
+            prev = jnp.concatenate(
+                [jnp.asarray(cls_np[l0_int - 2 : l0_int - 1]), body[:-1, -2]])
+            la = prev * self.dfa.n_classes + la
+        cand, lanes = self._candidates(la, body.shape[0])
+        lvecs = self._matcher_jit(self._table_j, body, cand)  # [C-1, S]
+        if self.mode == "basic":
+            def step(s, lv):
+                return lv[s], None
+            final, _ = jax.lax.scan(step, final0, lvecs)
+        else:
+            final = _merge_compressed_jnp(final0, lvecs, self._cidx_j, la, self.dfa.sink)
+        work = max(l0_int, l_spec * lanes)          # scalar-processor model
+        steps = max(l0_int, l_spec)                 # lane-parallel model
+        return final, work, steps
+
+    def _run_uniform(self, cls_np: np.ndarray) -> tuple[jnp.ndarray, int, int]:
+        n = cls_np.shape[0]
+        c = self.num_chunks
+        l = n // c
+        body = jnp.asarray(cls_np[: l * c]).reshape(c, l)
+
+        if self.mode == "holub":
+            q = self.dfa.n_states
+            init = jnp.broadcast_to(self._all_states, (c, q))
+            maps = self._matcher_jit(self._table_j, body, init)
+            final = merge_scan_jnp(maps)[-1][self.dfa.start]
+            work, lanes = l * q, q
+        else:
+            la = jnp.concatenate([jnp.zeros((1,), jnp.int32), body[:-1, -1]])
+            if self.lookahead_r == 2:
+                if l < 2:
+                    seq = self.membership_sequential(cls_np)
+                    return jnp.int32(seq.final_state), seq.work_parallel, l
+                prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), body[:-1, -2]])
+                la = prev * self.dfa.n_classes + la
+            cand, lanes = self._candidates(la, c)
+            # chunk 0 knows q0: all its lanes hold q0 (idle-lane duplicates)
+            cand = cand.at[0].set(jnp.full((cand.shape[1],), self.dfa.start, jnp.int32))
+            lvecs = self._matcher_jit(self._table_j, body, cand)
+            if self.mode == "basic":
+                def step(s, lv):
+                    return lv[s], None
+                s0 = lvecs[0, self.dfa.start]
+                final, _ = jax.lax.scan(step, s0, lvecs[1:])
+            else:
+                final = _merge_compressed_jnp(lvecs[0, 0], lvecs[1:], self._cidx_j,
+                                              la[1:], self.dfa.sink)
+            work = l * lanes
+
+        if l * c < n:  # sequential tail for the remainder
+            tail = jnp.asarray(cls_np[l * c:])
+            final = sequential_state(self._table_j, tail, final)
+            work += n - l * c
+        return final, work, l + (n - l * c)
+
+    def _candidates(self, la: jnp.ndarray, c: int) -> tuple[jnp.ndarray, int]:
+        if self.mode == "basic":
+            q = self.dfa.n_states
+            return jnp.broadcast_to(self._all_states, (c, q)), q
+        return self._cand_j[la], self.tables.i_max

@@ -1,89 +1,106 @@
-"""Executor layer: interchangeable device backends behind one protocol.
+"""Executor layer: one lane program, lowered per backend.
 
-An executor turns one ``BucketPlan`` worth of documents into ``[B, K]`` final
-packed states.  All backends consume the same inputs —
+The matching operation is a single inner loop — indexed transition-table
+loads over chunk lanes — and the planner describes it once as a ``LanePlan``
+(classify -> entry-seed -> chunk-scan -> merge; see ``engine.plan``).  An
+executor backend is a *lowering* of that one plan, not a family of
+hand-rolled variants: every backend exposes exactly
+
+    run(plan, bytes_buf, lengths, *, layout=None, entry=None,
+        entry_classes=None) -> (finals, absorbed_pos)
+
+and lowers a plan at most once (``lower``; compiled programs are cached by
+``plan.key``).  All lowerings consume the same operands —
 
   * ``bytes_buf [B, W] uint8``  — raw document bytes, zero-padded (byte ->
     class classification happens **on device**, fused into the bucket call;
     ``kernels.ref.classify_pad_ref`` is the host oracle),
   * ``lengths [B] int32``       — real byte counts (positions beyond a
     document's length classify to the identity pad class),
-  * a ``ChunkLayout``           — the planner's chunk boundaries,
+  * ``layout``                  — the planner's ``ChunkLayout``/``MeshLayout``
+    for spec plans,
+  * ``entry``                   — per-row entry operand selected by
+    ``plan.entry``: absent (``ENTRY_STARTS``), exact ``[B, K]`` states
+    (``ENTRY_STATES``), or ``[B, K, S]`` cursor lanes plus ``entry_classes
+    [B]`` boundary classes (``ENTRY_LANES`` — the streaming device merge),
 
-and must be bit-identical to per-document sequential matching.
+and must be bit-identical to per-document sequential matching.  The return
+is ``(finals [B, K], absorbed_pos [B])`` — or ``([B, K, S], pos)`` for lane
+plans — where ``absorbed_pos`` is the scan position (chunk-local for spec,
+stream for seq) at which every lane of a document became absorbing, or the
+``NO_EXIT`` sentinel.
 
-Backends:
+Backends (the three lowerings):
 
-  * ``LocalExecutor``                 — pure-jnp jitted path (the oracle),
-    with an absorbing-state early exit: the symbol scan runs in segments
-    inside a ``lax.while_loop`` and stops once every lane of every document
-    is absorbing (sink or absorbing accept) — further symbols cannot change
-    any state, so the remaining segments are skipped entirely.  Per-document
-    absorption positions are returned so the facade can report
-    ``early_exits``.
+  * ``LocalExecutor``                  — pure-jnp jitted lowering (the
+    oracle), with an absorbing-state early exit: the symbol scan runs in
+    segments inside a ``lax.while_loop`` and stops once every lane of every
+    document is absorbing.
   * ``LocalExecutor(use_kernel=True)`` — the fused Pallas kernel
-    (``kernels.ops.spec_match_merge``) for the speculative path (no early
-    exit inside the kernel; the batched sequential path still exits early).
-  * ``engine.sharded.ShardedExecutor`` — the mesh-sharded backend (own
-    module).
+    (``kernels.ops.spec_match_merge``) for exact-entry spec plans, wrapped
+    in an **all-absorbed bucket early exit**: when every row of the bucket
+    is already absorbed (or empty), the kernel dispatch is skipped entirely
+    — absorbing states self-loop, so returning the entry states is exact.
+    Lane plans lower to the shared jnp stages (the kernel's in-kernel merge
+    folds to exact finals, not lane maps).
+  * ``engine.sharded.ShardedExecutor`` — the ("doc", "chunk") mesh lowering
+    (own module).
 
-The protocol: ``run_spec(buf, lengths, layout)`` / ``run_seq(buf, lengths)``
-both return ``(finals [B, K], absorbed_pos [B])`` where ``absorbed_pos`` is
-the scan position (chunk-local for spec, stream for seq) at which the
-document's lanes all became absorbing, or a sentinel >= the scan length.
-``traces`` counts jit retraces (side effect fires at trace time only).
-
-**Segment entry (the streaming runtime)**: ``run_seq_entry`` /
-``run_spec_entry`` additionally take per-document entry states ``[B, K]`` and
-start matching there instead of at the pattern starts — chunk 0 of the
-speculative path becomes "exact from the entry states".  This is what makes
-matching *resumable*: a ``streaming.MatchCursor`` carries the states across
-segment boundaries and the composition is bit-identical to matching the
-concatenated stream in one shot (Eq. 8 is associative; cf. simultaneous-FA
-transition composition, arXiv:1405.0562).
+**Entry seeding** is one stage, not separate entry points: chunk 0 (and any
+chunk at stream position 0) seeds from the pattern starts, the caller's
+exact states, or the Eq. 11 candidate rows of each row's boundary class.
+``ENTRY_STATES`` is what makes matching *resumable* (a ``streaming
+.MatchCursor`` carries states across segment boundaries); ``ENTRY_LANES``
+additionally keeps the candidate lane axis and fuses the Eq. 8 cursor
+composition (``kernels.ref.cursor_merge_ref``) into the same device call —
+the streaming tick's device merge.  ``traces`` counts jit retraces (the
+side effect fires at trace time only).
 """
 
 from __future__ import annotations
 
-from typing import Protocol
+from typing import Optional, Protocol
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from .plan import ChunkLayout, DeviceTables
+from .plan import (ENTRY_LANES, ENTRY_STARTS, ENTRY_STATES, DeviceTables,
+                   LanePlan)
 
-__all__ = ["Executor", "LocalExecutor", "NO_EXIT"]
+__all__ = ["Executor", "LaneExecutor", "LocalExecutor", "NO_EXIT"]
 
 NO_EXIT = np.int32(2 ** 30)  # absorbed_pos sentinel: never fully absorbed
 
 
 class Executor(Protocol):
+    """The one-method backend protocol: lower and run a ``LanePlan``."""
+
     traces: int
 
-    def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                 layout: ChunkLayout) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+    def run(self, plan: LanePlan, bytes_buf: jnp.ndarray,
+            lengths: jnp.ndarray, *, layout=None,
+            entry: Optional[jnp.ndarray] = None,
+            entry_classes: Optional[jnp.ndarray] = None
+            ) -> tuple[jnp.ndarray, jnp.ndarray]: ...
 
-    def run_seq(self, bytes_buf: jnp.ndarray,
-                lengths: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
-
-    def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                       layout: ChunkLayout, entry: jnp.ndarray
-                       ) -> tuple[jnp.ndarray, jnp.ndarray]: ...
-
-    def run_seq_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                      entry: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
-
-    def steps_for(self, layout: ChunkLayout) -> int: ...
+    def steps_for(self, layout) -> int: ...
 
 
 def _prev_pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (n.bit_length() - 1)
 
 
-class _ExecutorBase:
-    """Shared on-device classify + batched sequential scan (all backends)."""
+class LaneExecutor:
+    """Shared lane-program stages plus the lowering cache (all backends).
+
+    Subclasses override ``_lower`` (and, when compiled programs depend on
+    more than the plan — e.g. the sharded backend's per-batch row specs —
+    ``_plan_key``).  The base class owns the stage implementations every
+    lowering composes: on-device classification, the early-exit segmented
+    scan, entry seeding, and the device cursor merge.
+    """
 
     def __init__(self, tables: DeviceTables, *, num_chunks: int,
                  early_exit_segments: int = 4):
@@ -92,11 +109,60 @@ class _ExecutorBase:
         # segments must divide the pow2 scan widths -> round down to a pow2
         self.early_exit_segments = _prev_pow2(max(int(early_exit_segments), 1))
         self.traces = 0
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._seq_fn = jax.jit(self._seq_impl, donate_argnums=donate)
-        self._seq_entry_fn = jax.jit(self._seq_entry_impl, donate_argnums=donate)
+        self._lowered: dict[tuple, object] = {}
 
-    # -- fused classification (the retired host numpy path lives in
+    # -- the one entry point ------------------------------------------------
+
+    def run(self, plan: LanePlan, bytes_buf: jnp.ndarray,
+            lengths: jnp.ndarray, *, layout=None,
+            entry: Optional[jnp.ndarray] = None,
+            entry_classes: Optional[jnp.ndarray] = None
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        fn = self.lower(plan, layout=layout, batch=int(bytes_buf.shape[0]))
+        if plan.entry == ENTRY_STARTS:
+            return fn(bytes_buf, lengths)
+        if plan.entry == ENTRY_STATES:
+            return fn(bytes_buf, lengths, entry)
+        return fn(bytes_buf, lengths, entry, entry_classes)
+
+    def lower(self, plan: LanePlan, *, layout=None, batch: int = 0):
+        """Compiled program for one plan (cached; lowering happens once)."""
+        key = self._plan_key(plan, batch)
+        fn = self._lowered.get(key)
+        if fn is None:
+            fn = self._lower(plan, layout, batch)
+            self._lowered[key] = fn
+        return fn
+
+    def _plan_key(self, plan: LanePlan, batch: int) -> tuple:
+        return plan.key
+
+    def _jit_lowering(self, body):
+        """jit a lowering body under the retrace counter and buffer donation.
+
+        ``body`` takes the plan's runtime operands positionally —
+        ``(bytes_buf, lengths[, entry[, entry_classes]])`` per
+        ``plan.entry`` — which is exactly how ``run`` calls the compiled
+        program, so one wrapper serves every entry mode.
+        """
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+
+        def impl(*args):
+            self.traces += 1  # side effect fires at trace time only
+            return body(*args)
+
+        return jax.jit(impl, donate_argnums=donate)
+
+    def _lower(self, plan: LanePlan, layout, batch: int):
+        """Backend hook: build the compiled program of one plan."""
+        if plan.kind == "seq":
+            return self._lower_seq_local(plan)
+        raise NotImplementedError("spec plans need a backend lowering")
+
+    def steps_for(self, layout) -> int:
+        return layout.lmax  # lane-parallel wall steps = longest chunk buffer
+
+    # -- stage: classify (the retired host numpy path lives in
     # kernels/ref.classify_pad_ref as the oracle) ---------------------------
 
     def _classify(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
@@ -106,10 +172,31 @@ class _ExecutorBase:
         return jnp.where(pos < lengths[:, None].astype(jnp.int32), cls,
                          jnp.int32(self.t.pad_cls))
 
-    # -- segmented scan with absorbing-state early exit ---------------------
+    # -- stage: entry seed --------------------------------------------------
+
+    def _seed_rows(self, plan: LanePlan, b: int, entry, entry_cls) -> jnp.ndarray:
+        """Entry-seed stage for sequential rows: [B, K] exact states, or
+        [B, K, S] candidate lanes for lane plans."""
+        if plan.entry == ENTRY_STARTS:
+            return jnp.broadcast_to(self.t.starts_j[None, :],
+                                    (b, self.t.n_patterns))
+        if plan.entry == ENTRY_STATES:
+            return entry.astype(jnp.int32)
+        return self.t.cand_pad_j[entry_cls]            # [B, K, S]
+
+    def _seed_chunk0(self, plan: LanePlan, b: int, entry, entry_cls) -> jnp.ndarray:
+        """Entry-seed stage for spec chunk 0: [B, 1, K, S] lanes."""
+        k, s = self.t.n_patterns, self.t.i_max
+        if plan.entry == ENTRY_LANES:
+            return self.t.cand_pad_j[entry_cls][:, None]        # [B, 1, K, S]
+        e = self._seed_rows(plan, b, entry, entry_cls)          # [B, K]
+        return jnp.broadcast_to(e[:, None, :, None], (b, 1, k, s))
+
+    # -- stage: chunk scan with absorbing-state early exit -------------------
 
     def _segmented_match(self, sym_t: jnp.ndarray, states: jnp.ndarray,
-                         eff_len: jnp.ndarray, scan_len: int
+                         eff_len: jnp.ndarray, scan_len: int,
+                         early_exit: bool = True
                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Scan ``states [R, S]`` through ``sym_t [L, R]`` symbol columns in
         segments, stopping once every document is *done*: all its lanes are
@@ -134,7 +221,7 @@ class _ExecutorBase:
             out, _ = jax.lax.scan(step, st, cols)
             return out
 
-        segs = min(self.early_exit_segments, scan_len)
+        segs = min(self.early_exit_segments if early_exit else 1, scan_len)
         pos0 = jnp.full((b,), NO_EXIT, jnp.int32)
         if segs <= 1 or scan_len == 0:
             return seg_scan(states, sym_t), pos0
@@ -159,88 +246,54 @@ class _ExecutorBase:
             cond, body, (states, jnp.int32(0), pos0, jnp.bool_(False)))
         return states, pos
 
-    # -- batched sequential path (short documents) --------------------------
+    # -- stage: device cursor merge (lane plans) -----------------------------
 
-    def _seq_entry_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                        entry: jnp.ndarray):
-        """Batched Algorithm 1 from per-document entry states [B, K].  Rows
-        are independent, so this body is also the per-shard program of the
-        sharded backend's document-axis split."""
-        w = bytes_buf.shape[1]
+    def _compose_cursor(self, cursor_lanes: jnp.ndarray,
+                        seg_lanes: jnp.ndarray,
+                        entry_cls: jnp.ndarray) -> jnp.ndarray:
+        """Eq. 8 composition of cursor lanes with a segment's lane map, on
+        device — must stay bit-identical to ``kernels.ref.cursor_merge_ref``
+        (tests/test_device_merge.py asserts so on every backend)."""
+        t = self.t
+        lane = t.cidx_pad_j[entry_cls[:, None, None], cursor_lanes]
+        hit = jnp.take_along_axis(seg_lanes, jnp.maximum(lane, 0), axis=2)
+        sk = t.sinks_j[None, :, None]
+        out = jnp.where(lane < 0, jnp.where(sk >= 0, sk, cursor_lanes), hit)
+        out = jnp.where((entry_cls == t.pad_cls)[:, None, None],
+                        cursor_lanes, out)
+        return out.astype(jnp.int32)
+
+    # -- seq lowering (shared: single-device rows; also the per-shard body
+    # of the sharded backend's document-axis split) --------------------------
+
+    def _seq_body(self, plan: LanePlan, bytes_buf: jnp.ndarray,
+                  lengths: jnp.ndarray, entry=None, entry_cls=None):
+        """Batched Algorithm 1 as a lane program: classify -> entry-seed ->
+        scan (rows are independent; the merge stage is a no-op)."""
+        b, w = bytes_buf.shape
         cls = self._classify(bytes_buf, lengths)
-        return self._segmented_match(cls.T, entry.astype(jnp.int32),
-                                     jnp.minimum(lengths, w), w)
+        init = self._seed_rows(plan, b, entry, entry_cls)
+        rows = init.reshape(b, -1).astype(jnp.int32)
+        finals, pos = self._segmented_match(cls.T, rows,
+                                            jnp.minimum(lengths, w), w,
+                                            early_exit=plan.early_exit)
+        if plan.entry == ENTRY_LANES:
+            seg = finals.reshape(b, self.t.n_patterns, self.t.i_max)
+            return self._compose_cursor(entry.astype(jnp.int32), seg,
+                                        entry_cls), pos
+        return finals, pos
 
-    def _seq_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        b = bytes_buf.shape[0]
-        s0 = jnp.broadcast_to(
-            self.t.starts_j[None, :], (b, self.t.n_patterns))
-        return self._seq_entry_body(bytes_buf, lengths, s0)
+    def _lower_seq_local(self, plan: LanePlan):
+        return self._jit_lowering(
+            lambda *args: self._seq_body(plan, *args))
 
-    def _seq_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        self.traces += 1
-        return self._seq_body(bytes_buf, lengths)
+    # -- spec stage bodies (shared by the local jnp and kernel lowerings) ----
 
-    def _seq_entry_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                        entry: jnp.ndarray):
-        self.traces += 1
-        return self._seq_entry_body(bytes_buf, lengths, entry)
-
-    def run_seq(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        return self._seq_fn(bytes_buf, lengths)
-
-    def run_seq_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                      entry: jnp.ndarray):
-        return self._seq_entry_fn(bytes_buf, lengths, entry)
-
-
-class LocalExecutor(_ExecutorBase):
-    """Single-device jitted executor: pure-jnp reference or fused Pallas.
-
-    The speculative body fuses classification residue, uniform chunking,
-    candidate gather, chunk matching, and the Eq. 8 merge in one jitted call
-    per bucket (donated input buffer on accelerators); only the [B, K]
-    final-state array crosses back to the host.
-    """
-
-    def __init__(self, tables: DeviceTables, *, num_chunks: int,
-                 use_kernel: bool = False, early_exit_segments: int = 4):
-        super().__init__(tables, num_chunks=num_chunks,
-                         early_exit_segments=early_exit_segments)
-        self.use_kernel = bool(use_kernel)
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._spec_fn = jax.jit(self._spec_impl, donate_argnums=donate)
-        self._spec_entry_fn = jax.jit(self._spec_entry_impl,
-                                      donate_argnums=donate)
-
-    def steps_for(self, layout: ChunkLayout) -> int:
-        return layout.lmax  # uniform layout: lmax == chunk_len
-
-    def _spec_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        self.traces += 1  # side effect fires at trace time only
-        b = bytes_buf.shape[0]
-        entry = jnp.broadcast_to(self.t.starts_j[None, :],
-                                 (b, self.t.n_patterns))
-        return self._spec_body(bytes_buf, lengths, entry)
-
-    def _spec_entry_impl(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                         entry: jnp.ndarray):
-        self.traces += 1
-        return self._spec_body(bytes_buf, lengths, entry)
-
-    def _spec_body(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                   entry: jnp.ndarray):
-        """Fused classify/chunk/candidate-gather/match/merge, one bucket.
-
-        ``entry [B, K]`` seeds chunk 0 exactly (all its lanes carry the entry
-        state — the pattern starts for whole documents, a stream cursor's
-        states for resumed segments); later chunks stay speculative from the
-        Eq. 11 candidate rows.  The fused Pallas path needs no kernel change:
-        the injection happens where the init lanes are built.
-        """
-        from ...kernels import ops as kops
-        from ...kernels import ref as kref
-
+    def _spec_stages(self, plan: LanePlan, bytes_buf: jnp.ndarray,
+                     lengths: jnp.ndarray, entry, entry_cls):
+        """classify + chunking + entry-seed of the uniform speculative path:
+        returns (body [B, C, Lc] classes, la [B, C] lookaheads, init
+        [B, C, K*S] lanes)."""
         t = self.t
         b, w = bytes_buf.shape
         c = self.num_chunks
@@ -251,26 +304,106 @@ class LocalExecutor(_ExecutorBase):
         la = jnp.concatenate(
             [jnp.zeros((b, 1), jnp.int32), body[:, :-1, -1]], axis=1)
         cand = t.cand_pad_j[la[:, 1:]]                         # [B, C-1, K, S]
-        start = jnp.broadcast_to(
-            entry.astype(jnp.int32)[:, None, :, None], (b, 1, k, s))
+        start = self._seed_chunk0(plan, b, entry, entry_cls)   # [B, 1, K, S]
         init = jnp.concatenate([start, cand], axis=1).reshape(b, c, k * s)
-        if self.use_kernel:
-            finals = kops.spec_match_merge(t.table_pad_j, body, init, la,
-                                           t.cidx_pad_j, t.sinks_j,
-                                           pad_cls=t.pad_cls)
-            return finals, jnp.full((b,), NO_EXIT, jnp.int32)
+        return body, la, init
+
+    def _spec_body(self, plan: LanePlan, bytes_buf: jnp.ndarray,
+                   lengths: jnp.ndarray, entry=None, entry_cls=None):
+        """Fused classify/chunk/candidate-gather/match/merge, one bucket.
+
+        Chunk 0's entry seed is exact for ``starts``/``states`` plans (all
+        its lanes carry the entry state) and candidate-keyed for lane plans;
+        later chunks stay speculative from the Eq. 11 candidate rows.  Lane
+        plans keep the [K, S] carry through the merge fold and compose the
+        caller's cursor lanes on device.
+        """
+        from ...kernels import ref as kref
+
+        t = self.t
+        b, w = bytes_buf.shape
+        c = self.num_chunks
+        lc = w // c
+        k, s = t.n_patterns, t.i_max
+        body, la, init = self._spec_stages(plan, bytes_buf, lengths, entry,
+                                           entry_cls)
         sym_t = body.reshape(b * c, lc).T                      # [Lc, B*C]
         # per-chunk effective fill: a doc's deepest chunk-local real symbol
         lvecs, pos = self._segmented_match(sym_t, init.reshape(b * c, k * s),
-                                           jnp.minimum(lengths, lc), lc)
-        finals = kref.spec_merge_ref(lvecs.reshape(b, c, k, s), la,
-                                     t.cidx_pad_j, t.sinks_j, pad_cls=t.pad_cls)
+                                           jnp.minimum(lengths, lc), lc,
+                                           early_exit=plan.early_exit)
+        lv = lvecs.reshape(b, c, k, s)
+        if plan.entry == ENTRY_LANES:
+            seg = kref.spec_merge_lanes_ref(lv, la, t.cidx_pad_j, t.sinks_j,
+                                            pad_cls=t.pad_cls)
+            return self._compose_cursor(entry.astype(jnp.int32), seg,
+                                        entry_cls), pos
+        finals = kref.spec_merge_ref(lv, la, t.cidx_pad_j, t.sinks_j,
+                                     pad_cls=t.pad_cls)
         return finals, pos
 
-    def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                 layout: ChunkLayout):
-        return self._spec_fn(bytes_buf, lengths)
 
-    def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                       layout: ChunkLayout, entry: jnp.ndarray):
-        return self._spec_entry_fn(bytes_buf, lengths, entry)
+class LocalExecutor(LaneExecutor):
+    """Single-device lowering: pure-jnp reference or fused Pallas kernel.
+
+    The speculative lowering fuses classification residue, uniform chunking,
+    candidate gather, chunk matching, and the Eq. 8 merge in one jitted call
+    per bucket (donated input buffer on accelerators); only the [B, K]
+    final-state array crosses back to the host.  With ``use_kernel=True``
+    exact-entry spec plans dispatch the fused Pallas kernel behind an
+    all-absorbed bucket early exit (the kernel itself runs start-to-end).
+    """
+
+    def __init__(self, tables: DeviceTables, *, num_chunks: int,
+                 use_kernel: bool = False, early_exit_segments: int = 4):
+        super().__init__(tables, num_chunks=num_chunks,
+                         early_exit_segments=early_exit_segments)
+        self.use_kernel = bool(use_kernel)
+
+    def _lower(self, plan: LanePlan, layout, batch: int):
+        if plan.kind == "seq":
+            return self._lower_seq_local(plan)
+        if self.use_kernel and plan.entry != ENTRY_LANES:
+            return self._lower_spec_kernel(plan)
+        return self._jit_lowering(
+            lambda *args: self._spec_body(plan, *args))
+
+    def _lower_spec_kernel(self, plan: LanePlan):
+        """Fused Pallas lowering with the all-absorbed bucket early exit.
+
+        The kernel has no in-flight exit (its grid runs start-to-end), but a
+        bucket whose every row is already absorbed — or empty — cannot move
+        any lane: absorbing states self-loop on every class, so returning
+        the entry states verbatim is bit-identical and the whole kernel
+        dispatch is skipped (``lax.cond``).  This is the streaming case
+        where a tick's segments all belong to decided streams.
+        """
+        from ...kernels import ops as kops
+
+        t = self.t
+
+        def kernel_body(plan, bytes_buf, lengths, entry=None):
+            b = bytes_buf.shape[0]
+            e = self._seed_rows(plan, b, entry, None)           # [B, K] exact
+
+            def run_kernel():
+                # classify/chunk/candidate-gather prep lives *inside* the
+                # taken branch so an all-absorbed bucket skips it too, not
+                # just the kernel dispatch
+                body, la, init = self._spec_stages(plan, bytes_buf, lengths,
+                                                   entry, None)
+                return kops.spec_match_merge(t.table_pad_j, body, init, la,
+                                             t.cidx_pad_j, t.sinks_j,
+                                             pad_cls=t.pad_cls)
+
+            if not plan.early_exit:  # same contract as the jnp lowerings
+                return run_kernel(), jnp.full((b,), NO_EXIT, jnp.int32)
+            doc_abs = t.absorbing_j[e].all(axis=1)
+            done = doc_abs | (lengths.astype(jnp.int32) <= 0)
+            finals = jax.lax.cond(done.all(), lambda: e.astype(jnp.int32),
+                                  run_kernel)
+            pos = jnp.where(done.all() & doc_abs, jnp.int32(0), NO_EXIT)
+            return finals, pos
+
+        return self._jit_lowering(
+            lambda *args: kernel_body(plan, *args))

@@ -30,10 +30,11 @@ import jax.numpy as jnp
 from ..automata import DFA, PackedDFA, pack_dfas
 from ..partition import capacity_weights
 from .executors import LocalExecutor
-from .plan import (DeviceTables, MeshLayout, Planner, layout_device_work,
-                   next_pow2)
+from .plan import (ENTRY_LANES, ENTRY_STARTS, ENTRY_STATES, DeviceTables,
+                   MeshLayout, Planner, layout_device_work, next_pow2)
 
-__all__ = ["BatchResult", "SegmentBatchResult", "Matcher", "BatchMatcher"]
+__all__ = ["BatchResult", "SegmentBatchResult", "CursorBatchResult",
+           "Matcher", "BatchMatcher"]
 
 BACKENDS = ("local", "pallas", "sharded")
 
@@ -82,6 +83,25 @@ class SegmentBatchResult:
 
     final_states: np.ndarray  # [B, K] int32 packed states after the segment
     absorbed: np.ndarray      # [B, K] bool
+    lengths: np.ndarray       # [B] int64 segment byte lengths
+    bucket_calls: int         # fused device dispatches consumed
+    padded_rows: int          # batch_tile rows dispatched across all tiles
+    early_exits: int          # segments retired by the absorbing early exit
+
+
+@dataclasses.dataclass
+class CursorBatchResult:
+    """Outcome of ``Matcher.advance_cursors`` (the candidate-keyed tick).
+
+    ``lane_states[i]`` is stream ``i``'s [K, S] cursor lane map extended by
+    its segment — the exit state per Eq. 11 candidate entry of the stream's
+    *original* boundary class, composed on device with the segment's
+    independent lane map (``kernels.ref.cursor_merge_ref`` is the host
+    reference).  ``absorbed`` marks patterns whose every lane is absorbing.
+    """
+
+    lane_states: np.ndarray   # [B, K, S] int32 composed cursor lanes
+    absorbed: np.ndarray      # [B, K] bool — all lanes absorbing
     lengths: np.ndarray       # [B] int64 segment byte lengths
     bucket_calls: int         # fused device dispatches consumed
     padded_rows: int          # batch_tile rows dispatched across all tiles
@@ -255,6 +275,78 @@ class Matcher:
     def classes(self, doc: bytes | np.ndarray) -> np.ndarray:
         return self.packed.classes_of(doc).astype(np.int32)
 
+    # -- the one bucket-dispatch loop (every public path rides it) -----------
+
+    @staticmethod
+    def _as_arrays(docs) -> tuple[list[np.ndarray], np.ndarray]:
+        arrs = [np.frombuffer(d, np.uint8)
+                if isinstance(d, (bytes, bytearray))
+                else np.asarray(d, np.uint8) for d in docs]
+        return arrs, np.array([a.shape[0] for a in arrs], np.int64)
+
+    def _dispatch(self, mplan, arrs, lengths, out, *, entry_mode: str,
+                  entry: Optional[np.ndarray] = None,
+                  entry_cls: Optional[np.ndarray] = None, tile_hook=None
+                  ) -> tuple[int, int, int]:
+        """Run every bucket tile of a ``MatchPlan`` through the lane program.
+
+        One loop serves whole documents (``ENTRY_STARTS``), resumed segments
+        (``ENTRY_STATES``) and candidate-keyed cursor ticks (``ENTRY_LANES``)
+        — the planner emits the ``LanePlan``, the executor lowers it, and
+        this loop only packs tiles and scatters results into ``out`` (shape
+        [B, K] or [B, K, S] to match the plan's output).  Returns
+        ``(bucket_calls, padded_rows, early_exits)``.
+        """
+        k = self.packed.n_patterns
+        calls = rows = early = 0
+        for bucket in mplan.buckets:
+            spec = bucket.kind == "spec"
+            layout = (self.planner.layout_for(bucket.chunk_len)
+                      if spec else None)
+            lane = self.planner.lane_plan(bucket, entry=entry_mode)
+            for lo in range(0, bucket.doc_idx.size, self.batch_tile):
+                sel = bucket.doc_idx[lo:lo + self.batch_tile]
+                buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
+                lens = np.zeros(self.batch_tile, np.int32)
+                for r, i in enumerate(sel):
+                    buf[r, :lengths[i]] = arrs[i]
+                    lens[r] = lengths[i]
+                if tile_hook is not None:
+                    tile_hook(bucket, layout, sel, lens)
+                ent = ecls = None
+                if entry_mode == ENTRY_STATES:
+                    # pad rows scan from the pattern starts (ignored)
+                    e_np = np.tile(self.packed.starts,
+                                   (self.batch_tile, 1)).astype(np.int32)
+                    e_np[:sel.size] = entry[sel]
+                    ent = jnp.asarray(e_np)
+                elif entry_mode == ENTRY_LANES:
+                    # pad rows carry in-range lanes and the pad class, which
+                    # the device merge composes as the identity
+                    s = self.tables.i_max
+                    e_np = np.broadcast_to(
+                        self.packed.starts.astype(np.int32)[None, :, None],
+                        (self.batch_tile, k, s)).copy()
+                    e_np[:sel.size] = entry[sel]
+                    ent = jnp.asarray(e_np)
+                    ec_np = np.full(self.batch_tile, self.pad_cls, np.int32)
+                    ec_np[:sel.size] = entry_cls[sel]
+                    ecls = jnp.asarray(ec_np)
+                res, pos = self.executor.run(
+                    lane, jnp.asarray(buf), jnp.asarray(lens), layout=layout,
+                    entry=ent, entry_classes=ecls)
+                res, pos = np.asarray(res), np.asarray(pos)
+                out[sel] = res[:sel.size]
+                # a doc "exited early" if all its lanes hit absorbing states
+                # before its real symbols ran out (spec positions are
+                # chunk-local, so compare against the per-chunk fill)
+                eff = (np.minimum(bucket.chunk_len, lengths[sel]) if spec
+                       else lengths[sel])
+                early += int((pos[:sel.size] < eff).sum())
+                calls += 1
+                rows += self.batch_tile
+        return calls, rows, early
+
     def membership_batch(self, docs: Sequence[bytes | np.ndarray]) -> BatchResult:
         """Match every doc against every packed pattern; no per-doc syncs.
 
@@ -270,53 +362,34 @@ class Matcher:
             z = np.zeros(0, np.int64)
             return BatchResult(np.zeros((0, k), bool), np.zeros((0, k), np.int32),
                                z, z, z, 0)
-        arrs = [np.frombuffer(d, np.uint8)
-                if isinstance(d, (bytes, bytearray))
-                else np.asarray(d, np.uint8) for d in docs]
-        lengths = np.array([a.shape[0] for a in arrs], np.int64)
+        arrs, lengths = self._as_arrays(docs)
         plan = self.planner.plan(lengths)
         finals = np.tile(self.packed.starts, (b, 1)).astype(np.int32)
         steps = np.where(plan.spec_mask, 0, lengths)
-        calls = 0
-        early = 0
         device_work = (np.zeros(self.n_devices, np.int64)
                        if self.backend == "sharded" else None)
+        seen_buckets: set[int] = set()
 
-        for bucket in plan.buckets:
-            spec = bucket.kind == "spec"
-            layout = self.planner.layout_for(bucket.chunk_len) if spec else None
-            mesh_layout = isinstance(layout, MeshLayout)
-            if spec:
+        def account(bucket, layout, sel, lens):
+            # work-model bookkeeping per bucket (steps) and per tile (2-D
+            # layouts assign work positionally: tile row-block -> mesh row;
+            # pad rows carry 0 symbols)
+            nonlocal device_work
+            if bucket.kind != "spec":
+                return
+            if id(bucket) not in seen_buckets:
+                seen_buckets.add(id(bucket))
                 steps[bucket.doc_idx] = self.executor.steps_for(layout)
-                if device_work is not None and not mesh_layout:
+                if device_work is not None and not isinstance(layout,
+                                                              MeshLayout):
                     device_work += layout_device_work(layout,
                                                       lengths[bucket.doc_idx])
-            for lo in range(0, bucket.doc_idx.size, self.batch_tile):
-                sel = bucket.doc_idx[lo:lo + self.batch_tile]
-                buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
-                lens = np.zeros(self.batch_tile, np.int32)
-                for r, i in enumerate(sel):
-                    buf[r, :lengths[i]] = arrs[i]
-                    lens[r] = lengths[i]
-                if spec and device_work is not None and mesh_layout:
-                    # 2-D layouts assign work positionally (tile row-block ->
-                    # mesh row), so account per tile; pad rows carry 0 symbols
-                    device_work += layout.device_work(lens.astype(np.int64))
-                if spec:
-                    out, pos = self.executor.run_spec(
-                        jnp.asarray(buf), jnp.asarray(lens), layout)
-                else:
-                    out, pos = self.executor.run_seq(
-                        jnp.asarray(buf), jnp.asarray(lens))
-                out, pos = np.asarray(out), np.asarray(pos)
-                finals[sel] = out[:sel.size]
-                # a doc "exited early" if all its lanes hit absorbing states
-                # before its real symbols ran out (spec positions are
-                # chunk-local, so compare against the per-chunk fill)
-                eff = (np.minimum(bucket.chunk_len, lengths[sel]) if spec
-                       else lengths[sel])
-                early += int((pos[:sel.size] < eff).sum())
-                calls += 1
+            if device_work is not None and isinstance(layout, MeshLayout):
+                device_work += layout.device_work(lens.astype(np.int64))
+
+        calls, _, early = self._dispatch(plan, arrs, lengths, finals,
+                                         entry_mode=ENTRY_STARTS,
+                                         tile_hook=account)
 
         accepted = self.packed.accepting[finals]
         # lanes forces the lazy lookahead tables — only on speculative work
@@ -358,46 +431,74 @@ class Matcher:
         if b == 0:
             return SegmentBatchResult(entry.copy(), np.zeros((0, k), bool),
                                       np.zeros(0, np.int64), 0, 0, 0)
-        arrs = [np.frombuffer(d, np.uint8)
-                if isinstance(d, (bytes, bytearray))
-                else np.asarray(d, np.uint8) for d in segments]
-        lengths = np.array([a.shape[0] for a in arrs], np.int64)
+        arrs, lengths = self._as_arrays(segments)
         plan = self.planner.plan(lengths)
         finals = entry.copy()  # zero-length segments pass through unchanged
-        calls = rows = early = 0
-
-        for bucket in plan.buckets:
-            spec = bucket.kind == "spec"
-            layout = self.planner.layout_for(bucket.chunk_len) if spec else None
-            for lo in range(0, bucket.doc_idx.size, self.batch_tile):
-                sel = bucket.doc_idx[lo:lo + self.batch_tile]
-                buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
-                lens = np.zeros(self.batch_tile, np.int32)
-                ent = np.tile(self.packed.starts, (self.batch_tile, 1))
-                for r, i in enumerate(sel):
-                    buf[r, :lengths[i]] = arrs[i]
-                    lens[r] = lengths[i]
-                ent[:sel.size] = entry[sel]
-                if spec:
-                    out, pos = self.executor.run_spec_entry(
-                        jnp.asarray(buf), jnp.asarray(lens), layout,
-                        jnp.asarray(ent.astype(np.int32)))
-                else:
-                    out, pos = self.executor.run_seq_entry(
-                        jnp.asarray(buf), jnp.asarray(lens),
-                        jnp.asarray(ent.astype(np.int32)))
-                out, pos = np.asarray(out), np.asarray(pos)
-                finals[sel] = out[:sel.size]
-                eff = (np.minimum(bucket.chunk_len, lengths[sel]) if spec
-                       else lengths[sel])
-                early += int((pos[:sel.size] < eff).sum())
-                calls += 1
-                rows += self.batch_tile
-
+        calls, rows, early = self._dispatch(plan, arrs, lengths, finals,
+                                            entry_mode=ENTRY_STATES,
+                                            entry=entry)
         return SegmentBatchResult(final_states=finals,
                                   absorbed=self.dev.absorbing[finals],
                                   lengths=lengths, bucket_calls=calls,
                                   padded_rows=rows, early_exits=early)
+
+    def advance_cursors(self, segments: Sequence[bytes | np.ndarray],
+                        lane_states: np.ndarray,
+                        last_classes: np.ndarray) -> CursorBatchResult:
+        """Advance B candidate-keyed cursors by one segment each — the
+        streaming device merge.
+
+        Where ``advance_segments`` needs each stream's *exact* [K] states,
+        this path needs only each stream's boundary class: ``lane_states[i]``
+        is stream ``i``'s [K, S] cursor lane map (exit state per Eq. 11
+        candidate entry of the stream's original boundary class — a
+        ``streaming.MatchCursor``'s ``lane_states``, or an exact cursor
+        broadcast across the lane axis) and ``last_classes[i]`` the joint
+        class of the last byte the cursor absorbed.  Each bucket tile is one
+        fused device call that (a) matches the segments *independently*,
+        candidate-keyed on each row's boundary class, and (b) composes the
+        cursor lanes with the resulting segment maps on device — the Eq. 8
+        composition that ``streaming.cursor.merge`` performs per stream on
+        the host, batched (``kernels.ref.cursor_merge_ref`` is the host
+        reference; bit-identity is property-tested on every backend and
+        mesh shape in tests/test_device_merge.py).
+
+        Contract: every cursor must have absorbed at least one byte
+        (``last_classes`` in ``[0, n_classes)``) — a fresh stream's states
+        are exactly the pattern starts, so it has no candidate keying and
+        belongs in ``advance_segments``.  Zero-length segments compose as
+        the identity.  Plans, buckets and tiles are shared with the exact
+        paths, so mixed whole-document / segment / cursor traffic reuses the
+        same compiled programs per shape.
+        """
+        b = len(segments)
+        k = self.packed.n_patterns
+        s = self.tables.i_max
+        lanes = np.ascontiguousarray(np.asarray(lane_states, np.int32))
+        if lanes.shape != (b, k, s):
+            raise ValueError(f"lane_states must be [{b}, {k}, {s}], "
+                             f"got {lanes.shape}")
+        last = np.asarray(last_classes, np.int32).reshape(-1)
+        if last.shape != (b,):
+            raise ValueError(f"last_classes must be [{b}], got {last.shape}")
+        if b and ((last < 0) | (last >= self.packed.n_classes)).any():
+            raise ValueError(
+                "last_classes must be joint byte classes in [0, n_classes); "
+                "fresh streams (no bytes absorbed) have exact start states — "
+                "advance them with advance_segments")
+        if b == 0:
+            return CursorBatchResult(lanes.copy(), np.zeros((0, k), bool),
+                                     np.zeros(0, np.int64), 0, 0, 0)
+        arrs, lengths = self._as_arrays(segments)
+        plan = self.planner.plan(lengths)
+        out = lanes.copy()  # zero-length segments compose as the identity
+        calls, rows, early = self._dispatch(plan, arrs, lengths, out,
+                                            entry_mode=ENTRY_LANES,
+                                            entry=lanes, entry_cls=last)
+        return CursorBatchResult(lane_states=out,
+                                 absorbed=self.dev.absorbing[out].all(axis=2),
+                                 lengths=lengths, bucket_calls=calls,
+                                 padded_rows=rows, early_exits=early)
 
     # -- serving hook -------------------------------------------------------
 

@@ -41,8 +41,18 @@ from ..lookahead import PackedLookaheadTables, build_packed_lookahead_tables
 from ..partition import Partition, uniform_partition, weighted_partition
 
 __all__ = ["next_pow2", "DeviceTables", "ChunkLayout", "MeshLayout",
-           "BucketPlan", "MatchPlan", "Planner", "expand_device_weights",
-           "layout_device_work"]
+           "BucketPlan", "MatchPlan", "LanePlan", "Planner",
+           "ENTRY_STARTS", "ENTRY_STATES", "ENTRY_LANES",
+           "expand_device_weights", "layout_device_work"]
+
+# Entry-seed stage modes of a LanePlan (how chunk 0 / the scan rows start):
+ENTRY_STARTS = "starts"  # the packed pattern start states (whole documents)
+ENTRY_STATES = "states"  # caller-supplied exact [B, K] states (resumed
+                         # stream segments -- Matcher.advance_segments)
+ENTRY_LANES = "lanes"    # Eq. 11 candidate rows of each row's boundary
+                         # class [B]; output keeps the [B, K, S] lane axis
+                         # and is composed with the caller's cursor lanes on
+                         # device (Matcher.advance_cursors)
 
 
 def next_pow2(n: int) -> int:
@@ -272,6 +282,48 @@ class BucketPlan:
     doc_idx: np.ndarray  # [n_docs] int64 indices into the batch
 
 
+@dataclasses.dataclass(frozen=True)
+class LanePlan:
+    """One lane-program: the single stage pipeline every backend lowers.
+
+    The matching inner loop is one program — **classify** bytes to joint
+    classes, **entry-seed** the scan lanes, **chunk-scan** them through the
+    padded transition table, **merge** per-chunk lane states (Eq. 8) — and a
+    ``LanePlan`` is its complete static description.  Executor backends do
+    not implement variants; they *lower* this one plan (``Executor.run``),
+    so a new backend writes one lowering instead of four run-methods:
+
+      kind       "seq" (merge stage is a no-op: rows scan start-to-end) or
+                 "spec" (chunked scan + Eq. 8 merge of the lane states);
+      entry      entry-seed mode — ``ENTRY_STARTS`` (pattern starts),
+                 ``ENTRY_STATES`` (caller [B, K] exact states), or
+                 ``ENTRY_LANES`` (Eq. 11 candidate rows keyed by each row's
+                 boundary class; the merge stage then also composes the
+                 caller's [B, K, S] cursor lanes on device);
+      early_exit absorbing-state early exit enabled for this program.
+
+    ``width``/``chunk_len`` pin the compiled buffer shape; ``key`` is the
+    lowering cache key (one compiled program per distinct plan).
+    """
+
+    kind: str        # "seq" | "spec"
+    width: int       # padded byte/symbol width of the device buffer
+    chunk_len: int   # Lc for spec plans (width == C * Lc); 0 for seq
+    entry: str       # ENTRY_STARTS | ENTRY_STATES | ENTRY_LANES
+    early_exit: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("seq", "spec"):
+            raise ValueError(f"unknown plan kind {self.kind!r}")
+        if self.entry not in (ENTRY_STARTS, ENTRY_STATES, ENTRY_LANES):
+            raise ValueError(f"unknown entry mode {self.entry!r}")
+
+    @property
+    def key(self) -> tuple:
+        return (self.kind, self.width, self.chunk_len, self.entry,
+                self.early_exit)
+
+
 @dataclasses.dataclass
 class MatchPlan:
     """Everything an executor needs to run one batch, decided up front."""
@@ -366,6 +418,15 @@ class Planner:
                     rows=tuple(row_layout(r)
                                for r in range(self.doc_shards)))
         return self._layouts[chunk_len]
+
+    # -- lane programs ------------------------------------------------------
+
+    def lane_plan(self, bucket: BucketPlan, *, entry: str = ENTRY_STARTS,
+                  early_exit: bool = True) -> LanePlan:
+        """The lane program of one bucket dispatch (see ``LanePlan``)."""
+        return LanePlan(kind=bucket.kind, width=bucket.width,
+                        chunk_len=bucket.chunk_len, entry=entry,
+                        early_exit=early_exit)
 
     # -- batch planning -----------------------------------------------------
 

@@ -1,10 +1,11 @@
-"""Mesh-sharded executor: capacity-balanced matching on a (doc, chunk) mesh.
+"""Mesh-sharded lowering: capacity-balanced matching on a (doc, chunk) mesh.
 
 The paper's cloud result (288 EC2 cores) comes from two ingredients: split
 the input across workers, and size each worker's slice by its *measured
 matching capacity* (Eq. 1, ``core.profiling.profile_workers``).  This
-executor is the device-mesh version of that scheme, on a 2-D
-``("doc", "chunk")`` mesh (``launch.mesh.make_matcher_mesh``):
+executor is the device-mesh lowering of the one ``LanePlan`` (see
+``engine.executors``), on a 2-D ``("doc", "chunk")`` mesh
+(``launch.mesh.make_matcher_mesh``):
 
   * the **chunk axis is sharded over "chunk"** (``jax_compat.shard_map``):
     each device matches its contiguous run of chunks x candidate lanes
@@ -24,12 +25,18 @@ executor is the device-mesh version of that scheme, on a 2-D
     ``all_gather`` **over the "chunk" axis only** — doc shards never
     communicate, and the documents' bytes never cross devices;
   * each doc shard folds its gathered lane states per document (Eq. 8),
-    exactly as the single-device reference, so results are bit-identical to
+    exactly as the single-device lowering, so results are bit-identical to
     sequential matching for any mesh shape and any capacity profile
     (tests/test_sharded_executor.py sweeps 1x1, 2x4, 4x2, 8x1).
 
-The **batched sequential path** needs no exchange at all: short documents
-are independent rows, so the document axis shards over *both* mesh axes
+**Entry modes** are the plan's, not the backend's: exact entry states shard
+over "doc" with their rows (``ENTRY_STATES``), and lane plans
+(``ENTRY_LANES``) additionally shard the ``[B, K, S]`` cursor lanes and
+boundary classes over "doc" and run the device cursor merge per doc shard
+after the chunk fold (``distributed.sharding.matcher_lane_specs``).
+
+The **sequential plan** needs no exchange at all: short documents are
+independent rows, so the document axis shards over *both* mesh axes
 jointly (``distributed.sharding.doc_batch_spec``) and every device scans
 ``B / (Dd * Dc)`` rows.
 
@@ -44,14 +51,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .executors import NO_EXIT, _ExecutorBase
-from .plan import ChunkLayout, DeviceTables, MeshLayout
+from .executors import NO_EXIT, LaneExecutor
+from .plan import (ENTRY_LANES, ENTRY_STARTS, ChunkLayout, DeviceTables,
+                   LanePlan, MeshLayout)
 
 __all__ = ["ShardedExecutor"]
 
 
-class ShardedExecutor(_ExecutorBase):
-    """shard_map-backed executor over a ("doc", "chunk") matcher mesh.
+class ShardedExecutor(LaneExecutor):
+    """shard_map-backed lowering over a ("doc", "chunk") matcher mesh.
 
     Parameters
     ----------
@@ -79,10 +87,23 @@ class ShardedExecutor(_ExecutorBase):
                 f"num_chunks={self.num_chunks} must be a multiple of the mesh "
                 f"chunk extent {self.chunk_shards} (the planner rounds up "
                 "for you)")
-        self._spec_fns: dict[int, object] = {}
-        self._seq_fns: dict[int, object] = {}
-        self._spec_entry_fns: dict[int, object] = {}
-        self._seq_entry_fns: dict[int, object] = {}
+
+    # -- lowering dispatch ---------------------------------------------------
+
+    def _plan_key(self, plan: LanePlan, batch: int) -> tuple:
+        # seq programs shard the row axis, so their compiled form depends on
+        # the tile row count (doc_batch_spec); spec programs do not
+        if plan.kind == "seq":
+            return plan.key + (batch,)
+        return plan.key
+
+    def _lower(self, plan: LanePlan, layout, batch: int):
+        if plan.kind == "seq":
+            if self.devices == 1 or batch % self.devices != 0:
+                # indivisible tiles fall back to the single-device lowering
+                return self._lower_seq_local(plan)
+            return self._lower_seq_sharded(plan, batch)
+        return self._lower_spec_sharded(plan, layout)
 
     def _replicated_tables(self):
         """Pin the constant matcher tables onto every mesh device up front
@@ -102,34 +123,14 @@ class ShardedExecutor(_ExecutorBase):
                 repl("cand_pad", t.cand_pad_j),
                 repl("cidx_pad", t.cidx_pad_j))
 
-    # -- batched sequential path: document axis over both mesh axes ---------
+    # -- sequential plan: document axis over both mesh axes ------------------
 
-    def run_seq(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray):
-        b = bytes_buf.shape[0]
-        if self.devices == 1 or b % self.devices != 0:
-            return super().run_seq(bytes_buf, lengths)
-        fn = self._seq_fns.get(b)
-        if fn is None:
-            fn = self._build_seq_fn(b)
-            self._seq_fns[b] = fn
-        return fn(bytes_buf, lengths)
-
-    def run_seq_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                      entry: jnp.ndarray):
-        b = bytes_buf.shape[0]
-        if self.devices == 1 or b % self.devices != 0:
-            return super().run_seq_entry(bytes_buf, lengths, entry)
-        fn = self._seq_entry_fns.get(b)
-        if fn is None:
-            fn = self._build_seq_fn(b, with_entry=True)
-            self._seq_entry_fns[b] = fn
-        return fn(bytes_buf, lengths, entry)
-
-    def _build_seq_fn(self, batch: int, *, with_entry: bool = False):
+    def _lower_seq_sharded(self, plan: LanePlan, batch: int):
         """Short documents are independent rows, so the document axis shards
         cleanly over every mesh axis jointly (doc_batch_spec) — each device
-        classifies and scans B/(Dd*Dc) rows, nothing is exchanged.  The
-        entry variant also splits the [B, K] segment entry states row-wise."""
+        classifies and scans B/(Dd*Dc) rows, nothing is exchanged.  Entry
+        states (and lane-plan cursor lanes + boundary classes) split
+        row-wise with their documents."""
         from jax.sharding import PartitionSpec as P
 
         from ...distributed.sharding import doc_batch_spec
@@ -137,49 +138,22 @@ class ShardedExecutor(_ExecutorBase):
 
         row_ax = tuple(doc_batch_spec(self.mesh, batch))
         buf_spec, len_spec = P(*row_ax, None), P(*row_ax)
-        donate = (0,) if jax.default_backend() != "cpu" else ()
+        # the specs follow the plan's entry arity; the body is the shared one
+        if plan.entry == ENTRY_STARTS:
+            in_specs = (buf_spec, len_spec)
+            out_specs = (buf_spec, len_spec)
+        elif plan.entry == ENTRY_LANES:
+            in_specs = (buf_spec, len_spec, P(*row_ax, None, None), len_spec)
+            out_specs = (P(*row_ax, None, None), len_spec)
+        else:
+            in_specs = (buf_spec, len_spec, P(*row_ax, None))
+            out_specs = (buf_spec, len_spec)
+        body = shard_map(lambda *args: self._seq_body(plan, *args),
+                         mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+        return self._jit_lowering(body)
 
-        if with_entry:
-            body = shard_map(self._seq_entry_body, mesh=self.mesh,
-                             in_specs=(buf_spec, len_spec, P(*row_ax, None)),
-                             out_specs=(buf_spec, len_spec), check_vma=False)
-
-            def impl_entry(bytes_buf, lengths, entry):
-                self.traces += 1  # side effect fires at trace time only
-                return body(bytes_buf, lengths, entry)
-
-            return jax.jit(impl_entry, donate_argnums=donate)
-
-        body = shard_map(self._seq_body, mesh=self.mesh,
-                         in_specs=(buf_spec, len_spec),
-                         out_specs=(buf_spec, len_spec), check_vma=False)
-
-        def impl(bytes_buf, lengths):
-            self.traces += 1  # side effect fires at trace time only
-            return body(bytes_buf, lengths)
-
-        return jax.jit(impl, donate_argnums=donate)
-
-    def steps_for(self, layout: ChunkLayout | MeshLayout) -> int:
-        return layout.lmax  # lane-parallel wall steps = longest chunk buffer
-
-    # -- speculative path ---------------------------------------------------
-
-    def run_spec(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                 layout: ChunkLayout | MeshLayout):
-        fn = self._spec_fns.get(layout.width)
-        if fn is None:
-            fn = self._build_spec_fn(layout)
-            self._spec_fns[layout.width] = fn
-        return fn(bytes_buf, lengths)
-
-    def run_spec_entry(self, bytes_buf: jnp.ndarray, lengths: jnp.ndarray,
-                       layout: ChunkLayout | MeshLayout, entry: jnp.ndarray):
-        fn = self._spec_entry_fns.get(layout.width)
-        if fn is None:
-            fn = self._build_spec_fn(layout, with_entry=True)
-            self._spec_entry_fns[layout.width] = fn
-        return fn(bytes_buf, lengths, entry)
+    # -- speculative plan ----------------------------------------------------
 
     def _layout_rows(self, layout: ChunkLayout | MeshLayout
                      ) -> tuple[ChunkLayout, ...]:
@@ -192,11 +166,13 @@ class ShardedExecutor(_ExecutorBase):
             return layout.rows
         return (layout,) * self.doc_shards
 
-    def _build_spec_fn(self, layout: ChunkLayout | MeshLayout, *,
-                       with_entry: bool = False):
+    def _lower_spec_sharded(self, plan: LanePlan,
+                            layout: ChunkLayout | MeshLayout):
         """Jit one bucket width; every row-block's boundaries are baked in as
-        static slices (deterministic per width, so the cache key is width)."""
-        from ...distributed.sharding import matcher_chunk_specs
+        static slices (deterministic per width, so the cache key is the
+        plan)."""
+        from ...distributed.sharding import (matcher_chunk_specs,
+                                             matcher_lane_specs)
         from ...jax_compat import shard_map
 
         t = self.t
@@ -207,8 +183,35 @@ class ShardedExecutor(_ExecutorBase):
                       for r in rows]
         row_exact = [r.exact.copy() for r in rows]
         chunk_ax = self.chunk_axis
-        in_specs, out_spec = matcher_chunk_specs(self.mesh)
+        lanes_mode = plan.entry == ENTRY_LANES
+        if lanes_mode:
+            in_specs, out_spec = matcher_lane_specs(self.mesh)
+        else:
+            in_specs, out_spec = matcher_chunk_specs(self.mesh)
         table_pad, cand_pad, cidx_pad = self._replicated_tables()
+
+        def scan_chunks(chunk_loc, init):
+            """Per-device chunk-scan stage over this shard's lanes."""
+            c_loc, b_loc = chunk_loc.shape[0], chunk_loc.shape[1]
+            k, s = t.n_patterns, t.i_max
+            sym_t = chunk_loc.reshape(c_loc * b_loc, lmax).T
+
+            def step(st, row):
+                return table_pad[st, row[:, None]], None
+
+            lvecs, _ = jax.lax.scan(
+                step, init.reshape(c_loc * b_loc, k * s).astype(jnp.int32),
+                sym_t)
+            return lvecs.reshape(c_loc, b_loc, k, s)
+
+        def gather_chunk_axis(lvecs, la_loc, exact_loc):
+            # the only cross-device exchange, and only over "chunk": lane
+            # states, not symbols; doc shards stay silent
+            lv_all = jax.lax.all_gather(lvecs, chunk_ax, axis=0, tiled=True)
+            la_all = jax.lax.all_gather(la_loc, chunk_ax, axis=0, tiled=True)
+            ex_all = jax.lax.all_gather(exact_loc, chunk_ax, axis=0,
+                                        tiled=True)
+            return lv_all, la_all, ex_all
 
         def body(chunk_loc, la_loc, exact_loc, entry_loc):
             # chunk_loc [C_loc, B_loc, Lmax]; la_loc/exact_loc [C_loc,
@@ -223,33 +226,36 @@ class ShardedExecutor(_ExecutorBase):
                 entry_loc.astype(jnp.int32)[None, :, :, None],
                 (c_loc, b_loc, k, s))
             init = jnp.where(exact_loc[:, :, None, None], start, cand)
-            sym_t = chunk_loc.reshape(c_loc * b_loc, lmax).T
-
-            def step(st, row):
-                return table_pad[st, row[:, None]], None
-
-            lvecs, _ = jax.lax.scan(
-                step, init.reshape(c_loc * b_loc, k * s).astype(jnp.int32),
-                sym_t)
-            # the only cross-device exchange, and only over "chunk": lane
-            # states, not symbols; doc shards stay silent
-            lv_all = jax.lax.all_gather(
-                lvecs.reshape(c_loc, b_loc, k, s), chunk_ax, axis=0,
-                tiled=True)
-            la_all = jax.lax.all_gather(la_loc, chunk_ax, axis=0, tiled=True)
-            ex_all = jax.lax.all_gather(exact_loc, chunk_ax, axis=0,
-                                        tiled=True)
+            lv_all, la_all, ex_all = gather_chunk_axis(
+                scan_chunks(chunk_loc, init), la_loc, exact_loc)
             # every chunk device of this mesh row now folds the same gathered
             # states; return the copy behind a leading chunk-axis dim so the
             # out spec mentions every mesh axis (see matcher_chunk_specs)
             return self._merge_gathered(lv_all, la_all, ex_all,
                                         cidx_pad)[None]
 
-        sharded_body = shard_map(body, mesh=self.mesh, in_specs=in_specs,
+        def body_lanes(chunk_loc, la_loc, exact_loc, lanes_loc, ecls_loc):
+            # Lane plan: exact chunks seed from the Eq. 11 candidate row of
+            # each document's boundary class (``ecls_loc [B_loc]``) — the
+            # segment is matched *independently* of the prefix — and after
+            # the chunk fold the caller's cursor lanes compose on device
+            # (the streaming device merge).
+            cand = cand_pad[la_loc]
+            seed = jnp.broadcast_to(cand_pad[ecls_loc][None],
+                                    cand.shape)
+            init = jnp.where(exact_loc[:, :, None, None], seed, cand)
+            lv_all, la_all, ex_all = gather_chunk_axis(
+                scan_chunks(chunk_loc, init), la_loc, exact_loc)
+            seg = self._merge_gathered(lv_all, la_all, ex_all, cidx_pad,
+                                       lanes=True)
+            return self._compose_cursor(lanes_loc.astype(jnp.int32), seg,
+                                        ecls_loc)[None]
+
+        sharded_body = shard_map(body_lanes if lanes_mode else body,
+                                 mesh=self.mesh, in_specs=in_specs,
                                  out_specs=out_spec, check_vma=False)
 
-        def run(bytes_buf, lengths, entry):
-            self.traces += 1  # side effect fires at trace time only
+        def run(bytes_buf, lengths, entry, entry_cls):
             b, w = bytes_buf.shape
             if b % self.doc_shards:
                 raise ValueError(f"batch of {b} rows does not split over "
@@ -271,49 +277,58 @@ class ShardedExecutor(_ExecutorBase):
             la_idx = np.full((n_chunks, b), w, np.int32)
             ex_np = np.zeros((n_chunks, b), bool)
             for r in range(self.doc_shards):
-                rows = slice(r * rps, (r + 1) * rps)
+                rsel = slice(r * rps, (r + 1) * rps)
                 for ci, (s0, e0) in enumerate(row_bounds[r]):
                     span = np.arange(lmax)
-                    col_idx[ci, rows] = np.where(span < e0 - s0, s0 + span, w)
+                    col_idx[ci, rsel] = np.where(span < e0 - s0, s0 + span, w)
                     if s0 > 0:
-                        la_idx[ci, rows] = s0 - 1
-                    ex_np[ci, rows] = bool(row_exact[r][ci])
+                        la_idx[ci, rsel] = s0 - 1
+                    ex_np[ci, rsel] = bool(row_exact[r][ci])
             rows_b = jnp.arange(b, dtype=jnp.int32)
             chunk_buf = cls_pad[rows_b[None, :, None],
                                 jnp.asarray(col_idx)]    # [C, B, Lmax]
             la = cls_pad[rows_b[None, :], jnp.asarray(la_idx)]  # [C, B]
             ex = jnp.asarray(ex_np)                      # [C, B] bool
-            finals = sharded_body(chunk_buf, la, ex, entry)[0]
-            return finals, jnp.full((b,), NO_EXIT, jnp.int32)
+            if lanes_mode:
+                out = sharded_body(chunk_buf, la, ex,
+                                   entry.astype(jnp.int32), entry_cls)[0]
+            else:
+                out = sharded_body(chunk_buf, la, ex, entry)[0]
+            return out, jnp.full((b,), NO_EXIT, jnp.int32)
 
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        if with_entry:
-            return jax.jit(run, donate_argnums=donate)
+        if lanes_mode:
+            return self._jit_lowering(run)
+        if plan.entry == ENTRY_STARTS:
+            def run0(bytes_buf, lengths):
+                b = bytes_buf.shape[0]
+                e = jnp.broadcast_to(t.starts_j[None, :], (b, t.n_patterns))
+                return run(bytes_buf, lengths, e, None)
 
-        def run0(bytes_buf, lengths):
-            b = bytes_buf.shape[0]
-            entry = jnp.broadcast_to(t.starts_j[None, :], (b, t.n_patterns))
-            return run(bytes_buf, lengths, entry)
-
-        return jax.jit(run0, donate_argnums=donate)
+            return self._jit_lowering(run0)
+        return self._jit_lowering(
+            lambda bytes_buf, lengths, entry: run(bytes_buf, lengths, entry,
+                                                  None))
 
     def _merge_gathered(self, lv_all: jnp.ndarray, la_all: jnp.ndarray,
-                        exact_all: jnp.ndarray,
-                        cidx_pad: jnp.ndarray) -> jnp.ndarray:
+                        exact_all: jnp.ndarray, cidx_pad: jnp.ndarray,
+                        lanes: bool = False) -> jnp.ndarray:
         """Eq. 8 fold over gathered chunk lane states, with exact-chunk flags.
 
         lv_all [C, B_loc, K, S]; la_all/exact_all [C, B_loc] — a chunk
         starting at stream position 0 is matched exactly from its entry
-        states, so the merge reads its lane 0 instead of a candidate lookup.
-        Every local row belongs to the same doc row-block (shard_map places
-        whole row-blocks), so the per-chunk exact flags are constant across
-        the local rows and column 0 carries them.  Delegates to the one
-        shared merge definition (``kernels.ref.spec_merge_ref``, doc-major)
-        so sharded and local stay bit-identical by construction.
+        states (or candidate-keyed from the boundary class, for lane plans),
+        so the merge reads its lanes instead of a candidate lookup.  Every
+        local row belongs to the same doc row-block (shard_map places whole
+        row-blocks), so the per-chunk exact flags are constant across the
+        local rows and column 0 carries them.  Delegates to the one shared
+        merge definition (``kernels.ref.spec_merge_ref`` /
+        ``spec_merge_lanes_ref``, doc-major) so sharded and local stay
+        bit-identical by construction.
         """
-        from ...kernels.ref import spec_merge_ref
+        from ...kernels.ref import spec_merge_lanes_ref, spec_merge_ref
 
         t = self.t
-        return spec_merge_ref(jnp.swapaxes(lv_all, 0, 1), la_all.T,
-                              cidx_pad, t.sinks_j, pad_cls=t.pad_cls,
-                              exact=exact_all[:, 0])
+        fold = spec_merge_lanes_ref if lanes else spec_merge_ref
+        return fold(jnp.swapaxes(lv_all, 0, 1), la_all.T,
+                    cidx_pad, t.sinks_j, pad_cls=t.pad_cls,
+                    exact=exact_all[:, 0])

@@ -24,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
            "named", "opt_state_specs", "matcher_table_specs",
-           "matcher_chunk_specs", "doc_batch_spec"]
+           "matcher_chunk_specs", "matcher_lane_specs", "doc_batch_spec"]
 
 STACK_KEYS = {"layers", "groups", "enc", "dec"}
 MOE_EXPERT_KEYS = {"wi_gate", "wi_up", "wo"}
@@ -212,14 +212,40 @@ def matcher_chunk_specs(mesh) -> tuple[tuple[P, P, P, P], P]:
     omits an axis into a psum over it when the operands were assembled inside
     the jit — 4x-scaled garbage, not a copy (jax 0.4 GSPMD lowering).
     """
-    if "chunk" in mesh.axis_names:
-        c_ax = "chunk"
-        d_ax = "doc" if "doc" in mesh.axis_names else None
-    else:
-        c_ax = "data" if "data" in mesh.axis_names else None
-        d_ax = None
+    c_ax, d_ax = _matcher_axes(mesh)
     return ((P(c_ax, d_ax, None), P(c_ax, d_ax), P(c_ax, d_ax),
              P(d_ax, None)), P(c_ax, d_ax, None))
+
+
+def _matcher_axes(mesh) -> tuple:
+    if "chunk" in mesh.axis_names:
+        return "chunk", ("doc" if "doc" in mesh.axis_names else None)
+    return ("data" if "data" in mesh.axis_names else None), None
+
+
+def matcher_lane_specs(mesh) -> tuple[tuple[P, P, P, P, P], P]:
+    """in/out specs for the lane-plan (``ENTRY_LANES``) merge-stage body —
+    the streaming device merge on the ("doc", "chunk") mesh
+    (engine/sharded.py ``body_lanes``).
+
+    Inputs extend ``matcher_chunk_specs`` for candidate-keyed cursors:
+      chunks [C, B, Lmax]    P(chunk, doc, None)  as for exact plans
+      lookahead [C, B]       P(chunk, doc)
+      exact [C, B]           P(chunk, doc)
+      cursor lanes [B, K, S] P(doc, None, None)   each stream's Eq. 11 lane
+                                                  map — rides its doc shard,
+                                                  never crosses "chunk"
+      boundary class [B]     P(doc)               keys both the segment's
+                                                  chunk-0 candidates and the
+                                                  on-device composition
+    Output [Dc, B, K, S] composed lanes: P(chunk, doc, None, None) — the
+    same every-axis-mentioned shape discipline as ``matcher_chunk_specs``
+    (callers read ``out[0]``); the cursor merge runs after the "chunk"-axis
+    all_gather, per doc shard, so doc shards still never communicate.
+    """
+    c_ax, d_ax = _matcher_axes(mesh)
+    return ((P(c_ax, d_ax, None), P(c_ax, d_ax), P(c_ax, d_ax),
+             P(d_ax, None, None), P(d_ax)), P(c_ax, d_ax, None, None))
 
 
 _DOC_AXES = ("pod", "data", "doc", "chunk")

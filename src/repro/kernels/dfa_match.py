@@ -118,9 +118,12 @@ def spec_match_merge_kernel(table_ref, chunks_ref, init_ref, la_ref, cidx_ref,
     init_ref  : [1, C, K * S] int32 candidate initial packed states.  Chunk
                 0's lanes are *exact* entry states and its merge reads lane
                 0 — the pattern starts for whole documents, or a streaming
-                cursor's resumed states (the segment-entry injection of
-                ``engine.executors.LocalExecutor.run_spec_entry``; the
-                kernel is agnostic to which, by construction).
+                cursor's resumed states (the ``LanePlan`` entry-seed stage,
+                ``engine.executors.LaneExecutor._seed_chunk0``; the kernel
+                is agnostic to which, by construction).  The kernel always
+                runs its grid start-to-end: the absorbing-state early exit
+                lives in the lowering (``LocalExecutor._lower_spec_kernel``
+                skips the whole dispatch for all-absorbed buckets).
     la_ref    : [1, C] int32 per-chunk reverse-lookahead class (entry 0 unused)
     cidx_ref  : [n_cls_pad, Q_total] int32 candidate-lane index (VMEM, whole)
     sinks_ref : [K] int32 packed sink per pattern (-1 if none)

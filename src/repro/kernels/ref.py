@@ -12,7 +12,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spec_match_ref", "spec_merge_ref", "spec_match_merge_ref",
+__all__ = ["spec_match_ref", "spec_merge_ref", "spec_merge_lanes_ref",
+           "spec_match_merge_ref", "cursor_merge_ref",
            "classify_ref", "classify_pad_ref", "lvec_compose_ref",
            "onehot_block_maps_ref", "token_mask_ref"]
 
@@ -94,6 +95,40 @@ def spec_match_merge_ref(table: jnp.ndarray, chunks: jnp.ndarray,
                           sinks, pad_cls=pad_cls)
 
 
+def _merge_fold(start: jnp.ndarray, lvecs: jnp.ndarray, lookahead: jnp.ndarray,
+                exact: jnp.ndarray, cand_index: jnp.ndarray,
+                sinks: jnp.ndarray, *, pad_cls: int,
+                exact_lane0: bool) -> jnp.ndarray:
+    """The one Eq. 8 fold shared by every merge entry point.
+
+    ``start [K, Sc]`` is the carried lane set (``Sc == 1`` for an exact
+    carry); each later chunk maps every carried state through its candidate
+    lanes (``lvecs [C-1, K, S]``, ``lookahead``/``exact`` ``[C-1]``).  A
+    carried state missing from the candidate row is the pattern's absorbing
+    sink; a ``pad_cls`` lookahead means the whole chunk is padding (identity).
+    ``exact_lane0`` picks the rule for chunks matched exactly from the entry
+    states: their lanes all agree, so an exact carry reads lane 0, while a
+    candidate-keyed carry (``Sc == S``) composes lane-for-lane (identity on
+    the lane axis).
+    """
+
+    def step(st, xs):  # st [K, Sc]
+        lv_i, la_i, ex_i = xs
+        lane = cand_index[la_i, st]                              # [K, Sc]
+        hit = jnp.take_along_axis(lv_i, jnp.maximum(lane, 0), axis=1)
+        sk = sinks[:, None]
+        nxt = jnp.where(lane < 0, jnp.where(sk >= 0, sk, st), hit)
+        nxt = jnp.where(la_i == pad_cls, st, nxt)
+        ex_val = (jnp.broadcast_to(lv_i[:, :1], st.shape) if exact_lane0
+                  else lv_i)
+        nxt = jnp.where(ex_i, ex_val, nxt)
+        return nxt.astype(jnp.int32), None
+
+    out, _ = jax.lax.scan(step, start.astype(jnp.int32),
+                          (lvecs, lookahead, exact))
+    return out
+
+
 def spec_merge_ref(lvecs: jnp.ndarray, lookahead: jnp.ndarray,
                    cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
                    pad_cls: int, exact: jnp.ndarray | None = None) -> jnp.ndarray:
@@ -111,20 +146,70 @@ def spec_merge_ref(lvecs: jnp.ndarray, lookahead: jnp.ndarray,
         exact = jnp.zeros((lvecs.shape[1],), bool)
 
     def merge_doc(lv, la):  # lv [C, K, S], la [C]
-        def step(st, xs):   # st [K]
-            lv_i, la_i, ex_i = xs
-            lane = cand_index[la_i, st]                              # [K]
-            hit = jnp.take_along_axis(
-                lv_i, jnp.maximum(lane, 0)[:, None], axis=1)[:, 0]
-            nxt = jnp.where(lane < 0, jnp.where(sinks >= 0, sinks, st), hit)
-            nxt = jnp.where(la_i == pad_cls, st, nxt)
-            nxt = jnp.where(ex_i, lv_i[:, 0], nxt)
-            return nxt.astype(jnp.int32), None
-
-        out, _ = jax.lax.scan(step, lv[0, :, 0], (lv[1:], la[1:], exact[1:]))
-        return out
+        return _merge_fold(lv[0, :, :1], lv[1:], la[1:], exact[1:],
+                           cand_index, sinks, pad_cls=pad_cls,
+                           exact_lane0=True)[:, 0]
 
     return jax.vmap(merge_doc)(lvecs, lookahead.astype(jnp.int32))
+
+
+def spec_merge_lanes_ref(lvecs: jnp.ndarray, lookahead: jnp.ndarray,
+                         cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                         pad_cls: int,
+                         exact: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. 8 merge carrying the *full* candidate lane axis: [B, C, K, S] per-
+    chunk lane states fold to [B, K, S] — chunk 0's lanes are candidate
+    entries of a boundary class (not an exact state), so the fold keeps one
+    carried state per entry lane.  This is the segment-map half of the
+    streaming device merge: the result is the segment's restricted transition
+    map (``streaming.cursor.segment_result`` computed on device, batched).
+    ``exact`` chunks (stream position 0) compose lane-for-lane — their lanes
+    were seeded from the same candidate row as the carry.
+    """
+    if exact is None:
+        exact = jnp.zeros((lvecs.shape[1],), bool)
+
+    def merge_doc(lv, la):  # lv [C, K, S], la [C]
+        return _merge_fold(lv[0], lv[1:], la[1:], exact[1:], cand_index,
+                           sinks, pad_cls=pad_cls, exact_lane0=False)
+
+    return jax.vmap(merge_doc)(lvecs, lookahead.astype(jnp.int32))
+
+
+def cursor_merge_ref(cursor_lanes: np.ndarray, seg_lanes: np.ndarray,
+                     entry_cls: np.ndarray, cand_index: np.ndarray,
+                     sinks: np.ndarray, *, pad_cls: int) -> np.ndarray:
+    """Batched Eq. 8 cursor x segment composition — the numpy host reference
+    of the streaming device merge (``Matcher.advance_cursors``).
+
+    ``cursor_lanes [B, K, Sc]`` holds each stream's prefix exit states per
+    entry lane (``Sc == 1`` for collapsed exact cursors); ``seg_lanes
+    [B, K, S]`` is each stream's next segment matched independently, keyed by
+    the Eq. 11 candidates of ``entry_cls [B]`` — the class of the byte just
+    before the segment (the cursor's ``last_class``).  For every carried
+    state ``q``: ``cand_index[entry_cls, q]`` selects the segment lane that
+    assumed entry ``q``; a missing ``q`` is the pattern's absorbing sink (a
+    prefix exit state reached by a byte of class ``c`` is in ``I_c`` unless
+    it is the sink — the paper's exactness argument); rows whose
+    ``entry_cls == pad_cls`` pass through unchanged (zero-byte segments).
+
+    This is ``streaming.cursor.merge`` vectorized over streams; the device
+    lowering in ``core.engine.executors`` must be bit-identical
+    (tests/test_device_merge.py).
+    """
+    q = np.asarray(cursor_lanes, np.int32)
+    ec = np.asarray(entry_cls, np.int32)
+    cand_index = np.asarray(cand_index)
+    # clamp the row index so an unpadded [n_cls, Q] table also works: the
+    # pad_cls passthrough below overrides whatever the clamped gather reads
+    safe_ec = np.minimum(ec, np.int32(cand_index.shape[0] - 1))
+    lane = cand_index[safe_ec[:, None, None], q]                # [B, K, Sc]
+    hit = np.take_along_axis(np.asarray(seg_lanes, np.int32),
+                             np.maximum(lane, 0), axis=2)
+    sk = np.asarray(sinks, np.int32)[None, :, None]
+    out = np.where(lane < 0, np.where(sk >= 0, sk, q), hit)
+    out = np.where((ec == pad_cls)[:, None, None], q, out)
+    return out.astype(np.int32)
 
 
 def lvec_compose_ref(maps: jnp.ndarray) -> jnp.ndarray:

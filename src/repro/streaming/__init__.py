@@ -8,12 +8,20 @@ matching these million byte streams as their bytes arrive".  Three layers:
                   Eq. 8 composition that makes matching resumable: per-stream
                   speculative lane states, absorbed flags and byte counts
                   carried across segment boundaries, bit-identical to
-                  one-shot matching under any segmentation.
+                  one-shot matching under any segmentation.  ``merge`` is
+                  the host reference of the *device merge*
+                  (``Matcher.advance_cursors`` composes [B, K, S] cursor
+                  lane batches on device, one jitted call per bucket;
+                  ``kernels.ref.cursor_merge_ref`` is the shared numpy
+                  definition and ``merge_calls`` the tick-path regression
+                  counter).
     scheduler.py  ``MicroBatchScheduler`` + ``TickPolicy`` — an admission
                   queue that coalesces pending segments from many unrelated
                   streams into the sticky pow2 shape buckets and dispatches
-                  one fused device round per tick via
-                  ``Matcher.advance_segments`` (local / pallas / sharded).
+                  one fused, fully on-device round per tick via
+                  ``Matcher.advance_segments`` (local / pallas / sharded);
+                  fully-absorbed sessions are evicted from admission
+                  (``SchedulerStats.evicted``).
     session.py    ``StreamSession`` / ``StreamResult`` — the per-stream
                   handle a serving tier holds per live connection.
 
@@ -38,14 +46,14 @@ import numpy as np
 
 from ..core.engine.facade import Matcher
 from .cursor import (ENTRY_EXACT, MatchCursor, SegmentResult, merge,
-                     open_cursor, segment_result)
+                     merge_calls, open_cursor, segment_result)
 from .scheduler import MicroBatchScheduler, SchedulerStats, TickPolicy
 from .session import StreamResult, StreamSession
 
 __all__ = ["StreamMatcher", "StreamSession", "StreamResult", "TickPolicy",
            "SchedulerStats", "MicroBatchScheduler", "MatchCursor",
            "SegmentResult", "ENTRY_EXACT", "open_cursor", "segment_result",
-           "merge"]
+           "merge", "merge_calls"]
 
 
 class StreamMatcher:

@@ -36,11 +36,23 @@ import dataclasses
 import numpy as np
 
 from ..core.engine.plan import DeviceTables
+from ..kernels.ref import cursor_merge_ref
 
 __all__ = ["ENTRY_EXACT", "MatchCursor", "SegmentResult", "open_cursor",
-           "segment_result", "merge"]
+           "segment_result", "merge", "merge_calls"]
 
 ENTRY_EXACT = -1  # lane axis is exact (one true lane), not candidate-keyed
+
+# Host merges performed since import — the scheduler's tick path must leave
+# this untouched (composition happens on device: ``Matcher.advance_segments``
+# fuses the entry seed, ``Matcher.advance_cursors`` the lane composition).
+# ``benchmarks --only stream_throughput --smoke`` fails on a regression.
+_MERGE_CALLS = 0
+
+
+def merge_calls() -> int:
+    """Host-side ``merge`` invocations so far (regression counter)."""
+    return _MERGE_CALLS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,16 +105,24 @@ class MatchCursor:
         return tables.packed.accepting[self.states]
 
     def advanced(self, final_states: np.ndarray, n_bytes: int,
-                 last_class: int, tables: DeviceTables) -> "MatchCursor":
+                 last_class: int, tables: DeviceTables,
+                 absorbed: np.ndarray | None = None) -> "MatchCursor":
         """Collapsed successor from a device segment result (the scheduler's
-        fast path: ``Matcher.advance_segments`` already composed on device)."""
+        fast path: ``Matcher.advance_segments`` already composed on device).
+
+        ``absorbed`` takes the batch result's precomputed [K] flags
+        (``SegmentBatchResult.absorbed`` rows) so a tick performs zero
+        per-stream table lookups; omitted, they are derived here.
+        """
         if not self.exact:
             raise ValueError("device continuation requires an exact cursor")
         if n_bytes == 0:
             return self
         st = np.asarray(final_states, np.int32).reshape(-1, 1)
+        if absorbed is None:
+            absorbed = tables.absorbing[st].all(axis=1)
         return MatchCursor(lane_states=st, entry_class=ENTRY_EXACT,
-                           absorbed=tables.absorbing[st].all(axis=1),
+                           absorbed=np.asarray(absorbed, bool).reshape(-1),
                            byte_count=self.byte_count + int(n_bytes),
                            last_class=int(last_class))
 
@@ -153,13 +173,17 @@ def merge(cursor: MatchCursor, seg: SegmentResult, *,
     For every cursor lane state ``q``: look up ``q``'s lane in the segment's
     candidate row (``cand_index[seg.entry_class, q]``), take the segment's
     exit state there; a missing ``q`` is the pattern's absorbing sink; and a
-    ``pad``-free empty segment passes the cursor through unchanged.  This is
-    the merge step of ``kernels.ref.spec_merge_ref`` vectorized over the
-    cursor's lane axis, run on the host over [K, S] scalars.
+    ``pad``-free empty segment passes the cursor through unchanged.  The
+    composition itself is ``kernels.ref.cursor_merge_ref`` at batch size 1 —
+    the numpy host reference of the device merge
+    (``Matcher.advance_cursors`` runs the same composition batched on
+    device; the scheduler's tick path never calls this function, see
+    ``merge_calls``).
     """
+    global _MERGE_CALLS
+    _MERGE_CALLS += 1
     if seg.n_bytes == 0:
         return cursor
-    packed = tables.packed
     if seg.entry_class == ENTRY_EXACT:
         if cursor.byte_count != 0:
             raise ValueError("an exact-entry segment only composes onto a "
@@ -172,12 +196,11 @@ def merge(cursor: MatchCursor, seg: SegmentResult, *,
             raise ValueError(
                 f"segment keyed on class {seg.entry_class} cannot extend a "
                 f"cursor whose last byte classified to {cursor.last_class}")
-        q = cursor.lane_states                              # [K, Sc]
-        lane = tables.tables.cand_index[seg.entry_class, q] # [K, Sc]
-        hit = np.take_along_axis(seg.lane_states, np.maximum(lane, 0), axis=1)
-        sinks = packed.sinks.astype(np.int32)[:, None]
-        lane_states = np.where(lane < 0, np.where(sinks >= 0, sinks, q),
-                               hit).astype(np.int32)
+        lane_states = cursor_merge_ref(
+            cursor.lane_states[None], seg.lane_states[None],
+            np.array([seg.entry_class], np.int32),
+            tables.tables.cand_index, tables.packed.sinks,
+            pad_cls=tables.pad_cls)[0]
     return MatchCursor(lane_states=lane_states,
                        entry_class=cursor.entry_class,
                        absorbed=tables.absorbing[lane_states].all(axis=1),

@@ -13,8 +13,19 @@ closes that gap:
     ``Matcher.advance_segments`` call advances them all — segments share the
     planner's sticky pow2 shape buckets and ``batch_tile`` device tiles with
     whole-document matching, on any backend (local / pallas / sharded);
-  * streams whose cursor is **fully absorbed** skip the device entirely
-    (absorbing states self-loop on every class, so skipping is exact);
+  * streams whose cursor is **fully absorbed** are *evicted from admission*:
+    their bytes are accounted at ``enqueue`` time and they never enter the
+    queue again, so a long-lived serving tier pays nothing — not even queue
+    traversal — for decided streams (absorbing states self-loop on every
+    class, so skipping is exact; ``SchedulerStats.evicted`` counts sessions
+    dropped this way, once each);
+  * a **tick is fully on-device**: one ``Matcher.advance_segments`` call
+    composes every pending stream's cursor with its coalesced segment (the
+    entry seed *is* the Eq. 8 composition), and cursors update from the
+    batch result's precomputed arrays — zero per-stream host merges or
+    table lookups (``streaming.cursor.merge_calls`` is the regression
+    counter; the candidate-keyed batch variant is
+    ``Matcher.advance_cursors``);
   * **tick policies** bound latency: eager flush (the default), or a tick
     fires when ``max_batch`` streams have pending data, the oldest pending
     segment has waited ``max_delay`` feed events, or it has waited
@@ -84,6 +95,7 @@ class SchedulerStats:
     feeds: int = 0            # feed() calls admitted
     segments: int = 0         # coalesced segments actually matched
     absorbed_skips: int = 0   # segments skipped: cursor fully absorbed
+    evicted: int = 0          # sessions dropped from admission (absorbed)
     bytes_fed: int = 0
     bytes_matched: int = 0    # excludes absorbed skips
     bucket_calls: int = 0     # fused device dispatches across all ticks
@@ -126,10 +138,37 @@ class MicroBatchScheduler:
         return len(self._queue)
 
     def enqueue(self, session, data: bytes) -> None:
-        """Admit one segment; may trigger a tick per the policy."""
+        """Admit one segment; may trigger a tick per the policy.
+
+        Fully-absorbed sessions are **evicted** instead of admitted: no byte
+        can move any of their lanes (absorbing states self-loop on every
+        class), so their segments are accounted into the cursor's byte count
+        right here and the session never occupies a queue slot — ``close()``
+        stays bit-identical, the serving tier just stops paying for decided
+        streams.
+        """
         self._feed_seq += 1
         self.stats.feeds += 1
         self.stats.bytes_fed += len(data)
+        if bool(session.cursor.absorbed.all()):
+            buf = bytes(session._pending) + data
+            session._pending = bytearray()
+            session._pending_since = None
+            session._pending_wall = None
+            self._queue.pop(session.sid, None)
+            if buf:
+                last_class = int(self.matcher.packed.byte_to_class[buf[-1]])
+                session.cursor = session.cursor.skipped(len(buf), last_class)
+                self.stats.absorbed_skips += 1
+            if not session._evicted:
+                session._evicted = True
+                self.stats.evicted += 1
+            # the feed still counts as an event for everyone else's deadline:
+            # a queued live stream may now have waited max_delay feed events
+            # (or max_delay_s seconds), so the policy check must still run
+            if self._should_tick():
+                self.tick()
+            return
         session._pending += data
         if session._pending_since is None:
             session._pending_since = self._feed_seq
@@ -155,7 +194,16 @@ class MicroBatchScheduler:
 
     def tick(self) -> int:
         """Drain the queue in one coalesced device round; returns the number
-        of streams advanced (matched or skipped)."""
+        of streams advanced (matched or skipped).
+
+        The round is fully on-device: segment matching *and* the Eq. 8
+        cursor composition happen inside ``advance_segments``'s fused bucket
+        calls (the entry seed is the composition), and every cursor updates
+        from the batch result's arrays — no per-stream host merges
+        (``streaming.cursor.merge`` stays untouched; ``merge_calls`` proves
+        it) and no per-stream table lookups (absorbed flags come from
+        ``SegmentBatchResult.absorbed`` rows).
+        """
         if not self._queue:
             return 0
         sessions = list(self._queue.values())
@@ -170,8 +218,9 @@ class MicroBatchScheduler:
                 continue
             last_class = int(self.matcher.packed.byte_to_class[data[-1]])
             if bool(s.cursor.absorbed.all()):
-                # every pattern sits in an absorbing state: no byte can move
-                # any lane, so skipping the scan is bit-identical
+                # enqueue-time eviction keeps absorbed sessions out of the
+                # queue, so this only catches sessions absorbed *by the
+                # current drain order*; skipping the scan is bit-identical
                 s.cursor = s.cursor.skipped(len(data), last_class)
                 self.stats.absorbed_skips += 1
                 continue
@@ -183,7 +232,8 @@ class MicroBatchScheduler:
                 segs, np.stack(entries).astype(np.int32))
             for i, (s, n, last_class) in enumerate(live):
                 s.cursor = s.cursor.advanced(res.final_states[i], n,
-                                             last_class, self.matcher.dev)
+                                             last_class, self.matcher.dev,
+                                             absorbed=res.absorbed[i])
             self.stats.segments += len(live)
             self.stats.bytes_matched += int(res.lengths.sum())
             self.stats.bucket_calls += res.bucket_calls

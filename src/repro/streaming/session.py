@@ -40,7 +40,7 @@ class StreamSession:
     """
 
     __slots__ = ("sid", "owner", "cursor", "segments_fed", "closed",
-                 "_pending", "_pending_since", "_pending_wall")
+                 "_pending", "_pending_since", "_pending_wall", "_evicted")
 
     def __init__(self, sid: int, owner, cursor: MatchCursor):
         self.sid = sid
@@ -51,6 +51,7 @@ class StreamSession:
         self._pending = bytearray()
         self._pending_since: int | None = None
         self._pending_wall: float | None = None  # max_delay_s admission stamp
+        self._evicted = False  # counted once in SchedulerStats.evicted
 
     @property
     def pending_bytes(self) -> int:

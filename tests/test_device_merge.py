@@ -1,0 +1,264 @@
+"""Device cursor merge: ``Matcher.advance_cursors`` vs the host references.
+
+The streaming tick's device merge — segments matched independently,
+candidate-keyed on each stream's boundary class, composed with [B, K, S]
+cursor lane states inside the same fused bucket call — must be bit-identical
+to the pure host composition (``streaming.cursor.merge``, which is
+``kernels.ref.cursor_merge_ref`` at batch size 1) across:
+
+  * random segmentations of random documents,
+  * every backend (local / pallas / sharded),
+  * 1 and 8 devices, mesh shapes 1x1 / 2x4 / 8x1 (conftest forces 8 host
+    devices),
+
+and collapsing the composed lanes onto the exact prefix state must
+reproduce whole-document matching.  A hypothesis property test drives the
+same invariant when hypothesis is installed; the seeded sweep always runs.
+
+Also here: the ``LanePlan`` lowering contract (one compiled program per
+plan key) and the Pallas all-absorbed bucket early exit.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import Matcher, compile_regex, make_search_dfa
+from repro.core.engine import ENTRY_STARTS, LanePlan
+from repro.kernels import ref as kref
+from repro.launch.mesh import make_matcher_mesh
+from repro.streaming import merge, segment_result
+from repro.streaming.cursor import MatchCursor
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = list(b"abxy0189")
+
+BACKENDS = [("local", None), ("pallas", None),
+            ("sharded", (1, 1)), ("sharded", (2, 4)), ("sharded", (8, 1))]
+
+
+def _matcher(backend, shape, **kw):
+    if backend == "sharded":
+        n = shape[0] * shape[1]
+        if len(jax.devices()) < n:
+            pytest.skip(f"needs {n} host devices (conftest forces 8)")
+        kw["mesh"] = make_matcher_mesh(shape=shape)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    return Matcher(dfas, backend=backend, batch_tile=8, **kw)
+
+
+def _identity_cursor(m, cls):
+    """Zero-byte candidate-keyed cursor keyed on class ``cls``: its lane map
+    is the identity on the Eq. 11 candidate row itself."""
+    lanes = m.dev.tables.candidates[cls].astype(np.int32)
+    return MatchCursor(lane_states=lanes.copy(), entry_class=int(cls),
+                      absorbed=m.dev.absorbing[lanes].all(axis=1),
+                      byte_count=0, last_class=int(cls))
+
+
+def _drive(m, rng, n_streams=6, n_steps=3, max_len=400):
+    """B streams, each doc split into 1 exact prefix + n_steps candidate-keyed
+    segments; device lanes must equal the host merge chain bit-for-bit at
+    every step, and the collapsed finals must equal whole-doc matching."""
+    docs, splits = [], []
+    for _ in range(n_streams):
+        doc = bytes(rng.choice(ALPHABET,
+                               size=int(rng.integers(2, max_len))).astype(np.uint8))
+        cuts = sorted(1 + int(rng.integers(0, len(doc)))
+                      for _ in range(n_steps - 1))
+        bounds = [0] + cuts + [len(doc)]
+        parts = [doc[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+        # the exact prefix must be non-empty so every stream has a boundary
+        # class; later segments may be empty (identity composition)
+        docs.append(doc)
+        splits.append(parts)
+
+    entry = np.tile(m.packed.starts, (n_streams, 1))
+    r0 = m.advance_segments([sp[0] for sp in splits], entry)
+    c0 = np.array([int(m.packed.byte_to_class[sp[0][-1]]) for sp in splits],
+                  np.int32)
+    host = [_identity_cursor(m, c) for c in c0]
+    lanes = np.stack([h.lane_states for h in host])
+    last = c0.copy()
+
+    for step in range(1, n_steps):
+        segs = [sp[step] for sp in splits]
+        res = m.advance_cursors(segs, lanes, last)
+        for i, seg in enumerate(segs):
+            if not seg:
+                continue
+            sr = segment_result(m.dev, seg, int(host[i].last_class))
+            host[i] = merge(host[i], sr, tables=m.dev)
+        host_lanes = np.stack([h.lane_states for h in host])
+        np.testing.assert_array_equal(res.lane_states, host_lanes,
+                                      err_msg=f"step {step}")
+        np.testing.assert_array_equal(
+            res.absorbed, m.dev.absorbing[host_lanes].all(axis=2))
+        lanes = res.lane_states
+        last = np.array([int(m.packed.byte_to_class[segs[i][-1]])
+                         if segs[i] else last[i]
+                         for i in range(n_streams)], np.int32)
+
+    # collapse onto the exact prefix (one more host composition) and compare
+    # against one-shot whole-document matching
+    whole = m.membership_batch(docs)
+    cidx = m.dev.tables.cand_index
+    sinks = m.packed.sinks
+    for i in range(n_streams):
+        q0 = r0.final_states[i]
+        lane = cidx[c0[i], q0]
+        hit = np.take_along_axis(lanes[i], np.maximum(lane, 0)[:, None],
+                                 axis=1)[:, 0]
+        fin = np.where(lane < 0, np.where(sinks >= 0, sinks, q0), hit)
+        np.testing.assert_array_equal(fin, whole.final_states[i],
+                                      err_msg=f"stream {i}")
+
+
+@pytest.mark.parametrize("backend,shape", BACKENDS)
+def test_device_merge_matches_host_merge(backend, shape):
+    rng = np.random.default_rng(60 + (0 if shape is None else sum(shape)))
+    m = _matcher(backend, shape, num_chunks=4)
+    _drive(m, rng)
+
+
+def test_device_merge_matches_host_merge_hypothesis():
+    """Any segmentation, any byte content (hypothesis), local backend."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    m = _matcher("local", None, num_chunks=4)
+
+    @hyp.settings(max_examples=20, deadline=None)
+    @hyp.given(doc=st.binary(min_size=1, max_size=200),
+               cuts=st.lists(st.integers(min_value=1, max_value=200),
+                             min_size=1, max_size=4))
+    def check(doc, cuts):
+        bounds = [0] + sorted(min(c, len(doc)) for c in cuts) + [len(doc)]
+        parts = [doc[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+        if not parts[0]:  # the exact prefix supplies the boundary class
+            parts = [doc[:1], doc[1:]]
+        entry = m.packed.starts[None, :]
+        r0 = m.advance_segments([parts[0]], entry)
+        c0 = int(m.packed.byte_to_class[parts[0][-1]])
+        host = _identity_cursor(m, c0)
+        lanes = host.lane_states[None]
+        last = np.array([c0], np.int32)
+        for seg in parts[1:]:
+            res = m.advance_cursors([seg], lanes, last)
+            if seg:
+                host = merge(host, segment_result(m.dev, seg,
+                                                  int(host.last_class)),
+                             tables=m.dev)
+                last = np.array([int(m.packed.byte_to_class[seg[-1]])],
+                                np.int32)
+            np.testing.assert_array_equal(res.lane_states[0],
+                                          host.lane_states)
+            lanes = res.lane_states
+        # collapse and compare to one-shot
+        cidx = m.dev.tables.cand_index
+        sinks = m.packed.sinks
+        q0 = r0.final_states[0]
+        lane = cidx[c0, q0]
+        hit = np.take_along_axis(lanes[0], np.maximum(lane, 0)[:, None],
+                                 axis=1)[:, 0]
+        fin = np.where(lane < 0, np.where(sinks >= 0, sinks, q0), hit)
+        np.testing.assert_array_equal(fin, m.packed.run_all(doc))
+
+    check()
+
+
+def test_compose_cursor_matches_ref_on_random_lanes():
+    """The executor's jnp composition stage == kernels.ref.cursor_merge_ref
+    on raw arrays (including pad-class passthrough rows)."""
+    rng = np.random.default_rng(61)
+    m = _matcher("local", None, num_chunks=4)
+    t = m.dev
+    k, s, q = m.n_patterns, m.tables.i_max, m.packed.n_states
+    cidx_pad = np.asarray(t.cidx_pad_j)
+    for _ in range(5):
+        b = int(rng.integers(1, 9))
+        cur = rng.integers(0, q, size=(b, k, s)).astype(np.int32)
+        seg = rng.integers(0, q, size=(b, k, s)).astype(np.int32)
+        ec = rng.integers(0, t.pad_cls + 1, size=b).astype(np.int32)
+        want = kref.cursor_merge_ref(cur, seg, ec, cidx_pad,
+                                     m.packed.sinks, pad_cls=t.pad_cls)
+        got = np.asarray(m.executor._compose_cursor(
+            np.asarray(cur), np.asarray(seg), np.asarray(ec)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_advance_cursors_rejects_bad_inputs():
+    m = _matcher("local", None, num_chunks=4)
+    k, s = m.n_patterns, m.tables.i_max
+    lanes = np.zeros((2, k, s), np.int32)
+    with pytest.raises(ValueError):  # wrong lane shape
+        m.advance_cursors([b"ab", b"ba"], lanes[:, :, :1], np.zeros(2, np.int32))
+    with pytest.raises(ValueError):  # fresh streams belong in advance_segments
+        m.advance_cursors([b"ab", b"ba"], lanes,
+                          np.array([-1, 0], np.int32))
+    empty = m.advance_cursors([], np.zeros((0, k, s), np.int32),
+                              np.zeros(0, np.int32))
+    assert empty.lane_states.shape == (0, k, s)
+
+
+# --------------------------------------------------------------------------
+# LanePlan lowering contract
+# --------------------------------------------------------------------------
+
+def test_one_lowering_per_plan_key():
+    """Each distinct plan lowers exactly once; repeated dispatches reuse the
+    compiled program (the sticky-bucket retrace bound, per plan)."""
+    rng = np.random.default_rng(62)
+    m = _matcher("local", None, num_chunks=4, max_buckets=2)
+    docs = [bytes(rng.choice(ALPHABET, size=n).astype(np.uint8))
+            for n in (5, 40, 300, 200, 37)]
+    m.membership_batch(docs)
+    n_lowered = len(m.executor._lowered)
+    m.membership_batch(docs)
+    assert len(m.executor._lowered) == n_lowered  # cache hit, no relowering
+    keys = set(m.executor._lowered)
+    assert all(k[0] in ("seq", "spec") for k in keys)
+    # segment traffic of the same shapes adds entry-mode plans, not forks
+    entry = np.tile(m.packed.starts, (len(docs), 1))
+    m.advance_segments(docs, entry)
+    assert all(k[3] in ("starts", "states", "lanes")
+               for k in m.executor._lowered)
+
+
+def test_lane_plan_validation():
+    with pytest.raises(ValueError):
+        LanePlan(kind="bogus", width=8, chunk_len=0, entry=ENTRY_STARTS)
+    with pytest.raises(ValueError):
+        LanePlan(kind="seq", width=8, chunk_len=0, entry="bogus")
+    p = LanePlan(kind="spec", width=32, chunk_len=8, entry=ENTRY_STARTS)
+    assert p.key == ("spec", 32, 8, ENTRY_STARTS, True)
+
+
+# --------------------------------------------------------------------------
+# Pallas all-absorbed bucket early exit
+# --------------------------------------------------------------------------
+
+def test_pallas_all_absorbed_bucket_early_exit():
+    """A bucket whose every row is already absorbed skips the kernel: the
+    entry states come back verbatim and every non-empty row reports an
+    absorbed position (the local backend's in-scan exit now has a Pallas
+    counterpart at bucket granularity)."""
+    dfa = make_search_dfa(compile_regex(".*(hit)"))
+    m = Matcher(dfa, num_chunks=4, backend="pallas", batch_tile=4)
+    # drive real streams into absorption, then feed more bytes
+    docs = [b"x hit y" * 40, b"z hit w" * 40]
+    first = m.membership_batch(docs)
+    assert m.dev.absorbing[first.final_states].all()
+    more = [b"anything at all, long enough for the spec path " * 8] * 2
+    res = m.advance_segments(more, first.final_states)
+    np.testing.assert_array_equal(res.final_states, first.final_states)
+    assert res.early_exits == len(more)  # kernel skipped, rows retired at 0
+    # mixed buckets (one live row) must still run the kernel and stay exact
+    live_entry = np.tile(m.packed.starts, (2, 1))
+    mixed_entry = np.vstack([first.final_states[:1], live_entry[:1]])
+    res2 = m.advance_segments(more, mixed_entry)
+    want = Matcher(dfa, num_chunks=4, batch_tile=4).advance_segments(
+        more, mixed_entry)
+    np.testing.assert_array_equal(res2.final_states, want.final_states)
+    assert res2.early_exits == 0  # kernel ran start-to-end

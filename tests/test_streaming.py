@@ -288,17 +288,25 @@ def test_full_tiles_reach_full_occupancy():
 
 def test_absorbed_streams_skip_the_device():
     """Once every pattern of a stream is absorbing, further segments are
-    accounted but never matched — and the decision stays exact."""
+    accounted but never matched — and the decision stays exact.  The session
+    is *evicted* from admission: it never re-enters the queue and never
+    triggers another tick (stream-aware eviction)."""
     m = Matcher(make_search_dfa(compile_regex(".*(hit)")))
     sm = StreamMatcher(m)
     s = sm.open()
     s.feed(b"xx hit xx", flush=True)
     assert bool(s.cursor.absorbed.all())
     before = sm.stats.segments
+    ticks_before = sm.stats.ticks
     for _ in range(4):
         s.feed(b"more bytes that cannot change anything")
     assert sm.stats.segments == before
     assert sm.stats.absorbed_skips == 4
+    # evicted once, counted once; eager policy would have ticked 4 more
+    # times without eviction — the queue never even saw the session
+    assert sm.stats.evicted == 1
+    assert sm.stats.ticks == ticks_before
+    assert sm.scheduler.pending_streams == 0
     res = s.close()
     assert bool(res.accepted[0])
     assert res.byte_count == len(b"xx hit xx") + 4 * len(
@@ -307,6 +315,26 @@ def test_absorbed_streams_skip_the_device():
         res.final_states,
         m.membership_batch([b"xx hit xx" + b"more bytes that cannot change "
                             b"anything" * 4]).final_states[0])
+
+
+def test_evicted_feeds_still_advance_policy_deadlines():
+    """An absorbed stream's feeds are evicted at admission but still count
+    as feed events for *other* streams' max_delay deadline — eviction must
+    not un-bound a live stream's latency."""
+    # single-pattern absorbed stream + live stream under an event deadline
+    m1 = Matcher(make_search_dfa(compile_regex(".*(hit)")))
+    sm = StreamMatcher(m1, policy=TickPolicy(max_batch=100, max_delay=2))
+    dead, live = sm.open(), sm.open()
+    dead.feed(b"a hit b")
+    sm.flush()
+    assert bool(dead.cursor.absorbed.all())
+    live.feed(b"pending...")            # queued, waiting on the deadline
+    assert sm.stats.ticks == 1          # only the flush so far
+    dead.feed(b"x")                     # evicted, but a feed event
+    dead.feed(b"y")                     # 2nd event: live's deadline trips
+    assert sm.stats.ticks == 2
+    assert sm.stats.evicted == 1
+    live.close(), dead.close()
 
 
 def test_session_lifecycle_errors():
@@ -390,5 +418,10 @@ def test_decode_stream_matches_one_shot_prefill():
     for lo in range(0, 12, 3):           # chunked upload, 3 tokens at a time
         got = ds.feed_tokens(toks[:, lo:lo + 3])
     np.testing.assert_array_equal(np.asarray(got), want)
-    # each 4-row round coalesced into one tick
-    assert ds.stream.stats.ticks == 4
+    # each 4-row round coalesces into at most one tick; rounds whose every
+    # stream is already absorbed (random tokens hit the sink fast) are
+    # evicted at admission and dispatch nothing at all
+    stats = ds.stream.stats
+    assert 1 <= stats.ticks <= 4
+    assert stats.ticks + stats.absorbed_skips // 4 >= 4 - 1
+    assert stats.evicted <= 4
