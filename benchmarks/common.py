@@ -15,6 +15,33 @@ def emit(name: str, us_per_call: float, derived: float) -> None:
     print(f"{name},{us_per_call:.3f},{derived:.6g}")
 
 
+def write_json(path: str, meta: dict | None = None) -> None:
+    """Persist the rows emitted so far as a ``BENCH_*.json`` artifact.
+
+    The schema is the CSV contract plus provenance — enough for CI to
+    archive per-commit artifacts and diff them against the committed
+    baseline (``benchmarks/baselines/``); wall-clock fields are relative
+    measures, ``derived`` columns are the model quantities worth tracking.
+    """
+    import json
+    import platform
+    import sys
+
+    payload = {
+        "schema": 1,
+        "meta": {
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+            **(meta or {}),
+        },
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def time_us(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
     for _ in range(warmup):
         fn()

@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI sizes: tiny inputs, regression guards still "
                          "enforced (benchmarks that accept smoke=)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as a BENCH_*.json "
+                         "artifact (schema: benchmarks/common.write_json)")
     args = ap.parse_args()
 
     from . import paper_figs as pf
@@ -56,7 +59,14 @@ def main() -> None:
         if args.smoke and "smoke" in inspect.signature(fn).parameters:
             kwargs["smoke"] = True
         fn(**kwargs)
-    sys.stderr.write(f"[bench] total {time.time() - t0:.1f}s\n")
+    total = time.time() - t0
+    sys.stderr.write(f"[bench] total {total:.1f}s\n")
+    if args.json:
+        from . import common
+        common.write_json(args.json, meta={
+            "argv": sys.argv[1:], "total_s": round(total, 2),
+            "benchmarks": [n for n, _ in benches]})
+        sys.stderr.write(f"[bench] wrote {args.json}\n")
 
 
 if __name__ == "__main__":

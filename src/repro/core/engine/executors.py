@@ -110,6 +110,10 @@ class LaneExecutor:
         self.early_exit_segments = _prev_pow2(max(int(early_exit_segments), 1))
         self.traces = 0
         self._lowered: dict[tuple, object] = {}
+        # bumped by invalidate_layouts() when chunk boundaries move (capacity
+        # rebalance); only lowerings that *bake* boundaries fold it into
+        # their cache key, so layout-independent programs keep their entries
+        self.layout_epoch = 0
 
     # -- the one entry point ------------------------------------------------
 
@@ -136,6 +140,19 @@ class LaneExecutor:
 
     def _plan_key(self, plan: LanePlan, batch: int) -> tuple:
         return plan.key
+
+    def invalidate_layouts(self) -> None:
+        """Signal that chunk layout boundaries changed (capacity rebalance).
+
+        Bumps ``layout_epoch`` instead of clearing ``_lowered``: backends
+        whose compiled programs bake layout boundaries (the sharded spec
+        lowering) key on the epoch and re-lower lazily; every
+        layout-independent program — seq scans, the local/pallas lowerings,
+        which chunk uniformly — survives untouched, and returning to a
+        previously-seen layout is never required to recompile what never
+        depended on it.
+        """
+        self.layout_epoch += 1
 
     def _jit_lowering(self, body):
         """jit a lowering body under the retrace counter and buffer donation.

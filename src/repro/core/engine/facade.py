@@ -200,11 +200,15 @@ class Matcher:
                 raise ValueError(
                     f"batch_tile={self.batch_tile} must be a multiple of the "
                     f"mesh doc extent {doc_shards}")
+            self._doc_shards, self._chunk_shards = doc_shards, chunk_shards
+            self._mesh_devices = list(np.asarray(mesh.devices).reshape(-1))[:n_dev]
             if calibrate and capacities is None:
-                from ..profiling import profile_capacity
-                mesh_devs = list(np.asarray(mesh.devices).reshape(-1))[:n_dev]
-                capacities = profile_capacity(devices=mesh_devs,
-                                              n_symbols=20_000, repeats=3)
+                # cached per (device set, benchmark): repeated construction
+                # over the same fleet measures once; Matcher.recalibrate owns
+                # the explicit refresh
+                from ..profiling import calibrated_capacities
+                capacities = calibrated_capacities(self._mesh_devices,
+                                                   n_symbols=20_000, repeats=3)
             if capacities is None:
                 self.capacities = weights = None
             else:
@@ -213,11 +217,7 @@ class Matcher:
                     raise ValueError(f"need {n_dev} capacities (one per mesh "
                                      f"device), got {caps.size}")
                 self.capacities = caps
-                # Eq. 1 weights per doc row-block: each mesh row balances its
-                # own chunk axis; rows split documents, not symbols
-                caps2 = caps.reshape(doc_shards, chunk_shards)
-                weights = np.stack([capacity_weights(caps2[r])
-                                    for r in range(doc_shards)])
+                weights = self._row_weights(caps)
             self.planner = Planner(num_chunks=num_chunks,
                                    max_buckets=max_buckets,
                                    devices=chunk_shards, weights=weights,
@@ -269,6 +269,60 @@ class Matcher:
     def _spec_keys(self) -> list[int]:
         """Compiled speculative bucket keys (compat alias for the planner's)."""
         return self.planner.spec_keys
+
+    # -- capacity rebalancing (sharded backend) ------------------------------
+
+    def _row_weights(self, caps: np.ndarray) -> np.ndarray:
+        # Eq. 1 weights per doc row-block: each mesh row balances its own
+        # chunk axis; rows split documents, not symbols
+        caps2 = caps.reshape(self._doc_shards, self._chunk_shards)
+        return np.stack([capacity_weights(caps2[r])
+                         for r in range(self._doc_shards)])
+
+    def rebalance(self, capacities: Sequence[float]) -> None:
+        """Re-derive the capacity-weighted chunk layouts from new measured
+        capacities (sharded backend only).
+
+        The straggler-mitigation hook (paper Eq. 5): when observed per-device
+        times drift — a degraded host, a corrupted capacity profile — the
+        planner's weights update and its cached layouts drop; the executor's
+        layout epoch bumps so sharded spec lowerings (which bake chunk
+        boundaries as static slices) re-lower lazily while every
+        layout-independent compiled program survives.  Decisions stay
+        bit-identical across any rebalance — only *where* chunks are matched
+        moves, never the answer.  Callers must never rebalance mid-dispatch
+        (the scheduler applies it strictly between ticks).
+        """
+        if self.backend != "sharded":
+            raise ValueError("rebalance applies to the sharded backend only "
+                             "(single-device layouts are uniform)")
+        caps = np.asarray(capacities, np.float64).reshape(-1)
+        if caps.size != self.n_devices:
+            raise ValueError(f"need {self.n_devices} capacities (one per "
+                             f"mesh device), got {caps.size}")
+        if not np.all(np.isfinite(caps)) or (caps <= 0).any():
+            raise ValueError("capacities must be finite and > 0")
+        self.capacities = caps
+        self.planner.set_weights(self._row_weights(caps))
+        self.executor.invalidate_layouts()
+
+    def recalibrate(self, *, n_symbols: int = 20_000,
+                    repeats: int = 3) -> np.ndarray:
+        """Re-measure per-device capacities and rebalance onto them.
+
+        Bypasses (and replaces) the process-wide calibration cache entry for
+        this device set — the explicit refresh the rebalance path owns when
+        the cached profile no longer reflects reality.  Returns the fresh
+        [D] capacities.
+        """
+        if self.backend != "sharded":
+            raise ValueError("recalibrate applies to the sharded backend "
+                             "only (single-device layouts are uniform)")
+        from ..profiling import calibrated_capacities
+        caps = calibrated_capacities(self._mesh_devices, n_symbols=n_symbols,
+                                     repeats=repeats, refresh=True)
+        self.rebalance(caps)
+        return caps
 
     # -- public API ---------------------------------------------------------
 

@@ -375,6 +375,23 @@ class Planner:
         self.devices = int(devices)
         self.doc_shards = int(doc_shards)
         self.spec_m = int(spec_m)
+        self.weights: Optional[np.ndarray] = None
+        self.spec_keys: list[int] = []
+        self.seq_width = next_pow2(max(4 * self.num_chunks - 1, 1))
+        self._layouts: dict[int, ChunkLayout | MeshLayout] = {}
+        if weights is not None:
+            self.set_weights(weights)
+
+    def set_weights(self, weights: Optional[np.ndarray]) -> None:
+        """Replace the per-device capacity weights; drop cached layouts.
+
+        The between-tick rebalance path (``Matcher.rebalance``) lands here:
+        cached ``ChunkLayout``/``MeshLayout`` boundaries bake the *old*
+        weights, so the layout cache clears — while the sticky bucket keys
+        and the compiled seq width survive (only chunk boundaries move, not
+        shapes; executors that bake boundaries into lowered programs key
+        their cache on a layout epoch, see ``executors.LaneExecutor``).
+        """
         if weights is None:
             self.weights = None
         else:
@@ -385,10 +402,10 @@ class Planner:
                 raise ValueError("need one capacity weight per (doc, chunk) "
                                  f"device: expected {self.doc_shards}x"
                                  f"{self.devices}, got {w.shape}")
+            if not np.all(np.isfinite(w)) or (w <= 0).any():
+                raise ValueError("capacity weights must be finite and > 0")
             self.weights = w
-        self.spec_keys: list[int] = []
-        self.seq_width = next_pow2(max(4 * self.num_chunks - 1, 1))
-        self._layouts: dict[int, ChunkLayout | MeshLayout] = {}
+        self._layouts.clear()
 
     # -- chunk layouts ------------------------------------------------------
 

@@ -92,10 +92,13 @@ class ShardedExecutor(LaneExecutor):
 
     def _plan_key(self, plan: LanePlan, batch: int) -> tuple:
         # seq programs shard the row axis, so their compiled form depends on
-        # the tile row count (doc_batch_spec); spec programs do not
+        # the tile row count (doc_batch_spec); spec programs do not — but
+        # they *bake* the layout's chunk boundaries as static slices, so a
+        # capacity rebalance (layout_epoch bump) keys them to a fresh
+        # lowering while every seq entry survives the rebalance untouched
         if plan.kind == "seq":
             return plan.key + (batch,)
-        return plan.key
+        return plan.key + (self.layout_epoch,)
 
     def _lower(self, plan: LanePlan, layout, batch: int):
         if plan.kind == "seq":

@@ -22,7 +22,8 @@ from .automata import DFA, random_dfa
 from .engine import sequential_state
 from .partition import capacity_weights
 
-__all__ = ["profile_capacity", "profile_workers", "synthetic_capacities"]
+__all__ = ["profile_capacity", "profile_workers", "synthetic_capacities",
+           "calibrated_capacities", "clear_calibration_cache"]
 
 
 def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
@@ -70,6 +71,47 @@ def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
     if devices is None:
         return measure(None)
     return np.array([measure(d) for d in devices], dtype=np.float64)
+
+
+# (device set, benchmark signature) -> measured [D] capacities.  Calibration
+# is a timed benchmark per device: constructing several Matcher(calibrate=
+# True) instances over the same fleet must not pay it repeatedly, and only
+# the rebalance path (Matcher.recalibrate) owns an explicit refresh.
+_CALIBRATION_CACHE: dict[tuple, np.ndarray] = {}
+
+
+def _calibration_key(devices, dfa: DFA | None, n_symbols: int, repeats: int,
+                     seed: int) -> tuple:
+    # a custom benchmark DFA changes what is being measured -> its content
+    # hashes into the key; the default benchmark is pinned by its parameters
+    sig = ("default",) if dfa is None else (
+        dfa.table.shape, dfa.table.tobytes(), int(dfa.start))
+    return (tuple(str(d) for d in devices), sig, int(n_symbols),
+            int(repeats), int(seed))
+
+
+def calibrated_capacities(devices, dfa: DFA | None = None, *,
+                          n_symbols: int = 200_000, repeats: int = 5,
+                          seed: int = 0, refresh: bool = False) -> np.ndarray:
+    """Cached ``profile_capacity`` over a device set (one measurement per
+    (device set, benchmark) pair per process).
+
+    ``refresh=True`` forces a re-measurement and replaces the cache entry —
+    the hook ``Matcher.recalibrate`` uses when observed degradation says the
+    cached profile no longer reflects reality.  Returns a copy; mutating the
+    result never corrupts the cache.
+    """
+    key = _calibration_key(devices, dfa, n_symbols, repeats, seed)
+    if refresh or key not in _CALIBRATION_CACHE:
+        _CALIBRATION_CACHE[key] = np.asarray(
+            profile_capacity(dfa, n_symbols=n_symbols, repeats=repeats,
+                             seed=seed, devices=list(devices)), np.float64)
+    return _CALIBRATION_CACHE[key].copy()
+
+
+def clear_calibration_cache() -> None:
+    """Drop every cached calibration (tests; full cluster restart)."""
+    _CALIBRATION_CACHE.clear()
 
 
 def profile_workers(capacities: np.ndarray | list[float]) -> np.ndarray:

@@ -88,7 +88,19 @@ class StragglerPolicy:
             (1 - self.alpha) * self.ewma + self.alpha * t
         return bool((self.ewma / np.median(self.ewma)).max() > self.threshold)
 
+    def capacities(self) -> np.ndarray:
+        """Observed per-worker capacities (1 / EWMA time) — the Eq. 1 inputs.
+
+        Feed straight into ``Matcher.rebalance``: the streaming scheduler
+        does exactly that when ``update`` trips, so a degraded device's
+        decayed timing becomes a proportionally smaller chunk of every
+        bucket (paper Eq. 5) without re-running offline calibration.
+        """
+        if self.ewma is None:
+            raise ValueError("no step times observed yet")
+        return 1.0 / np.maximum(self.ewma, 1e-9)
+
     def rebalanced_shards(self, n_items: int, m: int = 1):
         """New weighted partition from observed speeds (paper Eqs. 1/5)."""
-        speeds = 1.0 / np.maximum(self.ewma, 1e-9)
-        return weighted_partition(n_items, capacity_weights(speeds), m)
+        return weighted_partition(n_items, capacity_weights(self.capacities()),
+                                  m)

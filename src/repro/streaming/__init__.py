@@ -24,6 +24,16 @@ matching these million byte streams as their bytes arrive".  Three layers:
                   (``SchedulerStats.evicted``).
     session.py    ``StreamSession`` / ``StreamResult`` — the per-stream
                   handle a serving tier holds per live connection.
+    checkpoint.py session snapshot/restore on ``training/checkpoint.py``'s
+                  atomic-publish format: because a cursor's [K, S] lane
+                  state is a complete composable summary (Eq. 8), a stream
+                  frozen here resumes anywhere — including on a matcher
+                  with a *different* ``mesh_shape`` — bit-identically
+                  (``StreamMatcher.snapshot`` / ``restore``).
+    faults.py     ``FaultPlan`` — deterministic fault injection (killed
+                  ticks, delayed devices, corrupted capacities) driving the
+                  scheduler's retry-with-restore + rebalance paths in tests
+                  and ``tools/faultbench.py``.
 
 ``StreamMatcher`` below is the public facade:
 
@@ -45,15 +55,21 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.engine.facade import Matcher
+from .checkpoint import (load_sessions_tree, save_sessions_tree,
+                         sessions_tree, table_signature, unpack_cursor)
 from .cursor import (ENTRY_EXACT, MatchCursor, SegmentResult, merge,
                      merge_calls, open_cursor, segment_result)
-from .scheduler import MicroBatchScheduler, SchedulerStats, TickPolicy
+from .faults import FaultPlan, InjectedFault
+from .scheduler import (MicroBatchScheduler, RetryPolicy, SchedulerStats,
+                        TickPolicy)
 from .session import StreamResult, StreamSession
 
 __all__ = ["StreamMatcher", "StreamSession", "StreamResult", "TickPolicy",
-           "SchedulerStats", "MicroBatchScheduler", "MatchCursor",
-           "SegmentResult", "ENTRY_EXACT", "open_cursor", "segment_result",
-           "merge", "merge_calls"]
+           "RetryPolicy", "SchedulerStats", "MicroBatchScheduler",
+           "MatchCursor", "SegmentResult", "ENTRY_EXACT", "open_cursor",
+           "segment_result", "merge", "merge_calls", "FaultPlan",
+           "InjectedFault", "table_signature", "sessions_tree",
+           "save_sessions_tree", "load_sessions_tree", "unpack_cursor"]
 
 
 class StreamMatcher:
@@ -86,7 +102,9 @@ class StreamMatcher:
     """
 
     def __init__(self, source, *, policy: TickPolicy | None = None,
-                 clock=None, **matcher_kwargs):
+                 clock=None, retry: RetryPolicy | None = None,
+                 straggler=None, fault_plan: FaultPlan | None = None,
+                 **matcher_kwargs):
         if isinstance(source, Matcher):
             if matcher_kwargs:
                 raise ValueError("matcher kwargs conflict with a pre-built "
@@ -96,12 +114,18 @@ class StreamMatcher:
             matcher_kwargs.setdefault("num_chunks", 1)
             self.matcher = Matcher(source, **matcher_kwargs)
         # clock (default time.monotonic) feeds the max_delay_s deadline;
-        # simulated event loops and tests inject their own
-        self.scheduler = (MicroBatchScheduler(self.matcher, policy)
-                          if clock is None else
-                          MicroBatchScheduler(self.matcher, policy,
-                                              clock=clock))
+        # simulated event loops and tests inject their own.  retry /
+        # straggler / fault_plan configure the scheduler's fault-tolerance
+        # layer (see scheduler.py docstring).
+        sched_kwargs = dict(retry=retry, straggler=straggler,
+                            fault_plan=fault_plan)
+        if clock is not None:
+            sched_kwargs["clock"] = clock
+        self.scheduler = MicroBatchScheduler(self.matcher, policy,
+                                             **sched_kwargs)
         self._next_sid = 0
+        self._sessions: dict[int, StreamSession] = {}
+        self._snapshot_step = 0
 
     # -- session lifecycle ---------------------------------------------------
 
@@ -109,7 +133,9 @@ class StreamMatcher:
         """Open a stream at byte position 0 (exact cursor at the starts)."""
         sid = self._next_sid
         self._next_sid += 1
-        return StreamSession(sid, self, open_cursor(self.matcher.dev))
+        session = StreamSession(sid, self, open_cursor(self.matcher.dev))
+        self._sessions[sid] = session
+        return session
 
     def feed(self, session: StreamSession, data: bytes | np.ndarray, *,
              flush: bool = False) -> None:
@@ -122,8 +148,10 @@ class StreamMatcher:
         buf = (bytes(data) if isinstance(data, (bytes, bytearray))
                else np.asarray(data, np.uint8).tobytes())
         session.segments_fed += 1
-        if buf:
-            self.scheduler.enqueue(session, buf)
+        # empty segments route through too: they are a no-op for this stream
+        # but still a feed event, so queued streams' max_delay / max_delay_s
+        # deadlines advance (the scheduler never parks a zero-byte segment)
+        self.scheduler.enqueue(session, buf)
         if flush:
             self.scheduler.tick()
 
@@ -142,12 +170,70 @@ class StreamMatcher:
             # coalesces every other pending stream into the same device round
             self.scheduler.tick()
         session.closed = True
+        self._sessions.pop(session.sid, None)
         states = session.cursor.states
         return StreamResult(
             accepted=self.matcher.packed.accepting[states].copy(),
             final_states=states.copy(),
             byte_count=session.cursor.byte_count,
             segments_fed=session.segments_fed)
+
+    # -- failover ------------------------------------------------------------
+
+    def snapshot(self, directory: str, *, step: int | None = None) -> str:
+        """Atomically publish every open session's state to ``directory``.
+
+        The snapshot covers cursor lane states, absorbed flags, byte counts,
+        boundary classes *and* unflushed pending bytes — the complete
+        per-stream state (the Eq. 8 composition makes the cursor a full
+        summary of everything already matched).  Writes go through
+        ``training/checkpoint.py``'s atomic publish (``step_<N>.tmp`` then
+        rename), so a writer killed mid-snapshot leaves only a ``.tmp``
+        directory that restore ignores.  Returns the published path.
+        """
+        sessions = sorted((s for s in self._sessions.values() if not s.closed),
+                          key=lambda s: s.sid)
+        tree = sessions_tree(sessions, self.matcher.packed, self._next_sid)
+        if step is None:
+            step = self._snapshot_step
+        self._snapshot_step = step + 1
+        return save_sessions_tree(directory, tree, step)
+
+    def restore(self, directory: str, *,
+                step: int | None = None) -> list[StreamSession]:
+        """Rebuild sessions from the latest (or ``step``-th) snapshot.
+
+        The restoring matcher may run any backend or ``mesh_shape`` — a
+        stream frozen on a 2x4 ("doc", "chunk") mesh resumes on 1x1 or 8x1
+        bit-identically; on a sharded target the tree is re-placed through
+        ``distributed.fault_tolerance.reshard_tree``.  Restored sessions
+        with pending bytes are re-admitted to the scheduler (no feed event
+        is counted — their bytes were accounted when originally fed).
+        Refuses a snapshot taken against a different packed pattern set, or
+        one whose session ids collide with sessions already open here.
+        """
+        tree, step = load_sessions_tree(directory, self.matcher, step=step)
+        sids = [int(s) for s in tree["sid"]]
+        clash = [sid for sid in sids if sid in self._sessions]
+        if clash:
+            raise ValueError(
+                f"snapshot session ids {clash[:5]} are already open on this "
+                "StreamMatcher; restore into a fresh matcher (or close the "
+                "colliding sessions first)")
+        off = tree["pending_off"]
+        restored = []
+        for i, sid in enumerate(sids):
+            sess = StreamSession(sid, self, unpack_cursor(tree, i))
+            sess.segments_fed = int(tree["segments_fed"][i])
+            sess._evicted = bool(tree["evicted"][i])
+            sess._pending = bytearray(
+                tree["pending"][int(off[i]):int(off[i + 1])].tobytes())
+            self._sessions[sid] = sess
+            self.scheduler.readmit(sess)
+            restored.append(sess)
+        self._next_sid = max(self._next_sid, int(tree["next_sid"]))
+        self._snapshot_step = max(self._snapshot_step, step + 1)
+        return restored
 
     # -- introspection -------------------------------------------------------
 

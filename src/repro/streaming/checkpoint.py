@@ -1,0 +1,155 @@
+"""Streaming failover: session snapshot/restore on the atomic checkpoint
+format.
+
+The SFA formulation (arXiv:1405.0562) guarantees a cursor's ``[K, S]`` lane
+state is a *complete, composable* summary of every byte the stream has seen
+— so the entire per-stream state of the runtime is one small fixed tree:
+cursor lane states, absorbed flags, byte counts, boundary classes, plus any
+unflushed pending bytes sitting in the admission queue.  This module packs
+that tree, and snapshots ride ``training/checkpoint.py``'s atomic-publish
+layout (writes go to ``step_<N>.tmp`` and are renamed into place), so a
+crashed writer never publishes a partial snapshot and restore always finds
+the latest *complete* step.
+
+Restore places the tree through ``distributed.fault_tolerance.reshard_tree``
+when the target matcher is mesh-sharded — ``jax.device_put`` under the *new*
+mesh's shardings re-places the state regardless of the mesh shape the
+snapshot was taken on — so a stream frozen on a 2x4 ("doc", "chunk") mesh
+resumes on 1x1 or 8x1 with bit-identical results (the Eq. 8 composition does
+not care where it runs; tests/test_fault_tolerance.py sweeps the shapes).
+
+A snapshot is refused on restore unless its packed-table signature matches
+the target matcher's: resuming a cursor against a different pattern set
+would silently decode garbage states.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from ..core.automata import PackedDFA
+from ..training.checkpoint import restore_checkpoint, save_checkpoint
+from .cursor import MatchCursor
+
+__all__ = ["table_signature", "sessions_tree", "save_sessions_tree",
+           "load_sessions_tree", "unpack_cursor"]
+
+# One leaf per field; the tree structure is the restore contract (the
+# ``like`` argument of restore_checkpoint only needs matching keys).
+TREE_KEYS = ("sig", "next_sid", "sid", "lane", "lane_width", "entry_class",
+             "absorbed", "byte_count", "last_class", "segments_fed",
+             "evicted", "pending", "pending_off")
+
+
+def table_signature(packed: PackedDFA) -> str:
+    """Content hash of the packed pattern set a snapshot was taken against.
+
+    Covers the transition table, start/accepting vectors and the byte->class
+    map — everything a cursor's packed state ids are meaningful relative to.
+    """
+    h = hashlib.sha1()
+    for arr in (packed.table, packed.starts, packed.accepting,
+                packed.byte_to_class):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def sessions_tree(sessions, packed: PackedDFA, next_sid: int) -> dict:
+    """Pack open sessions into the fixed checkpoint tree (pure host numpy).
+
+    Cursor lane axes may differ (exact cursors carry S=1, candidate-keyed
+    ones S=i_max); lanes pad to the widest and ``lane_width`` records each
+    cursor's real width.  Pending bytes concatenate with [B+1] offsets.
+    """
+    b = len(sessions)
+    k = packed.n_patterns
+    s = max((sess.cursor.lane_states.shape[1] for sess in sessions),
+            default=1)
+    lane = np.zeros((b, k, s), np.int32)
+    lane_width = np.zeros(b, np.int64)
+    entry_class = np.zeros(b, np.int32)
+    absorbed = np.zeros((b, k), bool)
+    byte_count = np.zeros(b, np.int64)
+    last_class = np.zeros(b, np.int32)
+    segments_fed = np.zeros(b, np.int64)
+    evicted = np.zeros(b, bool)
+    sid = np.zeros(b, np.int64)
+    pend: list[bytes] = []
+    for i, sess in enumerate(sessions):
+        cur = sess.cursor
+        w = cur.lane_states.shape[1]
+        lane[i, :, :w] = cur.lane_states
+        lane_width[i] = w
+        entry_class[i] = cur.entry_class
+        absorbed[i] = cur.absorbed
+        byte_count[i] = cur.byte_count
+        last_class[i] = cur.last_class
+        segments_fed[i] = sess.segments_fed
+        evicted[i] = sess._evicted
+        sid[i] = sess.sid
+        pend.append(bytes(sess._pending))
+    off = np.zeros(b + 1, np.int64)
+    if b:
+        off[1:] = np.cumsum([len(p) for p in pend])
+    pending = np.frombuffer(b"".join(pend), np.uint8).copy()
+    return {
+        "sig": np.frombuffer(table_signature(packed).encode(), np.uint8).copy(),
+        "next_sid": np.int64(next_sid),
+        "sid": sid, "lane": lane, "lane_width": lane_width,
+        "entry_class": entry_class, "absorbed": absorbed,
+        "byte_count": byte_count, "last_class": last_class,
+        "segments_fed": segments_fed, "evicted": evicted,
+        "pending": pending, "pending_off": off,
+    }
+
+
+def save_sessions_tree(directory: str, tree: dict, step: int) -> str:
+    """Atomic publish through the shared checkpoint layer."""
+    return save_checkpoint(directory, tree, step)
+
+
+def load_sessions_tree(directory: str, matcher, *, step=None
+                       ) -> tuple[dict, int]:
+    """Load (and verify) the latest complete snapshot for ``matcher``.
+
+    On a mesh-sharded matcher the restored tree is placed through
+    ``reshard_tree`` under the *target* mesh before coming back to host
+    numpy — the elastic path that makes a snapshot mesh-shape agnostic
+    (``restore_checkpoint(shardings=...)`` routes through it).
+    """
+    like = {key: np.zeros(0) for key in TREE_KEYS}
+    shardings = None
+    if matcher.backend == "sharded":
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        # replicated placement: cursor trees are small host-side state, and
+        # replication is valid on every mesh shape (doc-sharding would pin
+        # the session count to the doc extent)
+        repl = NamedSharding(matcher.executor.mesh, PartitionSpec())
+        shardings = {key: repl for key in TREE_KEYS}
+    tree, step = restore_checkpoint(directory, like, step=step,
+                                    shardings=shardings)
+    tree = {key: np.asarray(val) for key, val in tree.items()}
+    want = table_signature(matcher.packed)
+    got = bytes(tree["sig"].astype(np.uint8)).decode()
+    if got != want:
+        raise ValueError(
+            "snapshot was taken against a different packed pattern set "
+            f"(signature {got[:12]}.. != {want[:12]}..); cursor states are "
+            "only meaningful relative to the table they were matched with")
+    return tree, step
+
+
+def unpack_cursor(tree: dict, i: int) -> MatchCursor:
+    """Rebuild row ``i``'s ``MatchCursor`` from a loaded snapshot tree."""
+    w = int(tree["lane_width"][i])
+    return MatchCursor(
+        lane_states=np.ascontiguousarray(tree["lane"][i, :, :w], np.int32),
+        entry_class=int(tree["entry_class"][i]),
+        absorbed=np.asarray(tree["absorbed"][i], bool).copy(),
+        byte_count=int(tree["byte_count"][i]),
+        last_class=int(tree["last_class"][i]))

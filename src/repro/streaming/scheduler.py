@@ -34,6 +34,26 @@ closes that gap:
     owns no timer thread); an async serving loop enforces ``max_delay_s``
     between arrivals by calling ``flush()`` from its own timer.
 
+Around the tick sits the **fault-tolerance layer** (see
+docs/architecture.md, "Failover"):
+
+  * a **dispatch that raises** (device loss, OOM, an injected fault) is
+    retried under a bounded backoff through
+    ``distributed.fault_tolerance.RestartManager``: affected cursors are
+    restored from their pre-tick snapshots (``MatchCursor`` is frozen, so
+    the held references *are* the snapshot), and the identical segments are
+    re-dispatched — possibly onto a rebalanced layout.  When retries are
+    exhausted, every segment goes back into admission (``_requeue``) before
+    the failure propagates: no byte lost, none double-composed;
+  * **degraded capacity rebalancing**: per-tick device timings feed a
+    ``StragglerPolicy`` EWMA; when a device's decayed time drifts past the
+    threshold, the matcher re-derives its capacity-weighted chunk layouts
+    (``Matcher.rebalance``) strictly *between* ticks — the in-flight tick
+    always completes on the layout it started with;
+  * a ``FaultPlan`` (``streaming.faults``) injects kills, delays and
+    capacity corruption by tick index, so all of the above runs
+    deterministically in tests and ``tools/faultbench.py``.
+
 ``SchedulerStats.occupancy`` is real segments per padded device row — the
 measure of how well micro-batching fills the fused calls (benchmarks
 ``--only stream_throughput`` tracks it against the one-shot baseline).
@@ -47,8 +67,11 @@ import time
 import numpy as np
 
 from ..core.engine.facade import Matcher
+from ..distributed.fault_tolerance import RestartManager, StragglerPolicy
+from .faults import FaultPlan
 
-__all__ = ["TickPolicy", "SchedulerStats", "MicroBatchScheduler"]
+__all__ = ["TickPolicy", "RetryPolicy", "SchedulerStats",
+           "MicroBatchScheduler"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,10 +112,43 @@ class TickPolicy:
         return self.max_delay == 0 and self.max_delay_s is None
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry of a failed tick dispatch (device loss, OOM).
+
+    max_retries    : dispatch attempts allowed *after* the first failure
+                     (0 = fail fast: first raise propagates, segments
+                     requeued).
+    backoff_s      : sleep before the first retry; each further retry
+                     multiplies by ``backoff_factor``, capped at
+                     ``max_backoff_s``.  0 disables sleeping (tests, and
+                     schedulers whose caller owns pacing).
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 1.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff seconds must be >= 0")
+        if self.backoff_factor < 1.0:
+            raise ValueError("backoff_factor must be >= 1")
+
+    def delay(self, retry_index: int) -> float:
+        """Sleep before retry ``retry_index`` (0-based), bounded."""
+        return min(self.backoff_s * self.backoff_factor ** retry_index,
+                   self.max_backoff_s)
+
+
 @dataclasses.dataclass
 class SchedulerStats:
     ticks: int = 0            # device dispatch rounds
     feeds: int = 0            # feed() calls admitted
+    empty_feeds: int = 0      # zero-byte feeds (no-ops that advance deadlines)
     segments: int = 0         # coalesced segments actually matched
     absorbed_skips: int = 0   # segments skipped: cursor fully absorbed
     evicted: int = 0          # sessions dropped from admission (absorbed)
@@ -101,6 +157,11 @@ class SchedulerStats:
     bucket_calls: int = 0     # fused device dispatches across all ticks
     rows_dispatched: int = 0  # tile-padded device rows (occupancy denom)
     early_exits: int = 0      # segments retired by the absorbing early exit
+    dispatch_failures: int = 0  # dispatch attempts that raised (any cause)
+    retries: int = 0          # re-dispatches after a failed attempt
+    failed_ticks: int = 0     # ticks abandoned after max_retries (requeued)
+    requeued_segments: int = 0  # segments returned to admission on giveup
+    rebalances: int = 0       # capacity re-layouts applied between ticks
 
     @property
     def occupancy(self) -> float:
@@ -118,20 +179,33 @@ class MicroBatchScheduler:
 
     ``clock`` (default ``time.monotonic``) timestamps pending segments for
     the ``max_delay_s`` wall-clock deadline; tests and simulated event loops
-    may inject their own.
+    may inject their own.  ``retry`` bounds the retry-with-restore loop
+    around a failed dispatch; ``straggler`` (a
+    ``distributed.fault_tolerance.StragglerPolicy``) turns per-tick device
+    timings into between-tick capacity rebalances on a sharded matcher;
+    ``fault_plan`` (``streaming.faults.FaultPlan``) injects deterministic
+    failures, delays and capacity corruption; ``sleep`` is the backoff
+    sleeper (injectable for tests).
     """
 
     def __init__(self, matcher: Matcher, policy: TickPolicy | None = None,
-                 *, clock=time.monotonic):
+                 *, clock=time.monotonic, retry: RetryPolicy | None = None,
+                 straggler: StragglerPolicy | None = None,
+                 fault_plan: FaultPlan | None = None, sleep=time.sleep):
         self.matcher = matcher
         self.policy = policy or TickPolicy()
+        self.retry = retry or RetryPolicy()
+        self.straggler = straggler
+        self.fault_plan = fault_plan
         self._clock = clock
+        self._sleep = sleep
         # sid -> session; dict preserves admission order, and re-feeding an
         # already-queued session keeps its (oldest) position — so the first
         # entry always carries the oldest pending_since for the latency test
         self._queue: dict[int, object] = {}
         self._feed_seq = 0
         self.stats = SchedulerStats()
+        self.failures: list[tuple[int, str]] = []  # (tick index, repr(exc))
 
     @property
     def pending_streams(self) -> int:
@@ -150,6 +224,16 @@ class MicroBatchScheduler:
         self._feed_seq += 1
         self.stats.feeds += 1
         self.stats.bytes_fed += len(data)
+        if not data and not session._pending:
+            # empty segment: a no-op for this stream — it must not occupy a
+            # queue slot (a pending-since stamp with zero bytes would trip
+            # max_delay forever and inflate max_batch) — but it is still a
+            # feed event, so every queued stream's max_delay / max_delay_s
+            # deadline check must run
+            self.stats.empty_feeds += 1
+            if self._should_tick():
+                self.tick()
+            return
         if bool(session.cursor.absorbed.all()):
             buf = bytes(session._pending) + data
             session._pending = bytearray()
@@ -192,6 +276,21 @@ class MicroBatchScheduler:
                 and self._clock() - oldest._pending_wall
                 >= self.policy.max_delay_s)
 
+    def readmit(self, session) -> None:
+        """Re-admit a restored session's unflushed pending bytes.
+
+        The snapshot/restore path (``StreamMatcher.restore``) rebuilds
+        sessions whose pending segments were frozen mid-flight; re-admission
+        counts no feed event — the bytes were accounted when originally fed
+        — and triggers no tick (the caller decides when to flush).
+        """
+        if not session._pending:
+            return
+        if session._pending_since is None:
+            session._pending_since = self._feed_seq
+            session._pending_wall = self._clock()
+        self._queue[session.sid] = session
+
     def tick(self) -> int:
         """Drain the queue in one coalesced device round; returns the number
         of streams advanced (matched or skipped).
@@ -203,9 +302,18 @@ class MicroBatchScheduler:
         (``streaming.cursor.merge`` stays untouched; ``merge_calls`` proves
         it) and no per-stream table lookups (absorbed flags come from
         ``SegmentBatchResult.absorbed`` rows).
+
+        A dispatch that raises is retried with cursors restored from their
+        pre-tick snapshots (``_dispatch_tick``); when retries are exhausted
+        the segments return to admission and the failure propagates — the
+        queue never loses a byte.
         """
         if not self._queue:
             return 0
+        # failed ticks don't increment stats.ticks, but their dispatch round
+        # still consumed a tick index — keep indices unique so a FaultPlan
+        # schedule never re-fires on the requeued round
+        tick_idx = self.stats.ticks + self.stats.failed_ticks
         sessions = list(self._queue.values())
         self._queue.clear()
         live, segs, entries = [], [], []
@@ -228,12 +336,7 @@ class MicroBatchScheduler:
             segs.append(data)
             entries.append(s.cursor.states)
         if live:
-            res = self.matcher.advance_segments(
-                segs, np.stack(entries).astype(np.int32))
-            for i, (s, n, last_class) in enumerate(live):
-                s.cursor = s.cursor.advanced(res.final_states[i], n,
-                                             last_class, self.matcher.dev,
-                                             absorbed=res.absorbed[i])
+            res = self._dispatch_tick(tick_idx, live, segs, entries)
             self.stats.segments += len(live)
             self.stats.bytes_matched += int(res.lengths.sum())
             self.stats.bucket_calls += res.bucket_calls
@@ -241,3 +344,115 @@ class MicroBatchScheduler:
             self.stats.early_exits += res.early_exits
         self.stats.ticks += 1
         return len(sessions)
+
+    # -- fault-tolerant dispatch ---------------------------------------------
+
+    def _dispatch_tick(self, tick_idx: int, live, segs, entries):
+        """One fused dispatch under retry-with-restore semantics.
+
+        The pre-tick cursors are the snapshot — ``MatchCursor`` is frozen,
+        so holding the references is a complete, immutable copy.  The fused
+        call *and* the cursor commit run as one ``RestartManager`` step: a
+        raise anywhere (device loss inside ``advance_segments``, or a
+        post-commit fault) restores every affected cursor from its snapshot
+        via the manager's ``restore_fn``, applies the bounded backoff, lets
+        the straggler monitor rebalance the layout, and re-dispatches the
+        identical segments — so a retried segment is composed exactly once.
+        When ``RetryPolicy.max_retries`` is exhausted the segments are
+        requeued into admission (no byte lost) and the failure propagates,
+        cursors restored.
+        """
+        snapshots = [s.cursor for (s, _, _) in live]
+        entry = np.stack(entries).astype(np.int32)
+        state = {"attempt": 0}
+        box: dict[str, object] = {}
+
+        def step_fn(st, _step):
+            attempt = state["attempt"]
+            state["attempt"] += 1
+            if self.fault_plan is not None:
+                self.fault_plan.maybe_fail(tick_idx, attempt, "pre")
+            t0 = self._clock()
+            res = self.matcher.advance_segments(segs, entry)
+            wall = self._clock() - t0
+            for i, (s, n, last_class) in enumerate(live):
+                s.cursor = s.cursor.advanced(res.final_states[i], n,
+                                             last_class, self.matcher.dev,
+                                             absorbed=res.absorbed[i])
+            if self.fault_plan is not None:
+                # post-commit fault: cursors are already updated — recovery
+                # MUST roll them back or the retry double-composes
+                self.fault_plan.maybe_fail(tick_idx, attempt, "post")
+            box["res"], box["wall"] = res, wall
+            return st
+
+        def restore_fn():
+            for (s, _, _), cur in zip(live, snapshots):
+                s.cursor = cur
+            retry_idx = state["attempt"] - 1  # per-dispatch backoff index
+            self.stats.retries += 1
+            # a failed attempt is itself a degradation signal: feed the
+            # straggler EWMA so the retry can land on a rebalanced layout
+            self._feed_straggler(tick_idx, None)
+            delay = self.retry.delay(retry_idx)
+            if delay > 0:
+                self._sleep(delay)
+            return None, 0
+
+        mgr = RestartManager(lambda _state, _step: None, restore_fn,
+                             max_restarts=self.retry.max_retries)
+        try:
+            mgr.run(None, 0, 1, step_fn)
+        except Exception:
+            # retries exhausted: cursors back to their snapshots, segments
+            # back into admission ahead of anything fed later — the caller
+            # sees the failure, the queue sees no loss
+            for (s, _, _), cur in zip(live, snapshots):
+                s.cursor = cur
+            self._requeue(live, segs)
+            self.stats.failed_ticks += 1
+            raise
+        finally:
+            self.stats.dispatch_failures += len(mgr.failures)
+            self.failures.extend((tick_idx, msg) for _, msg in mgr.failures)
+        self._feed_straggler(tick_idx, float(box["wall"]))
+        return box["res"]
+
+    def _requeue(self, live, segs) -> None:
+        """Return a failed tick's segments to the head of admission."""
+        requeued: dict[int, object] = {}
+        for (s, _, _), data in zip(live, segs):
+            # anything fed between the failed dispatch and this requeue sits
+            # in s._pending already — the failed segment goes back in front
+            s._pending = bytearray(data) + s._pending
+            if s._pending_since is None:
+                s._pending_since = self._feed_seq
+                s._pending_wall = self._clock()
+            requeued[s.sid] = s
+            self.stats.requeued_segments += 1
+        requeued.update(self._queue)
+        self._queue = requeued
+
+    def _feed_straggler(self, tick_idx: int, wall: float | None) -> None:
+        """Feed per-device timings into the EWMA; rebalance on a trip.
+
+        Runs strictly *between* dispatches (after a tick completes, or
+        between retry attempts) — an in-flight fused call always finishes on
+        the layout it started with.  Without a fault plan the single wall
+        measurement spreads uniformly (real per-host telemetry would slot in
+        here); a ``FaultPlan`` overlays its scheduled delays and capacity
+        corruption, which is how degraded-capacity recovery is exercised
+        deterministically.
+        """
+        if self.straggler is None:
+            return
+        m = self.matcher
+        if m.backend != "sharded" or m.n_devices < 2:
+            return  # single-device layouts are uniform: nothing to rebalance
+        n = m.n_devices
+        base = np.full(n, max(wall if wall is not None else 1e-3, 1e-9) / n)
+        times = (self.fault_plan.device_times(tick_idx, base)
+                 if self.fault_plan is not None else base)
+        if self.straggler.update(times):
+            m.rebalance(self.straggler.capacities())
+            self.stats.rebalances += 1

@@ -95,11 +95,25 @@ def save_checkpoint_async(directory: str, state: Any, step: int) -> None:
     _SAVER.submit(directory, state, step)
 
 
+def _step_of(name: str) -> Optional[int]:
+    """Step number of a *published* checkpoint dir name, else None.
+
+    ``step_<N>.tmp`` (a crashed or in-flight writer) and any stray
+    non-numeric ``step_*`` entry are never a restore candidate.
+    """
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+    steps = [s for d in os.listdir(directory)
+             if (s := _step_of(d)) is not None]
     return max(steps) if steps else None
 
 
@@ -144,9 +158,8 @@ class CheckpointManager:
         return restore_checkpoint(self.directory, like, shardings=shardings)
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp"))
+        steps = sorted(s for d in os.listdir(self.directory)
+                       if (s := _step_of(d)) is not None)
         for s in steps[: -self.keep]:
             import shutil
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),

@@ -1,0 +1,464 @@
+"""Fault-tolerance layer: checkpoint/restore, retry-with-restore, rebalance.
+
+The acceptance bar (ISSUE 6): a stream checkpointed mid-segment and restored
+on a *different* mesh shape yields final [B, K] results bit-identical to the
+uninterrupted run, and an injected-fault scheduler run (killed ticks,
+degraded capacities) completes with zero lost and zero double-composed
+segments.  Byte counts are the loss/double-compose detector: a lost segment
+deflates ``byte_count`` below the fed total, a double-composed one inflates
+it — so ``byte_count == len(doc)`` plus bit-identical finals is exact.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import Matcher, compile_regex, make_search_dfa
+from repro.launch.mesh import make_matcher_mesh
+from repro.streaming import (FaultPlan, InjectedFault, RetryPolicy,
+                             StreamMatcher, TickPolicy, table_signature)
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = np.frombuffer(b"abxy0189", np.uint8)
+LAZY = TickPolicy(max_batch=1 << 30, max_delay=1 << 30)  # explicit flush
+
+
+def _dfas():
+    return [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+
+
+def _docs(rng, n, size):
+    return [bytes(rng.choice(ALPHABET, size=size).astype(np.uint8))
+            for _ in range(n)]
+
+
+def _oracle(dfas, docs):
+    return Matcher(dfas, num_chunks=1).membership_batch(docs).final_states
+
+
+def _mesh_or_skip(shape):
+    if len(jax.devices()) < shape[0] * shape[1]:
+        pytest.skip(f"needs {shape[0] * shape[1]} host devices")
+    return make_matcher_mesh(shape=shape)
+
+
+def _run_segments(sm, docs, seg, *, swallow=()):
+    sessions = [sm.open() for _ in docs]
+    rounds = max(-(-len(d) // seg) for d in docs)
+    for r in range(rounds):
+        for s, d in zip(sessions, docs):
+            piece = d[r * seg:(r + 1) * seg]
+            if piece:
+                try:
+                    s.feed(piece)
+                except swallow:
+                    pass
+        try:
+            sm.flush()
+        except swallow:
+            pass
+    while True:
+        try:
+            sm.flush()
+            break
+        except swallow:
+            continue
+    return sessions
+
+
+def _check(sessions, docs, oracle):
+    finals = np.stack([s.close().final_states for s in sessions])
+    assert (finals == oracle).all()
+    for s, d in zip(sessions, docs):
+        assert s.byte_count == len(d)  # no loss, no double-compose
+
+
+# --------------------------------------------------------------------------
+# satellite: empty feeds are no-ops that still advance deadlines
+# --------------------------------------------------------------------------
+
+def test_empty_feed_is_noop():
+    sm = StreamMatcher(_dfas())
+    s = sm.open()
+    s.feed(b"")  # eager policy + empty queue: nothing to dispatch
+    assert sm.stats.ticks == 0 and sm.stats.empty_feeds == 1
+    assert sm.scheduler.pending_streams == 0
+    r = s.close()
+    assert r.byte_count == 0 and r.segments_fed == 1
+
+
+def test_empty_feed_advances_max_delay_deadline():
+    sm = StreamMatcher(_dfas(), policy=TickPolicy(max_batch=64, max_delay=2))
+    a, b = sm.open(), sm.open()
+    a.feed(b"ab")      # event 1: a pending since seq 1
+    b.feed(b"")        # event 2: waited 1 < 2 -> no tick
+    assert sm.stats.ticks == 0
+    b.feed(b"")        # event 3: a waited 2 >= 2 -> tick fires
+    assert sm.stats.ticks == 1
+    assert a.byte_count == 2
+    assert sm.stats.empty_feeds == 2
+
+
+def test_empty_feed_never_occupies_a_queue_slot():
+    sm = StreamMatcher(_dfas(), policy=TickPolicy(max_batch=3, max_delay=0,
+                                                  max_delay_s=None))
+    sessions = [sm.open() for _ in range(3)]
+    sessions[0].feed(b"")
+    sessions[1].feed(b"")
+    # two empty feeds must not count toward max_batch=3
+    assert sm.scheduler.pending_streams == 0 and sm.stats.ticks == 0
+
+
+# --------------------------------------------------------------------------
+# tentpole (3): retry-with-restore — killed ticks, no loss, no double-compose
+# --------------------------------------------------------------------------
+
+def test_injected_prefault_retries_bit_identical():
+    rng = np.random.default_rng(0)
+    dfas = _dfas()
+    docs = _docs(rng, 6, 96)
+    oracle = _oracle(dfas, docs)
+    plan = FaultPlan(kill={0: 2, 1: 1})
+    sm = StreamMatcher(dfas, retry=RetryPolicy(max_retries=3),
+                       fault_plan=plan)
+    sessions = _run_segments(sm, docs, 32)
+    _check(sessions, docs, oracle)
+    assert plan.injected == 3
+    assert sm.stats.retries == 3
+    assert sm.stats.dispatch_failures == 3
+    assert sm.stats.failed_ticks == 0
+
+
+def test_injected_postfault_does_not_double_compose():
+    # the nasty case: the fault fires *after* cursors were committed — the
+    # retry must roll them back or every segment composes twice
+    rng = np.random.default_rng(1)
+    dfas = _dfas()
+    docs = _docs(rng, 5, 64)
+    oracle = _oracle(dfas, docs)
+    plan = FaultPlan(kill_post={0: 1, 1: 1})
+    sm = StreamMatcher(dfas, retry=RetryPolicy(max_retries=2),
+                       fault_plan=plan)
+    sessions = _run_segments(sm, docs, 32)
+    _check(sessions, docs, oracle)
+    assert plan.injected == 2 and sm.stats.retries == 2
+
+
+def test_giveup_requeues_and_later_flush_completes():
+    rng = np.random.default_rng(2)
+    dfas = _dfas()
+    docs = _docs(rng, 4, 64)
+    oracle = _oracle(dfas, docs)
+    plan = FaultPlan(kill={0: 5})  # outlasts max_retries=1 -> give up once
+    sm = StreamMatcher(dfas, policy=LAZY, retry=RetryPolicy(max_retries=1),
+                       fault_plan=plan)
+    sessions = [sm.open() for _ in docs]
+    for s, d in zip(sessions, docs):
+        s.feed(d[:32])
+    with pytest.raises(InjectedFault):
+        sm.flush()
+    # nothing lost: the failed tick returned every segment to admission
+    assert sm.stats.failed_ticks == 1
+    assert sm.stats.requeued_segments == len(docs)
+    assert all(s.pending_bytes == 32 for s in sessions)
+    for s, d in zip(sessions, docs):
+        s.feed(d[32:])
+    sm.flush()  # tick index moved past the kill schedule -> succeeds
+    _check(sessions, docs, oracle)
+
+
+def test_retry_backoff_uses_injected_sleep():
+    sleeps = []
+    plan = FaultPlan(kill={0: 2})
+    sm = StreamMatcher(_dfas(),
+                       retry=RetryPolicy(max_retries=3, backoff_s=0.125,
+                                         backoff_factor=2.0, max_backoff_s=1.0))
+    sm.scheduler.fault_plan = plan
+    sm.scheduler._sleep = sleeps.append
+    s = sm.open()
+    s.feed(b"abab")
+    assert sleeps == [0.125, 0.25]
+    assert s.byte_count == 4
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_s=-1.0)
+    assert RetryPolicy(backoff_s=0.5, max_backoff_s=0.8).delay(3) == 0.8
+
+
+def test_fault_plan_phase_validation():
+    with pytest.raises(ValueError):
+        FaultPlan().maybe_fail(0, 0, "mid")
+
+
+# --------------------------------------------------------------------------
+# tentpole (1): snapshot/restore, including across mesh shapes
+# --------------------------------------------------------------------------
+
+def test_snapshot_restore_roundtrip_local(tmp_path):
+    rng = np.random.default_rng(3)
+    dfas = _dfas()
+    docs = _docs(rng, 5, 48)
+    oracle = _oracle(dfas, docs)
+    sm = StreamMatcher(dfas, policy=LAZY)
+    sessions = [sm.open() for _ in docs]
+    for s, d in zip(sessions, docs):
+        s.feed(d[:16])
+    sm.flush()
+    for s, d in zip(sessions, docs):
+        s.feed(d[16:32])  # pending at snapshot time
+    sm.snapshot(str(tmp_path))
+
+    sm2 = StreamMatcher(dfas, policy=LAZY)
+    restored = {s.sid: s for s in sm2.restore(str(tmp_path))}
+    sessions2 = [restored[s.sid] for s in sessions]
+    assert all(s.pending_bytes == 16 for s in sessions2)
+    for s, d in zip(sessions2, docs):
+        s.feed(d[32:])
+    sm2.flush()
+    _check(sessions2, docs, oracle)
+    # segments_fed carried over: 2 before the snapshot + 1 after
+    assert all(s.segments_fed == 3 for s in sessions2)
+
+
+@pytest.mark.parametrize("src_shape,dst_shape", [
+    ((2, 4), (1, 1)),
+    ((2, 4), (8, 1)),
+    ((1, 1), (2, 4)),
+])
+def test_snapshot_restore_across_mesh_shapes(tmp_path, src_shape, dst_shape):
+    src_mesh = _mesh_or_skip(src_shape)
+    dst_mesh = _mesh_or_skip(dst_shape)
+    rng = np.random.default_rng(4)
+    dfas = _dfas()
+    docs = _docs(rng, 4, 128)
+    oracle = _oracle(dfas, docs)
+
+    sm = StreamMatcher(dfas, backend="sharded", mesh=src_mesh, num_chunks=8,
+                       policy=LAZY)
+    sessions = [sm.open() for _ in docs]
+    for s, d in zip(sessions, docs):
+        s.feed(d[:64])
+    sm.flush()
+    for s, d in zip(sessions, docs):
+        s.feed(d[64:96])  # in-flight pending bytes cross the mesh change
+    sm.snapshot(str(tmp_path))
+
+    sm2 = StreamMatcher(dfas, backend="sharded", mesh=dst_mesh, num_chunks=8,
+                        policy=LAZY)
+    restored = {s.sid: s for s in sm2.restore(str(tmp_path))}
+    sessions2 = [restored[s.sid] for s in sessions]
+    for s, d in zip(sessions2, docs):
+        s.feed(d[96:])
+    sm2.flush()
+    _check(sessions2, docs, oracle)
+
+
+def test_restore_ignores_crashed_writer_tmp(tmp_path):
+    sm = StreamMatcher(_dfas(), policy=LAZY)
+    s = sm.open()
+    s.feed(b"ba")
+    sm.snapshot(str(tmp_path))
+    # a writer that died mid-publish leaves step_<N>.tmp; restore skips it
+    os.makedirs(tmp_path / "step_00000099.tmp")
+    (tmp_path / "step_00000099.tmp" / "arrays.npz").write_bytes(b"garbage")
+    os.makedirs(tmp_path / "step_junk")  # stray non-numeric dir tolerated
+
+    sm2 = StreamMatcher(_dfas(), policy=LAZY)
+    restored = sm2.restore(str(tmp_path))
+    assert len(restored) == 1 and restored[0].pending_bytes == 2
+    r = restored[0].close()
+    assert r.byte_count == 2
+
+
+def test_restore_refuses_wrong_pattern_set(tmp_path):
+    sm = StreamMatcher(_dfas(), policy=LAZY)
+    sm.open().feed(b"ab")
+    sm.snapshot(str(tmp_path))
+    other = StreamMatcher([make_search_dfa(compile_regex(".*zz"))],
+                          policy=LAZY)
+    with pytest.raises(ValueError, match="different packed pattern set"):
+        other.restore(str(tmp_path))
+
+
+def test_restore_refuses_sid_collision(tmp_path):
+    sm = StreamMatcher(_dfas(), policy=LAZY)
+    sm.open().feed(b"ab")
+    sm.snapshot(str(tmp_path))
+    sm2 = StreamMatcher(_dfas(), policy=LAZY)
+    sm2.open()  # sid 0 already open here
+    with pytest.raises(ValueError, match="already open"):
+        sm2.restore(str(tmp_path))
+
+
+def test_restore_continues_sid_allocation(tmp_path):
+    sm = StreamMatcher(_dfas(), policy=LAZY)
+    for _ in range(3):
+        sm.open()
+    sm.snapshot(str(tmp_path))
+    sm2 = StreamMatcher(_dfas(), policy=LAZY)
+    sm2.restore(str(tmp_path))
+    assert sm2.open().sid == 3  # never re-issues a restored sid
+
+
+def test_table_signature_distinguishes_pattern_sets():
+    a = Matcher(_dfas()).packed
+    b = Matcher([make_search_dfa(compile_regex(".*zz"))]).packed
+    assert table_signature(a) == table_signature(a)
+    assert table_signature(a) != table_signature(b)
+
+
+# --------------------------------------------------------------------------
+# satellite: training/checkpoint reshard round-trips + tolerant step parse
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 1), (2, 4), (8, 1)])
+def test_checkpoint_reshard_roundtrip_mesh_shapes(tmp_path, shape):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+    mesh = _mesh_or_skip(shape)
+    tree = {"a": np.arange(24, dtype=np.int32).reshape(4, 6),
+            "b": np.linspace(0.0, 1.0, 7, dtype=np.float32)}
+    save_checkpoint(str(tmp_path), tree, 5)
+    repl = NamedSharding(mesh, PartitionSpec())
+    out, step = restore_checkpoint(
+        str(tmp_path), {k: np.zeros(0) for k in tree},
+        shardings={k: repl for k in tree})
+    assert step == 5
+    for k in tree:
+        assert (np.asarray(out[k]) == tree[k]).all()
+
+
+def test_latest_step_tolerates_stray_entries(tmp_path):
+    from repro.training.checkpoint import latest_step, save_checkpoint
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), {"x": np.zeros(2)}, 3)
+    os.makedirs(tmp_path / "step_00000009.tmp")   # crashed writer
+    os.makedirs(tmp_path / "step_notanumber")     # stray dir
+    (tmp_path / "step_8").mkdir()                 # unpadded but numeric
+    assert latest_step(str(tmp_path)) == 8
+
+
+# --------------------------------------------------------------------------
+# tentpole (2): degraded-capacity rebalancing between ticks
+# --------------------------------------------------------------------------
+
+def test_straggler_capacities():
+    from repro.distributed.fault_tolerance import StragglerPolicy
+    p = StragglerPolicy(n_workers=4)
+    with pytest.raises(ValueError):
+        p.capacities()
+    p.update(np.array([1.0, 1.0, 1.0, 2.0]))
+    caps = p.capacities()
+    assert caps.shape == (4,) and caps[3] < caps[0]
+
+
+def test_rebalance_bit_identity_and_lowering_cache_survival():
+    mesh = _mesh_or_skip((1, 2))
+    rng = np.random.default_rng(5)
+    dfas = _dfas()
+    m = Matcher(dfas, backend="sharded", mesh=mesh, num_chunks=4)
+    docs = _docs(rng, 4, 64) + _docs(rng, 2, 8)  # spec + seq buckets
+    before = m.membership_batch(docs)
+    keys_before = set(m.executor._lowered)
+    traces_before = m.executor.traces
+
+    m.rebalance([2.0, 1.0])
+    assert m.planner.weights is not None
+    after = m.membership_batch(docs)
+    assert (after.final_states == before.final_states).all()
+    # layout moved real symbols toward the faster device
+    assert after.device_work[0] > before.device_work[0]
+
+    # spec programs re-lowered under the new layout epoch; every old entry
+    # (notably the layout-independent seq program) survived the rebalance
+    assert keys_before <= set(m.executor._lowered)
+    spec_traces = m.executor.traces - traces_before
+    assert spec_traces >= 1
+
+    # a third run recompiles nothing
+    traces = m.executor.traces
+    again = m.membership_batch(docs)
+    assert m.executor.traces == traces
+    assert (again.final_states == before.final_states).all()
+
+
+def test_rebalance_validates():
+    mesh = _mesh_or_skip((1, 2))
+    m = Matcher(_dfas(), backend="sharded", mesh=mesh, num_chunks=4)
+    with pytest.raises(ValueError):
+        m.rebalance([1.0])          # wrong arity
+    with pytest.raises(ValueError):
+        m.rebalance([1.0, 0.0])     # non-positive
+    m_local = Matcher(_dfas())
+    with pytest.raises(ValueError):
+        m_local.rebalance([1.0])    # sharded-only
+
+
+def test_scheduler_straggler_rebalances_between_ticks():
+    from repro.distributed.fault_tolerance import StragglerPolicy
+    mesh = _mesh_or_skip((1, 2))
+    rng = np.random.default_rng(6)
+    dfas = _dfas()
+    docs = _docs(rng, 4, 96)
+    oracle = _oracle(dfas, docs)
+    # multiplicative skew: device 0 reports 8x slower regardless of the
+    # absolute tick wall time (robust on loaded CI hosts); enough ticks for
+    # the EWMA to decay tick 0's one-off compile wall
+    skew = np.array([8.0, 1.0])
+    plan = FaultPlan(capacity_skew={t: skew for t in range(1, 128)})
+    sm = StreamMatcher(dfas, backend="sharded", mesh=mesh, num_chunks=4,
+                       straggler=StragglerPolicy(n_workers=2),
+                       fault_plan=plan)
+    sessions = _run_segments(sm, docs, 8)
+    assert sm.stats.rebalances >= 1
+    _check(sessions, docs, oracle)
+
+
+# --------------------------------------------------------------------------
+# satellite: calibration cache + explicit recalibrate
+# --------------------------------------------------------------------------
+
+def test_calibration_cached_per_device_set(monkeypatch):
+    from repro.core import profiling
+    profiling.clear_calibration_cache()
+    calls = {"n": 0}
+
+    def fake_profile(dfa=None, *, n_symbols, repeats, seed=0, devices):
+        calls["n"] += 1
+        return np.ones(len(devices))
+
+    monkeypatch.setattr(profiling, "profile_capacity", fake_profile)
+    mesh = _mesh_or_skip((1, 2))
+    dfas = _dfas()
+    m1 = Matcher(dfas, backend="sharded", mesh=mesh, calibrate=True)
+    m2 = Matcher(dfas, backend="sharded", mesh=mesh, calibrate=True)
+    assert calls["n"] == 1  # second construction hits the cache
+    assert m1.capacities is not None and m2.capacities is not None
+
+    caps = m1.recalibrate()  # explicit refresh owned by the rebalance path
+    assert calls["n"] == 2
+    assert caps.shape == (2,)
+    profiling.clear_calibration_cache()
+
+
+def test_calibrated_capacities_returns_copies(monkeypatch):
+    from repro.core import profiling
+    profiling.clear_calibration_cache()
+    monkeypatch.setattr(
+        profiling, "profile_capacity",
+        lambda dfa=None, *, n_symbols, repeats, seed=0, devices:
+            np.ones(len(devices)))
+    caps = profiling.calibrated_capacities(jax.devices()[:1])
+    caps[0] = 99.0
+    assert profiling.calibrated_capacities(jax.devices()[:1])[0] == 1.0
+    profiling.clear_calibration_cache()

@@ -1,0 +1,297 @@
+"""Fault-injection harness for the streaming runtime.
+
+Every recovery path of the fault-tolerance layer runs here, deterministically,
+against a bit-identity oracle (``Matcher.membership_batch`` on each stream's
+concatenated bytes):
+
+  * ``kill_retry``        — a ``FaultPlan`` kills dispatch attempts before
+    *and after* the cursor commit; the scheduler's retry-with-restore loop
+    (``RestartManager``) must converge with zero lost and zero
+    double-composed segments (byte counts are exact to the input).
+  * ``giveup_requeue``    — retries exhausted: the failure propagates, the
+    segments return to admission, and a later flush completes bit-identically.
+  * ``degraded_capacity`` — scheduled per-device delays + corrupted capacity
+    measurements drive the ``StragglerPolicy`` EWMA past threshold; the
+    matcher rebalances its chunk layouts between ticks and decisions stay
+    bit-identical.
+  * ``snapshot_restore``  — streams are checkpointed mid-run (with pending
+    unflushed bytes), the "host" dies, and a fresh ``StreamMatcher`` on a
+    *different* mesh shape restores and finishes: 2x4 -> 1x1 and 2x4 -> 8x1,
+    with a crashed-writer ``step_*.tmp`` directory left in the checkpoint
+    dir to prove restore ignores it.
+
+Run (exits non-zero if any scenario fails its bit-identity check):
+
+  PYTHONPATH=src python tools/faultbench.py --smoke
+  PYTHONPATH=src python tools/faultbench.py --json BENCH_faultbench.json
+
+CI runs ``--smoke`` on every push (.github/workflows/ci.yml, bench-smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+# the sharded scenarios need a multi-device mesh; the flag must be set
+# before jax first initializes (same contract as tests/conftest.py)
+_FLAG = "xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = f"--{_FLAG}=8 {_flags}".strip()
+
+import numpy as np  # noqa: E402
+
+PATTERNS = (".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y")
+ALPHABET = np.frombuffer(b"abxy0189", np.uint8)
+
+
+def _dfas():
+    from repro.core import compile_regex, make_search_dfa
+    return [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+
+
+def _docs(rng, n_streams: int, n_bytes: int) -> list[bytes]:
+    return [bytes(rng.choice(ALPHABET, size=n_bytes).astype(np.uint8))
+            for _ in range(n_streams)]
+
+
+def _segments(doc: bytes, seg_len: int) -> list[bytes]:
+    return [doc[i:i + seg_len] for i in range(0, len(doc), seg_len)]
+
+
+def _baseline(dfas, docs) -> np.ndarray:
+    """Uninterrupted [B, K] final states — the bit-identity oracle."""
+    from repro.core import Matcher
+    return Matcher(dfas, num_chunks=1).membership_batch(docs).final_states
+
+
+def _drive(sm, docs: list[bytes], seg_len: int, *, on_round=None,
+           swallow=()) -> list:
+    """Feed every doc round-robin in fixed segments, flushing per round."""
+    sessions = [sm.open() for _ in docs]
+    segs = [_segments(d, seg_len) for d in docs]
+    rounds = max(len(s) for s in segs)
+    for r in range(rounds):
+        for sess, ss in zip(sessions, segs):
+            if r < len(ss):
+                try:
+                    sess.feed(ss[r])
+                except swallow:
+                    pass  # scheduler requeued; a later flush retries
+        try:
+            sm.flush()
+        except swallow:
+            pass
+        if on_round is not None:
+            on_round(r, sessions)
+    while True:
+        try:
+            sm.flush()
+            break
+        except swallow:
+            continue
+    return sessions
+
+
+def _verify(name: str, sessions, docs, oracle: np.ndarray, sm,
+            extra: dict | None = None) -> dict:
+    """Close every stream and check bit-identity + exact byte accounting."""
+    finals = np.stack([s.close().final_states for s in sessions])
+    bytes_ok = all(s.byte_count == len(d) for s, d in zip(sessions, docs))
+    identical = bool((finals == oracle).all())
+    out = {"scenario": name, "ok": identical and bytes_ok,
+           "bit_identical": identical, "bytes_exact": bytes_ok,
+           "ticks": sm.stats.ticks, "retries": sm.stats.retries,
+           "dispatch_failures": sm.stats.dispatch_failures,
+           "failed_ticks": sm.stats.failed_ticks,
+           "requeued_segments": sm.stats.requeued_segments,
+           "rebalances": sm.stats.rebalances}
+    out.update(extra or {})
+    return out
+
+
+def scenario_kill_retry(dfas, docs, oracle, seg_len: int) -> dict:
+    """Killed dispatches (pre *and* post cursor-commit) under bounded retry."""
+    from repro.streaming import FaultPlan, RetryPolicy, StreamMatcher
+    # tick t: kill[t] pre-dispatch attempts, kill_post[t] post-commit ones —
+    # post-commit is the double-compose hazard (cursors must roll back)
+    plan = FaultPlan(kill={0: 1, 2: 2}, kill_post={1: 1, 3: 1})
+    sm = StreamMatcher(dfas, retry=RetryPolicy(max_retries=3),
+                       fault_plan=plan)
+    sessions = _drive(sm, docs, seg_len)
+    res = _verify("kill_retry", sessions, docs, oracle, sm,
+                  {"injected": plan.injected})
+    res["ok"] = res["ok"] and plan.injected == 5 and res["retries"] >= 5
+    return res
+
+
+def scenario_giveup_requeue(dfas, docs, oracle, seg_len: int) -> dict:
+    """Retries exhausted: failure propagates, segments requeue, run finishes."""
+    from repro.streaming import (FaultPlan, InjectedFault, RetryPolicy,
+                                 StreamMatcher)
+    plan = FaultPlan(kill={1: 5})  # more kills than retries -> give up once
+    sm = StreamMatcher(dfas, retry=RetryPolicy(max_retries=1),
+                       fault_plan=plan)
+    sessions = _drive(sm, docs, seg_len, swallow=(InjectedFault,))
+    res = _verify("giveup_requeue", sessions, docs, oracle, sm,
+                  {"injected": plan.injected})
+    res["ok"] = (res["ok"] and res["failed_ticks"] >= 1
+                 and res["requeued_segments"] >= 1)
+    return res
+
+
+def scenario_degraded_capacity(dfas, docs, oracle, seg_len: int,
+                               mesh_shape=(2, 4)) -> dict:
+    """Scheduled device delays + corrupted capacities -> EWMA rebalance."""
+    import jax
+    from repro.distributed.fault_tolerance import StragglerPolicy
+    from repro.launch.mesh import make_matcher_mesh
+    from repro.streaming import FaultPlan, StreamMatcher
+
+    n_dev = mesh_shape[0] * mesh_shape[1]
+    if len(jax.devices()) < n_dev:
+        return {"scenario": "degraded_capacity", "ok": True,
+                "skipped": f"needs {n_dev} devices"}
+    # device 0 degrades from tick 1 on: +5ms latency and a 4x-slow corrupted
+    # capacity measurement, every tick
+    delay = np.zeros(n_dev)
+    delay[0] = 5e-3
+    skew = np.ones(n_dev)
+    skew[0] = 4.0
+    plan = FaultPlan(delay_s={t: delay for t in range(1, 64)},
+                     capacity_skew={t: skew for t in range(1, 64)})
+    sm = StreamMatcher(dfas, backend="sharded",
+                       mesh=make_matcher_mesh(shape=mesh_shape),
+                       num_chunks=8,
+                       straggler=StragglerPolicy(n_workers=n_dev),
+                       fault_plan=plan)
+    sessions = _drive(sm, docs, seg_len)
+    res = _verify("degraded_capacity", sessions, docs, oracle, sm)
+    res["ok"] = res["ok"] and res["rebalances"] >= 1
+    return res
+
+
+def scenario_snapshot_restore(dfas, docs, oracle, seg_len: int,
+                              src_shape=(2, 4), dst_shape=(1, 1)) -> dict:
+    """Kill-and-restore across mesh shapes, pending bytes in flight."""
+    import jax
+    from repro.launch.mesh import make_matcher_mesh
+    from repro.streaming import StreamMatcher, TickPolicy
+
+    name = (f"snapshot_restore_{src_shape[0]}x{src_shape[1]}_to_"
+            f"{dst_shape[0]}x{dst_shape[1]}")
+    need = max(src_shape[0] * src_shape[1], dst_shape[0] * dst_shape[1])
+    if len(jax.devices()) < need:
+        return {"scenario": name, "ok": True,
+                "skipped": f"needs {need} devices"}
+    segs = [_segments(d, seg_len) for d in docs]
+    half = max(len(s) for s in segs) // 2
+
+    # explicit-flush policy on both sides: the mid-run segment below must
+    # still be *pending* when the snapshot is taken (an eager policy would
+    # dispatch it on feed and the snapshot would carry no in-flight bytes)
+    lazy = TickPolicy(max_batch=1 << 30, max_delay=1 << 30)
+    sm1 = StreamMatcher(dfas, backend="sharded",
+                        mesh=make_matcher_mesh(shape=src_shape), num_chunks=8,
+                        policy=lazy)
+    sessions = [sm1.open() for _ in docs]
+    for r in range(half):
+        for sess, ss in zip(sessions, segs):
+            if r < len(ss):
+                sess.feed(ss[r])
+        sm1.flush()
+    # feed one more segment per stream *without* flushing: the snapshot must
+    # carry unflushed pending bytes, not just cursor state
+    for sess, ss in zip(sessions, segs):
+        if half < len(ss):
+            sess.feed(ss[half])
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        sm1.snapshot(ckpt)
+        # simulate a writer that died mid-snapshot: restore must ignore it
+        os.makedirs(os.path.join(ckpt, "step_00000099.tmp"))
+        del sm1, sessions  # the "host" is gone
+
+        sm2 = StreamMatcher(dfas, backend="sharded",
+                            mesh=make_matcher_mesh(shape=dst_shape),
+                            num_chunks=8, policy=lazy)
+        restored = {s.sid: s for s in sm2.restore(ckpt)}
+        if not any(s.pending_bytes for s in restored.values()):
+            raise AssertionError("snapshot carried no in-flight pending "
+                                 "bytes; the scenario is under-testing")
+    sessions = [restored[i] for i in range(len(docs))]
+    for r in range(half + 1, max(len(s) for s in segs)):
+        for sess, ss in zip(sessions, segs):
+            if r < len(ss):
+                sess.feed(ss[r])
+        sm2.flush()
+    sm2.flush()
+    return _verify(name, sessions, docs, oracle, sm2)
+
+
+def run_faultbench(*, n_streams: int = 8, n_bytes: int = 192,
+                   seg_len: int = 48, seed: int = 0) -> list[dict]:
+    """Run every scenario; returns one result dict per scenario."""
+    rng = np.random.default_rng(seed)
+    dfas = _dfas()
+    docs = _docs(rng, n_streams, n_bytes)
+    oracle = _baseline(dfas, docs)
+    return [
+        scenario_kill_retry(dfas, docs, oracle, seg_len),
+        scenario_giveup_requeue(dfas, docs, oracle, seg_len),
+        scenario_degraded_capacity(dfas, docs, oracle, seg_len),
+        scenario_snapshot_restore(dfas, docs, oracle, seg_len,
+                                  src_shape=(2, 4), dst_shape=(1, 1)),
+        scenario_snapshot_restore(dfas, docs, oracle, seg_len,
+                                  src_shape=(2, 4), dst_shape=(8, 1)),
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: fewer/shorter streams, same scenarios")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as a BENCH_*.json artifact")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    kwargs = (dict(n_streams=4, n_bytes=96, seg_len=48) if args.smoke
+              else dict(n_streams=8, n_bytes=192, seg_len=48))
+    t0 = time.time()
+    results = run_faultbench(seed=args.seed, **kwargs)
+    total = time.time() - t0
+
+    print("scenario,ok,detail")
+    for r in results:
+        detail = ("skipped:" + r["skipped"] if "skipped" in r else
+                  f"ticks={r.get('ticks', 0)} retries={r.get('retries', 0)} "
+                  f"requeued={r.get('requeued_segments', 0)} "
+                  f"rebalances={r.get('rebalances', 0)}")
+        print(f"{r['scenario']},{r['ok']},{detail}")
+    failed = [r["scenario"] for r in results if not r["ok"]]
+
+    if args.json:
+        payload = {"schema": 1,
+                   "meta": {"argv": sys.argv[1:],
+                            "total_s": round(total, 2), **kwargs},
+                   "results": results}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        sys.stderr.write(f"[faultbench] wrote {args.json}\n")
+
+    sys.stderr.write(f"[faultbench] total {total:.1f}s\n")
+    if failed:
+        sys.stderr.write(f"[faultbench] FAILED: {', '.join(failed)}\n")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
