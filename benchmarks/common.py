@@ -8,11 +8,24 @@ from typing import Callable
 import numpy as np
 
 ROWS: list[tuple[str, float, float]] = []
+META: dict = {}
 
 
 def emit(name: str, us_per_call: float, derived: float) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived:.6g}")
+
+
+def meta_note(key: str, value) -> None:
+    """Attach structured provenance to the next ``write_json`` artifact.
+
+    Benchmarks use this for ``Matcher.perf_report()`` snapshots — the
+    lowering chosen per compiled plan (fused kernel vs jnp stages), the
+    in-kernel early-exit skip counts and the lane width after r=2 shrinking
+    — so a BENCH artifact explains *why* a number moved, not just that it
+    did.  Values must be JSON-serializable.
+    """
+    META[key] = value
 
 
 def write_json(path: str, meta: dict | None = None) -> None:
@@ -32,6 +45,7 @@ def write_json(path: str, meta: dict | None = None) -> None:
         "meta": {
             "python": sys.version.split()[0],
             "platform": platform.platform(),
+            **({"perf": META} if META else {}),
             **(meta or {}),
         },
         "rows": [{"name": n, "us_per_call": u, "derived": d}

@@ -25,7 +25,8 @@ from repro.core import (SpecDFAEngine, compile_pattern_suite, i_max_r,
                         random_dfa, sequential_state, weighted_partition)
 from repro.core.engine import match_chunks_lanes
 
-from .common import dfa_zoo, emit, random_input, suite_cached, time_us
+from .common import (dfa_zoo, emit, meta_note, random_input, suite_cached,
+                     time_us)
 
 N_INPUT = 200_000
 
@@ -373,6 +374,7 @@ def bench_batch_throughput(n_docs: int = 64, doc_len: int = 512) -> None:
     # pattern amortization: packed K=8 sweep vs running the K=1 sweep 8 times
     emit("batch_throughput/pattern_amortization/K8", us_bn_by_k[8],
          8.0 * us_bn_by_k[1] / max(us_bn_by_k[8], 1e-9))
+    meta_note("batch_throughput/K8", bm.perf_report())
 
 
 # --------------------------------------------------------------------------
@@ -475,6 +477,8 @@ def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
             # wall ms per scheduler tick over the timed repeats (the timed
             # run re-opens its own streams; ticks delta tracks only those)
             emit(f"{tag}/host_ms_per_tick", 0.0, us_stream / 1e3 / ticks)
+        meta_note(f"stream_throughput/S{n_streams}",
+                  seg_matcher.perf_report())
 
     host_merges = merge_calls() - merges_before
     emit("stream_throughput/host_merges_on_tick_path", 0.0,

@@ -36,13 +36,17 @@ Backends (the three lowerings):
     oracle), with an absorbing-state early exit: the symbol scan runs in
     segments inside a ``lax.while_loop`` and stops once every lane of every
     document is absorbing.
-  * ``LocalExecutor(use_kernel=True)`` — the fused Pallas kernel
-    (``kernels.ops.spec_match_merge``) for exact-entry spec plans, wrapped
-    in an **all-absorbed bucket early exit**: when every row of the bucket
-    is already absorbed (or empty), the kernel dispatch is skipped entirely
-    — absorbing states self-loop, so returning the entry states is exact.
-    Lane plans lower to the shared jnp stages (the kernel's in-kernel merge
-    folds to exact finals, not lane maps).
+  * ``LocalExecutor(use_kernel=True)`` — the fused Pallas kernels
+    (``kernels.ops.spec_match_merge`` for exact-entry plans,
+    ``kernels.ops.spec_match_merge_lanes`` for ``ENTRY_LANES`` — the
+    streaming tick rides the fused kernel too, no jnp-stage fallback).
+    Both carry an **in-kernel early exit** (symbol blocks after a
+    document's lanes all absorb are skipped on the grid; the per-document
+    skipped-block counts drain via ``kernel_skipped_steps()``), wrapped in
+    an **all-absorbed bucket early exit**: when every row of the bucket is
+    already absorbed (or empty), the kernel dispatch is skipped entirely —
+    absorbing states self-loop, so returning the entry states (or cursor
+    lanes) verbatim is exact.
   * ``engine.sharded.ShardedExecutor`` — the ("doc", "chunk") mesh lowering
     (own module).
 
@@ -110,6 +114,13 @@ class LaneExecutor:
         self.early_exit_segments = _prev_pow2(max(int(early_exit_segments), 1))
         self.traces = 0
         self._lowered: dict[tuple, object] = {}
+        # plan.key -> human-readable lowering name ("spec-kernel",
+        # "spec-jnp", "seq-jnp", ...) for bench/introspection reporting
+        self.lowering_kinds: dict[tuple, str] = {}
+        # per-bucket block-size targets set by the shape autotuner
+        # (core.profiling.autotune_spec_shapes); consulted at lowering time,
+        # keyed by chunk_len (key 0 = tuned default) — 512 when untuned
+        self.spec_l_blk: dict[int, int] = {}
         # bumped by invalidate_layouts() when chunk boundaries move (capacity
         # rebalance); only lowerings that *bake* boundaries fold it into
         # their cache key, so layout-independent programs keep their entries
@@ -173,6 +184,7 @@ class LaneExecutor:
     def _lower(self, plan: LanePlan, layout, batch: int):
         """Backend hook: build the compiled program of one plan."""
         if plan.kind == "seq":
+            self.lowering_kinds[plan.key] = "seq-jnp"
             return self._lower_seq_local(plan)
         raise NotImplementedError("spec plans need a backend lowering")
 
@@ -276,7 +288,7 @@ class LaneExecutor:
         hit = jnp.take_along_axis(seg_lanes, jnp.maximum(lane, 0), axis=2)
         sk = t.sinks_j[None, :, None]
         out = jnp.where(lane < 0, jnp.where(sk >= 0, sk, cursor_lanes), hit)
-        out = jnp.where((entry_cls == t.pad_cls)[:, None, None],
+        out = jnp.where((entry_cls == t.pad_key)[:, None, None],
                         cursor_lanes, out)
         return out.astype(jnp.int32)
 
@@ -309,8 +321,16 @@ class LaneExecutor:
     def _spec_stages(self, plan: LanePlan, bytes_buf: jnp.ndarray,
                      lengths: jnp.ndarray, entry, entry_cls):
         """classify + chunking + entry-seed of the uniform speculative path:
-        returns (body [B, C, Lc] classes, la [B, C] lookaheads, init
-        [B, C, K*S] lanes)."""
+        returns (body [B, C, Lc] classes, la [B, C] boundary keys, init
+        [B, C, K*S] lanes).
+
+        Boundary keys follow ``DeviceTables.spec_r``: the class of the last
+        byte before each chunk (r=1, the paper's Eq. 11), or the pair key
+        ``c_prev * n_classes + c_last`` of the two preceding bytes (r=2,
+        Eq. 13).  Padding is always a document suffix, so a padded last byte
+        means the whole following chunk is padding — its key degrades to the
+        identity ``pad_key`` and the merge passes it through.
+        """
         t = self.t
         b, w = bytes_buf.shape
         c = self.num_chunks
@@ -318,8 +338,16 @@ class LaneExecutor:
         k, s = t.n_patterns, t.i_max
         cls = self._classify(bytes_buf, lengths)
         body = cls.reshape(b, c, lc)
-        la = jnp.concatenate(
-            [jnp.zeros((b, 1), jnp.int32), body[:, :-1, -1]], axis=1)
+        last1 = body[:, :-1, -1]                               # [B, C-1]
+        if t.spec_r == 2:
+            if lc < 2:
+                raise ValueError(
+                    f"spec_r=2 boundary keys need chunk_len >= 2, got {lc}")
+            key = body[:, :-1, -2] * jnp.int32(t.pad_cls) + last1
+            key = jnp.where(last1 == t.pad_cls, jnp.int32(t.pad_key), key)
+        else:
+            key = last1  # r=1: the key *is* the class (pad_cls == pad_key)
+        la = jnp.concatenate([jnp.zeros((b, 1), jnp.int32), key], axis=1)
         cand = t.cand_pad_j[la[:, 1:]]                         # [B, C-1, K, S]
         start = self._seed_chunk0(plan, b, entry, entry_cls)   # [B, 1, K, S]
         init = jnp.concatenate([start, cand], axis=1).reshape(b, c, k * s)
@@ -352,11 +380,11 @@ class LaneExecutor:
         lv = lvecs.reshape(b, c, k, s)
         if plan.entry == ENTRY_LANES:
             seg = kref.spec_merge_lanes_ref(lv, la, t.cidx_pad_j, t.sinks_j,
-                                            pad_cls=t.pad_cls)
+                                            pad_cls=t.pad_key)
             return self._compose_cursor(entry.astype(jnp.int32), seg,
                                         entry_cls), pos
         finals = kref.spec_merge_ref(lv, la, t.cidx_pad_j, t.sinks_j,
-                                     pad_cls=t.pad_cls)
+                                     pad_cls=t.pad_key)
         return finals, pos
 
 
@@ -367,8 +395,11 @@ class LocalExecutor(LaneExecutor):
     candidate gather, chunk matching, and the Eq. 8 merge in one jitted call
     per bucket (donated input buffer on accelerators); only the [B, K]
     final-state array crosses back to the host.  With ``use_kernel=True``
-    exact-entry spec plans dispatch the fused Pallas kernel behind an
-    all-absorbed bucket early exit (the kernel itself runs start-to-end).
+    every spec plan — exact-entry *and* ``ENTRY_LANES`` — dispatches a fused
+    Pallas kernel behind an all-absorbed bucket early exit, and the kernel
+    itself skips symbol blocks past the point a document's lanes all absorb
+    (the in-kernel early exit; per-document skipped-block counts drain via
+    ``kernel_skipped_steps()``).
     """
 
     def __init__(self, tables: DeviceTables, *, num_chunks: int,
@@ -376,51 +407,105 @@ class LocalExecutor(LaneExecutor):
         super().__init__(tables, num_chunks=num_chunks,
                          early_exit_segments=early_exit_segments)
         self.use_kernel = bool(use_kernel)
+        # device arrays of per-doc skipped symbol blocks, appended per kernel
+        # dispatch and summed lazily (no sync on the hot path)
+        self._skipped_log: list = []
+        self._skipped_total = 0
+
+    def kernel_skipped_steps(self) -> int:
+        """Total symbol blocks skipped by the in-kernel early exit so far.
+
+        Draining the log syncs the pending device arrays — call this from
+        tests/benchmarks, not between hot-path ticks.
+        """
+        while self._skipped_log:
+            self._skipped_total += int(np.asarray(self._skipped_log.pop()).sum())
+        return self._skipped_total
 
     def _lower(self, plan: LanePlan, layout, batch: int):
         if plan.kind == "seq":
+            self.lowering_kinds[plan.key] = "seq-jnp"
             return self._lower_seq_local(plan)
-        if self.use_kernel and plan.entry != ENTRY_LANES:
+        if self.use_kernel:
+            self.lowering_kinds[plan.key] = (
+                "spec-kernel-lanes" if plan.entry == ENTRY_LANES
+                else "spec-kernel")
             return self._lower_spec_kernel(plan)
+        self.lowering_kinds[plan.key] = "spec-jnp"
         return self._jit_lowering(
             lambda *args: self._spec_body(plan, *args))
 
     def _lower_spec_kernel(self, plan: LanePlan):
-        """Fused Pallas lowering with the all-absorbed bucket early exit.
+        """Fused Pallas lowering: bucket-level + in-kernel early exit.
 
-        The kernel has no in-flight exit (its grid runs start-to-end), but a
-        bucket whose every row is already absorbed — or empty — cannot move
-        any lane: absorbing states self-loop on every class, so returning
-        the entry states verbatim is bit-identical and the whole kernel
-        dispatch is skipped (``lax.cond``).  This is the streaming case
-        where a tick's segments all belong to decided streams.
+        A bucket whose every row is already absorbed — or empty — cannot
+        move any lane: absorbing states self-loop on every class, so
+        returning the entry states (or, for lane plans, the caller's cursor
+        lanes — composition through a restricted map fixes absorbing states)
+        verbatim is bit-identical and the whole kernel dispatch is skipped
+        (``lax.cond``).  This is the streaming case where a tick's segments
+        all belong to decided streams.  Inside the kernel, the symbol-block
+        grid additionally skips blocks once a single document's lanes all
+        absorb mid-scan; the per-document skipped counts convert to the
+        standard ``absorbed_pos`` contract here (block granularity — the jnp
+        lowering reports segment granularity, both are upper bounds of the
+        true absorb position).
         """
         from ...kernels import ops as kops
 
         t = self.t
+        lanes_mode = plan.entry == ENTRY_LANES
+        lc = plan.chunk_len
+        l_blk, l_pad = kops._pad_to_block(
+            lc, self.spec_l_blk.get(lc, self.spec_l_blk.get(0, 512)))
+        l_blocks = l_pad // l_blk
 
-        def kernel_body(plan, bytes_buf, lengths, entry=None):
+        def kernel_body(plan, bytes_buf, lengths, entry=None, entry_cls=None):
             b = bytes_buf.shape[0]
-            e = self._seed_rows(plan, b, entry, None)           # [B, K] exact
+            if lanes_mode:
+                e = entry.astype(jnp.int32)      # [B, K, S] cursor lanes
+            else:
+                e = self._seed_rows(plan, b, entry, None)       # [B, K]
 
             def run_kernel():
                 # classify/chunk/candidate-gather prep lives *inside* the
                 # taken branch so an all-absorbed bucket skips it too, not
                 # just the kernel dispatch
                 body, la, init = self._spec_stages(plan, bytes_buf, lengths,
-                                                   entry, None)
-                return kops.spec_match_merge(t.table_pad_j, body, init, la,
-                                             t.cidx_pad_j, t.sinks_j,
-                                             pad_cls=t.pad_cls)
+                                                   entry, entry_cls)
+                absorbing = t.absorbing_j.astype(jnp.int32)
+                if lanes_mode:
+                    lanes, skipped, _ = kops.spec_match_merge_lanes(
+                        t.table_pad_j, body, init, la, t.cidx_pad_j,
+                        t.sinks_j, absorbing, pad_cls=t.pad_cls,
+                        pad_key=t.pad_key, early_exit=plan.early_exit,
+                        l_blk=l_blk)
+                    return self._compose_cursor(e, lanes, entry_cls), skipped
+                finals, skipped, _ = kops.spec_match_merge(
+                    t.table_pad_j, body, init, la, t.cidx_pad_j, t.sinks_j,
+                    absorbing, pad_cls=t.pad_cls, pad_key=t.pad_key,
+                    early_exit=plan.early_exit, l_blk=l_blk)
+                return finals, skipped
 
             if not plan.early_exit:  # same contract as the jnp lowerings
-                return run_kernel(), jnp.full((b,), NO_EXIT, jnp.int32)
-            doc_abs = t.absorbing_j[e].all(axis=1)
+                out, skipped = run_kernel()
+                return out, jnp.full((b,), NO_EXIT, jnp.int32), skipped
+            doc_abs = t.absorbing_j[e].reshape(b, -1).all(axis=1)
             done = doc_abs | (lengths.astype(jnp.int32) <= 0)
-            finals = jax.lax.cond(done.all(), lambda: e.astype(jnp.int32),
-                                  run_kernel)
-            pos = jnp.where(done.all() & doc_abs, jnp.int32(0), NO_EXIT)
-            return finals, pos
+            zero = jnp.zeros((b,), jnp.int32)
+            out, skipped = jax.lax.cond(
+                done.all(), lambda: (e.astype(jnp.int32), zero), run_kernel)
+            pos = jnp.where(skipped > 0,
+                            (jnp.int32(l_blocks) - skipped) * jnp.int32(l_blk),
+                            NO_EXIT)
+            pos = jnp.where(done.all() & doc_abs, jnp.int32(0), pos)
+            return out, pos, skipped
 
-        return self._jit_lowering(
-            lambda *args: kernel_body(plan, *args))
+        jit_fn = self._jit_lowering(lambda *args: kernel_body(plan, *args))
+
+        def wrapper(*args):
+            out, pos, skipped = jit_fn(*args)
+            self._skipped_log.append(skipped)
+            return out, pos
+
+        return wrapper

@@ -158,6 +158,20 @@ class Matcher:
                    capacity-weighted chunk layout automatically.
     early_exit_segments : absorbing-state early-exit granularity per scan
                    (1 disables; pow2, local/seq paths only).
+    lookahead_r  : boundary-key lookahead depth of the candidate tables:
+                   1 (the paper's Eq. 11 last-byte class), 2 (Eq. 13 pair
+                   keys — smaller feasible candidate sets shrink the lane
+                   width S), or "auto" (default: r=2 exactly when it strictly
+                   shrinks S and its tables fit the memory cap; static per
+                   DFA).
+    autotune     : opt-in shape autotuner (``core.profiling
+                   .autotune_spec_shapes``): times candidate ``(num_chunks,
+                   l_blk, mesh_shape)`` configurations on a synthetic probe
+                   workload at construction and applies the winner —
+                   replacing the near-square ``mesh_shape="auto"`` heuristic
+                   with measured choices.  Results cache per (dfa, shape,
+                   devices, backend) key, on disk when
+                   ``$REPRO_AUTOTUNE_CACHE`` points at a JSON path.
     """
 
     def __init__(self, source, *, num_chunks: int = 8, max_buckets: int = 2,
@@ -165,7 +179,8 @@ class Matcher:
                  mesh_shape=None, devices: Optional[int] = None,
                  capacities: Optional[Sequence[float]] = None,
                  spec_m: int = 1, calibrate: bool = False,
-                 early_exit_segments: int = 4):
+                 early_exit_segments: int = 4,
+                 lookahead_r: int | str = "auto", autotune: bool = False):
         if isinstance(source, PackedDFA):
             packed = source
         elif isinstance(source, DFA):
@@ -184,8 +199,20 @@ class Matcher:
         self.backend = backend
         self.max_buckets = int(max_buckets)
         self.batch_tile = next_pow2(int(batch_tile))
-        self.dev = DeviceTables.build(packed)
+        self.dev = DeviceTables.build(packed, lookahead_r=lookahead_r)
         self.pad_cls = self.dev.pad_cls
+        self.autotune = bool(autotune)
+        self._tuned = None
+        if self.autotune:
+            from ..profiling import autotune_spec_shapes
+            self._tuned = autotune_spec_shapes(
+                packed, backend=backend,
+                num_chunks_candidates=sorted({4, 8, int(num_chunks)}),
+                mesh_shape=mesh_shape, devices=devices,
+                lookahead_r=lookahead_r)
+            num_chunks = self._tuned.num_chunks
+            if backend == "sharded" and mesh is None and mesh_shape == "auto":
+                mesh_shape = self._tuned.mesh_shape
 
         if backend == "sharded":
             from ...launch.mesh import make_matcher_mesh, matcher_mesh_extents
@@ -247,6 +274,8 @@ class Matcher:
                 early_exit_segments=early_exit_segments)
             self.n_devices = 1
         self.num_chunks = self.planner.num_chunks
+        if self._tuned is not None and self._tuned.l_blk:
+            self.executor.spec_l_blk[0] = int(self._tuned.l_blk)  # default key
         self._advance_fn = jax.jit(self._advance_impl)
 
     # -- properties ---------------------------------------------------------
@@ -357,7 +386,13 @@ class Matcher:
             spec = bucket.kind == "spec"
             layout = (self.planner.layout_for(bucket.chunk_len)
                       if spec else None)
-            lane = self.planner.lane_plan(bucket, entry=entry_mode)
+            # the per-DFA r choice only matters to programs that gather from
+            # the candidate tables; keying it conditionally keeps the lazy
+            # lookahead analysis unforced for pure-seq exact traffic
+            spec_r = (self.dev.spec_r if (spec or entry_mode == ENTRY_LANES)
+                      else 1)
+            lane = self.planner.lane_plan(bucket, entry=entry_mode,
+                                          spec_r=spec_r)
             for lo in range(0, bucket.doc_idx.size, self.batch_tile):
                 sel = bucket.doc_idx[lo:lo + self.batch_tile]
                 buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
@@ -367,27 +402,28 @@ class Matcher:
                     lens[r] = lengths[i]
                 if tile_hook is not None:
                     tile_hook(bucket, layout, sel, lens)
+                # operands stay host numpy: jit transfers them once at call
+                # time, where an eager jnp.asarray per operand costs an extra
+                # device round-trip each on the streaming hot path
                 ent = ecls = None
                 if entry_mode == ENTRY_STATES:
                     # pad rows scan from the pattern starts (ignored)
-                    e_np = np.tile(self.packed.starts,
-                                   (self.batch_tile, 1)).astype(np.int32)
-                    e_np[:sel.size] = entry[sel]
-                    ent = jnp.asarray(e_np)
+                    ent = np.tile(self.packed.starts,
+                                  (self.batch_tile, 1)).astype(np.int32)
+                    ent[:sel.size] = entry[sel]
                 elif entry_mode == ENTRY_LANES:
-                    # pad rows carry in-range lanes and the pad class, which
-                    # the device merge composes as the identity
+                    # pad rows carry in-range lanes and the pad boundary key,
+                    # which the device merge composes as the identity
                     s = self.tables.i_max
-                    e_np = np.broadcast_to(
+                    ent = np.broadcast_to(
                         self.packed.starts.astype(np.int32)[None, :, None],
                         (self.batch_tile, k, s)).copy()
-                    e_np[:sel.size] = entry[sel]
-                    ent = jnp.asarray(e_np)
-                    ec_np = np.full(self.batch_tile, self.pad_cls, np.int32)
-                    ec_np[:sel.size] = entry_cls[sel]
-                    ecls = jnp.asarray(ec_np)
+                    ent[:sel.size] = entry[sel]
+                    ecls = np.full(self.batch_tile, self.dev.pad_key,
+                                   np.int32)
+                    ecls[:sel.size] = entry_cls[sel]
                 res, pos = self.executor.run(
-                    lane, jnp.asarray(buf), jnp.asarray(lens), layout=layout,
+                    lane, buf, lens, layout=layout,
                     entry=ent, entry_classes=ecls)
                 res, pos = np.asarray(res), np.asarray(pos)
                 out[sel] = res[:sel.size]
@@ -517,8 +553,10 @@ class Matcher:
         reference; bit-identity is property-tested on every backend and
         mesh shape in tests/test_device_merge.py).
 
-        Contract: every cursor must have absorbed at least one byte
-        (``last_classes`` in ``[0, n_classes)``) — a fresh stream's states
+        Contract: every cursor must have enough absorbed history for a
+        boundary key (``last_classes`` in ``[0, DeviceTables.n_keys)`` —
+        under r=1 the joint class of the last byte, under r=2 the pair key
+        ``DeviceTables.advance_key`` maintains) — a fresh stream's states
         are exactly the pattern starts, so it has no candidate keying and
         belongs in ``advance_segments``.  Zero-length segments compose as
         the identity.  Plans, buckets and tiles are shared with the exact
@@ -535,11 +573,11 @@ class Matcher:
         last = np.asarray(last_classes, np.int32).reshape(-1)
         if last.shape != (b,):
             raise ValueError(f"last_classes must be [{b}], got {last.shape}")
-        if b and ((last < 0) | (last >= self.packed.n_classes)).any():
+        if b and ((last < 0) | (last >= self.dev.n_keys)).any():
             raise ValueError(
-                "last_classes must be joint byte classes in [0, n_classes); "
-                "fresh streams (no bytes absorbed) have exact start states — "
-                "advance them with advance_segments")
+                "last_classes must be boundary keys in [0, n_keys); fresh "
+                "streams (no usable history) have exact states — advance "
+                "them with advance_segments")
         if b == 0:
             return CursorBatchResult(lanes.copy(), np.zeros((0, k), bool),
                                      np.zeros(0, np.int64), 0, 0, 0)
@@ -577,6 +615,36 @@ class Matcher:
         if classes.shape[1] == 0:
             return jnp.asarray(states, jnp.int32)
         return self._advance_fn(states, classes)
+
+    # -- introspection -------------------------------------------------------
+
+    def perf_report(self) -> dict:
+        """Raw-speed introspection for benchmark artifacts.
+
+        Reports the lowering chosen per compiled plan (fused kernel vs jnp
+        stages), the in-kernel early-exit skip counter (pallas backend), the
+        resolved boundary-key depth and lane width after r=2 shrinking, and
+        the autotuner's choice when one was applied — so a BENCH number
+        explains *why* it moved.  Never forces the lazy lookahead analysis:
+        fields stay ``None`` until the work that builds them has run.
+        """
+        rep: dict = {
+            "backend": self.backend,
+            "spec_r": None,
+            "lane_width": None,
+            "lowerings": {"|".join(map(str, key)): kind
+                          for key, kind in
+                          self.executor.lowering_kinds.items()},
+            "kernel_skipped_steps": None,
+            "autotune": dataclasses.asdict(self._tuned)
+                        if self._tuned is not None else None,
+        }
+        if "tables" in self.dev.__dict__:  # lookahead analysis already ran
+            rep["spec_r"] = self.dev.spec_r
+            rep["lane_width"] = self.dev.i_max
+        if hasattr(self.executor, "kernel_skipped_steps"):
+            rep["kernel_skipped_steps"] = self.executor.kernel_skipped_steps()
+        return rep
 
 
 class BatchMatcher(Matcher):

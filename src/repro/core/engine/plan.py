@@ -63,6 +63,9 @@ def next_pow2(n: int) -> int:
 # Device-ready matcher tables (lookahead-table selection)
 # --------------------------------------------------------------------------
 
+_R2_TABLE_CAP = 1 << 22  # max int32 entries of the r=2 [n_keys+1, Q] index
+
+
 class DeviceTables:
     """Constant device arrays shared by every executor backend.
 
@@ -74,13 +77,28 @@ class DeviceTables:
     the early-exit test (a document whose every lane is absorbing can stop
     matching).
 
-    The Eq. 11 lookahead candidate tables build lazily on first speculative
-    use: consumers that only advance states through the padded table (e.g.
-    grammar-constrained serving) never pay the O(n_cls * Q) analysis.
+    **Boundary keys.**  Speculative chunk entries are keyed by the *boundary
+    key* of the r bytes before the chunk: for ``lookahead_r=1`` the paper's
+    Eq. 11 class of the last byte (``n_keys == n_classes``), for
+    ``lookahead_r=2`` the Eq. 13 pair key ``c_prev * n_classes + c_last``
+    (``n_keys == n_classes ** 2``), whose feasible candidate sets are usually
+    far smaller — shrinking the shared lane width S.  ``lookahead_r="auto"``
+    (default) picks r=2 per DFA exactly when it strictly shrinks S and the
+    r=2 index tables fit the memory cap; the choice is static per DFA and
+    keyed into every ``LanePlan``.  ``pad_key == n_keys`` is the identity
+    boundary key (whole-chunk padding / zero-byte segments).
+
+    The lookahead candidate tables build lazily on first speculative use:
+    consumers that only advance states through the padded table (e.g.
+    grammar-constrained serving) never pay the O(n_keys * Q) analysis.
     """
 
-    def __init__(self, packed: PackedDFA):
+    def __init__(self, packed: PackedDFA, *, lookahead_r: int | str = "auto"):
+        if lookahead_r not in ("auto", 1, 2):
+            raise ValueError(f"lookahead_r must be 'auto', 1 or 2, "
+                             f"got {lookahead_r!r}")
         self.packed = packed
+        self.lookahead_r = lookahead_r
         self.pad_cls = packed.n_classes
         q = packed.n_states
         ident = np.arange(q, dtype=np.int32).reshape(-1, 1)
@@ -97,8 +115,9 @@ class DeviceTables:
         self.absorbing_j = jnp.asarray(self.absorbing)    # [Q] bool
 
     @classmethod
-    def build(cls, packed: PackedDFA) -> "DeviceTables":
-        return cls(packed)
+    def build(cls, packed: PackedDFA, *,
+              lookahead_r: int | str = "auto") -> "DeviceTables":
+        return cls(packed, lookahead_r=lookahead_r)
 
     @property
     def n_patterns(self) -> int:
@@ -108,9 +127,64 @@ class DeviceTables:
     def i_max(self) -> int:
         return self.tables.i_max
 
+    @property
+    def spec_r(self) -> int:
+        """Resolved reverse-lookahead depth of the boundary-key space."""
+        return self.tables.r
+
+    @property
+    def n_keys(self) -> int:
+        """Boundary-key count (``n_classes ** spec_r``)."""
+        return self.tables.n_keys
+
+    @property
+    def pad_key(self) -> int:
+        """The identity boundary key (pad row of ``cand_pad``/``cidx_pad``)."""
+        return self.tables.n_keys
+
     @functools.cached_property
     def tables(self) -> PackedLookaheadTables:
-        return build_packed_lookahead_tables(self.packed)
+        if self.lookahead_r != "auto":
+            return build_packed_lookahead_tables(self.packed,
+                                                 r=int(self.lookahead_r))
+        t1 = build_packed_lookahead_tables(self.packed)
+        n, q = self.packed.n_classes, self.packed.n_states
+        k = self.packed.n_patterns
+        # r=2 must strictly shrink S to be worth the bigger key space, and
+        # its [n_keys + 1, Q] / [n_keys + 1, K, S] tables must fit the cap
+        fits = (n * n + 1) * max(q, k * t1.i_max) <= _R2_TABLE_CAP
+        if t1.i_max > 1 and n >= 2 and fits:
+            t2 = build_packed_lookahead_tables(self.packed, r=2)
+            if t2.i_max < t1.i_max:
+                return t2
+        return t1
+
+    def advance_key(self, prev_key: int, data: bytes | np.ndarray) -> int:
+        """Boundary key of a stream after it absorbs ``data`` (host-side).
+
+        ``prev_key`` is the stream's key before the segment (``-1`` =
+        no/insufficient history).  r=1 degrades to the class of the last
+        byte — exactly the pre-r=2 ``last_class``.  r=2 shifts the 2-byte
+        window: a segment of >= 2 bytes keys on its own suffix; a 1-byte
+        segment reuses ``prev_key``'s last class as the new first class; a
+        stream without 2 bytes of usable history returns ``-1``
+        (``streaming.cursor.ENTRY_EXACT``) — sound, merely conservative (its
+        next segment needs exact entry instead of candidate keying).
+        """
+        arr = (np.frombuffer(data, np.uint8)
+               if isinstance(data, (bytes, bytearray))
+               else np.asarray(data, np.uint8))
+        if arr.size == 0:
+            return int(prev_key)
+        b2c = self.packed.byte_to_class
+        if self.spec_r == 1:
+            return int(b2c[arr[-1]])
+        n = self.packed.n_classes
+        if arr.size >= 2:
+            return int(b2c[arr[-2]]) * n + int(b2c[arr[-1]])
+        if 0 <= int(prev_key) < n * n:
+            return (int(prev_key) % n) * n + int(b2c[arr[-1]])
+        return -1
 
     @functools.cached_property
     def cand_pad_j(self) -> jnp.ndarray:  # [n_cls + 1, K, S] int32
@@ -170,15 +244,27 @@ class ChunkLayout:
     def sizes(self) -> np.ndarray:
         return self.ends - self.starts
 
+    # interior chunk boundaries keep >= 2 preceding symbols so r=2 boundary
+    # keys (the pair of the two bytes before the cut) always exist; moving a
+    # cut from 1 to 2 only resizes neighbouring chunks (harmless for r=1)
+    MIN_CUT = 2
+
     @classmethod
     def from_partition(cls, part: Partition, width: int, devices: int) -> "ChunkLayout":
         c = part.start.shape[0]
         if c % devices != 0:
             raise ValueError(f"{c} chunks do not divide over {devices} devices")
-        sizes = part.end - part.start
-        return cls(width=width, starts=part.start.copy(), ends=part.end.copy(),
+        starts, ends = part.start.copy(), part.end.copy()
+        if (starts[1:] == ends[:-1]).all():  # contiguous: clamp cut points
+            cuts = np.where((starts > 0) & (starts < cls.MIN_CUT),
+                            np.int64(cls.MIN_CUT), starts)
+            cuts = np.minimum(np.maximum.accumulate(cuts), width)
+            starts = cuts
+            ends = np.append(cuts[1:], ends[-1])
+        sizes = ends - starts
+        return cls(width=width, starts=starts, ends=ends,
                    device_of=np.repeat(np.arange(devices), c // devices),
-                   exact=(part.start == 0), lmax=int(max(sizes.max(), 1)))
+                   exact=(starts == 0), lmax=int(max(sizes.max(), 1)))
 
     @classmethod
     def uniform(cls, width: int, num_chunks: int, devices: int = 1) -> "ChunkLayout":
@@ -298,9 +384,12 @@ class LanePlan:
       entry      entry-seed mode — ``ENTRY_STARTS`` (pattern starts),
                  ``ENTRY_STATES`` (caller [B, K] exact states), or
                  ``ENTRY_LANES`` (Eq. 11 candidate rows keyed by each row's
-                 boundary class; the merge stage then also composes the
+                 boundary key; the merge stage then also composes the
                  caller's [B, K, S] cursor lanes on device);
-      early_exit absorbing-state early exit enabled for this program.
+      early_exit absorbing-state early exit enabled for this program;
+      spec_r     reverse-lookahead depth of the boundary-key space the
+                 candidate tables were built for (``DeviceTables.spec_r``;
+                 static per DFA — keyed so an r change re-lowers).
 
     ``width``/``chunk_len`` pin the compiled buffer shape; ``key`` is the
     lowering cache key (one compiled program per distinct plan).
@@ -311,17 +400,20 @@ class LanePlan:
     chunk_len: int   # Lc for spec plans (width == C * Lc); 0 for seq
     entry: str       # ENTRY_STARTS | ENTRY_STATES | ENTRY_LANES
     early_exit: bool = True
+    spec_r: int = 1  # boundary-key lookahead depth (DeviceTables.spec_r)
 
     def __post_init__(self):
         if self.kind not in ("seq", "spec"):
             raise ValueError(f"unknown plan kind {self.kind!r}")
         if self.entry not in (ENTRY_STARTS, ENTRY_STATES, ENTRY_LANES):
             raise ValueError(f"unknown entry mode {self.entry!r}")
+        if self.spec_r not in (1, 2):
+            raise ValueError(f"spec_r must be 1 or 2, got {self.spec_r!r}")
 
     @property
     def key(self) -> tuple:
         return (self.kind, self.width, self.chunk_len, self.entry,
-                self.early_exit)
+                self.early_exit, self.spec_r)
 
 
 @dataclasses.dataclass
@@ -439,11 +531,18 @@ class Planner:
     # -- lane programs ------------------------------------------------------
 
     def lane_plan(self, bucket: BucketPlan, *, entry: str = ENTRY_STARTS,
-                  early_exit: bool = True) -> LanePlan:
-        """The lane program of one bucket dispatch (see ``LanePlan``)."""
+                  early_exit: bool = True, spec_r: int = 1) -> LanePlan:
+        """The lane program of one bucket dispatch (see ``LanePlan``).
+
+        ``spec_r`` is the boundary-key depth of the lookahead tables the
+        program will gather from (``DeviceTables.spec_r``); the facade passes
+        it for plans that touch candidate tables (spec buckets and every
+        ``ENTRY_LANES`` program) so the lazily-resolved per-DFA r choice is
+        part of the lowering cache key.
+        """
         return LanePlan(kind=bucket.kind, width=bucket.width,
                         chunk_len=bucket.chunk_len, entry=entry,
-                        early_exit=early_exit)
+                        early_exit=early_exit, spec_r=spec_r)
 
     # -- batch planning -----------------------------------------------------
 

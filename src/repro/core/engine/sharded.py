@@ -104,8 +104,11 @@ class ShardedExecutor(LaneExecutor):
         if plan.kind == "seq":
             if self.devices == 1 or batch % self.devices != 0:
                 # indivisible tiles fall back to the single-device lowering
+                self.lowering_kinds[self._plan_key(plan, batch)] = "seq-jnp"
                 return self._lower_seq_local(plan)
+            self.lowering_kinds[self._plan_key(plan, batch)] = "seq-sharded"
             return self._lower_seq_sharded(plan, batch)
+        self.lowering_kinds[self._plan_key(plan, batch)] = "spec-sharded"
         return self._lower_spec_sharded(plan, layout)
 
     def _replicated_tables(self):
@@ -278,6 +281,7 @@ class ShardedExecutor(LaneExecutor):
             # psum-scaled by the chunk extent), a gather does not.
             col_idx = np.full((n_chunks, b, lmax), w, np.int32)
             la_idx = np.full((n_chunks, b), w, np.int32)
+            la2_idx = np.full((n_chunks, b), w, np.int32)
             ex_np = np.zeros((n_chunks, b), bool)
             for r in range(self.doc_shards):
                 rsel = slice(r * rps, (r + 1) * rps)
@@ -286,11 +290,23 @@ class ShardedExecutor(LaneExecutor):
                     col_idx[ci, rsel] = np.where(span < e0 - s0, s0 + span, w)
                     if s0 > 0:
                         la_idx[ci, rsel] = s0 - 1
+                    if s0 > 1:
+                        la2_idx[ci, rsel] = s0 - 2
+                    elif s0 == 1 and t.spec_r == 2:
+                        # ChunkLayout.MIN_CUT keeps interior cuts >= 2
+                        raise ValueError("spec_r=2 boundary keys need chunk "
+                                         "cuts >= 2 symbols into the stream")
                     ex_np[ci, rsel] = bool(row_exact[r][ci])
             rows_b = jnp.arange(b, dtype=jnp.int32)
             chunk_buf = cls_pad[rows_b[None, :, None],
                                 jnp.asarray(col_idx)]    # [C, B, Lmax]
-            la = cls_pad[rows_b[None, :], jnp.asarray(la_idx)]  # [C, B]
+            la1 = cls_pad[rows_b[None, :], jnp.asarray(la_idx)]  # [C, B]
+            if t.spec_r == 2:
+                la2 = cls_pad[rows_b[None, :], jnp.asarray(la2_idx)]
+                la = jnp.where(la1 == t.pad_cls, jnp.int32(t.pad_key),
+                               la2 * jnp.int32(t.pad_cls) + la1)
+            else:
+                la = la1  # r=1: the key *is* the class (pad_cls == pad_key)
             ex = jnp.asarray(ex_np)                      # [C, B] bool
             if lanes_mode:
                 out = sharded_body(chunk_buf, la, ex,
@@ -333,5 +349,5 @@ class ShardedExecutor(LaneExecutor):
         t = self.t
         fold = spec_merge_lanes_ref if lanes else spec_merge_ref
         return fold(jnp.swapaxes(lv_all, 0, 1), la_all.T,
-                    cidx_pad, t.sinks_j, pad_cls=t.pad_cls,
+                    cidx_pad, t.sinks_j, pad_cls=t.pad_key,
                     exact=exact_all[:, 0])

@@ -25,7 +25,8 @@ import numpy as np
 from .automata import DFA, PackedDFA
 
 __all__ = ["LookaheadTables", "PackedLookaheadTables", "i_sigma_sets",
-           "i_max_r", "build_lookahead_tables", "build_packed_lookahead_tables"]
+           "i_sigma2_sets", "i_max_r", "build_lookahead_tables",
+           "build_packed_lookahead_tables"]
 
 
 def i_sigma_sets(dfa: DFA) -> list[set[int]]:
@@ -155,54 +156,104 @@ def i_sigma2_sets(dfa: DFA) -> list[set[int]]:
 
 @dataclasses.dataclass
 class PackedLookaheadTables:
-    """Eq. 11 candidate tables for a ``PackedDFA`` (r = 1, joint classes).
+    """Eq. 11/13 candidate tables for a ``PackedDFA``, keyed by boundary keys.
+
+    A *boundary key* generalizes the paper's reverse-lookahead class to
+    ``r`` symbols of suffix context: for ``r = 1`` the key is the joint class
+    of the boundary byte itself (Eq. 11, ``n_keys == n_classes``); for
+    ``r = 2`` it is the pair index ``c_prev * n_classes + c_last`` (Eq. 13,
+    ``n_keys == n_classes ** 2``) whose feasible image is typically far
+    smaller, shrinking the shared lane width ``i_max`` — the dominant
+    ``[B, K, S]`` streaming cost (PaREM, arXiv:1412.1741).
 
     The candidate axis is per *pattern*: lanes in the batched matcher are laid
     out ``[K, i_max]`` per chunk, and ``cand_index`` maps a packed state id to
     its lane inside its own pattern's candidate row (-1 if not a candidate —
     notably each pattern's sink).
 
-    candidates[c, k, j] : j-th candidate packed state of pattern k for joint
-                          lookahead class c, padded with pattern k's sink
-                          (or its start if it has no dead state).
-    cand_count[c, k]    : |I_c^k|.
-    cand_index[c, q]    : lane of packed state q in its pattern's row, or -1.
-    i_max               : max_{c,k} |I_c^k| — the shared lane width.
-    gamma               : worst per-pattern I_max / (|Q_k| - has_sink).
+    candidates[key, k, j] : j-th candidate packed state of pattern k for
+                            boundary key ``key``, padded with pattern k's sink
+                            (or its start if it has no dead state).
+    cand_count[key, k]    : |I_key^k|.
+    cand_index[key, q]    : lane of packed state q in its pattern's row, or -1.
+    i_max                 : max_{key,k} |I_key^k| — the shared lane width.
+    gamma                 : worst per-pattern I_max / (|Q_k| - has_sink).
+    r                     : reverse-lookahead depth of the key space (1 or 2).
+    n_keys                : boundary-key count (``n_classes ** r``); the pad
+                            key (identity merge) is ``n_keys`` itself.
     """
 
-    candidates: np.ndarray  # [n_classes, K, i_max] int32
-    cand_count: np.ndarray  # [n_classes, K] int32
-    cand_index: np.ndarray  # [n_classes, Q_total] int32
+    candidates: np.ndarray  # [n_keys, K, i_max] int32
+    cand_count: np.ndarray  # [n_keys, K] int32
+    cand_index: np.ndarray  # [n_keys, Q_total] int32
     i_max: int
     gamma: float
+    r: int = 1
+    n_keys: int = 0  # derived from candidates when left at 0
+
+    def __post_init__(self):
+        if self.n_keys == 0:
+            self.n_keys = int(self.candidates.shape[0])
 
 
-def build_packed_lookahead_tables(packed: PackedDFA) -> PackedLookaheadTables:
+def _packed_candidate_sets(packed: PackedDFA, r: int) -> list[list[list[int]]]:
+    """[n_keys][K] sorted candidate state lists for boundary keys of depth r.
+
+    r=1: ``I_c^k`` = targets of pattern k's states under class c (Eq. 11).
+    r=2: ``I_{c1,c2}^k`` = the image of pattern k's states under the suffix
+    string (c1, c2) — mirror of ``i_sigma2_sets`` per pattern slice (Eq. 13).
+    Sinks are excluded per the paper.
+    """
+    n_cls, k_pat = packed.n_classes, packed.n_patterns
+    slices = [packed.pattern_slice(k) for k in range(k_pat)]
+    sets: list[list[list[int]]] = []
+    if r == 1:
+        for c in range(n_cls):
+            per_key = []
+            for k in range(k_pat):
+                tgts = set(int(t) for t in packed.table[slices[k], c])
+                tgts.discard(int(packed.sinks[k]))
+                per_key.append(sorted(tgts))
+            sets.append(per_key)
+        return sets
+    # r == 2: key layout c1 * n_classes + c2 (c2 is the boundary byte itself,
+    # matched second) — packed transitions never leave a pattern's slice, so
+    # the one-step image ``mid`` stays per-pattern
+    mids = [[np.unique(packed.table[slices[k], c1]) for k in range(k_pat)]
+            for c1 in range(n_cls)]
+    for c1 in range(n_cls):
+        for c2 in range(n_cls):
+            per_key = []
+            for k in range(k_pat):
+                tgts = set(int(t) for t in packed.table[mids[c1][k], c2])
+                tgts.discard(int(packed.sinks[k]))
+                per_key.append(sorted(tgts))
+            sets.append(per_key)
+    return sets
+
+
+def build_packed_lookahead_tables(packed: PackedDFA,
+                                  r: int = 1) -> PackedLookaheadTables:
+    if r not in (1, 2):
+        raise ValueError("packed runtime lookahead supports r in (1, 2); "
+                         "use i_max_r for analysis at larger r")
     n_cls, k_pat, q_tot = packed.n_classes, packed.n_patterns, packed.n_states
-    sets: list[list[list[int]]] = []  # [n_cls][K] sorted candidate lists
-    for c in range(n_cls):
-        per_cls = []
-        for k in range(k_pat):
-            rows = packed.table[packed.pattern_slice(k), c]
-            tgts = set(int(t) for t in rows)
-            tgts.discard(int(packed.sinks[k]))
-            per_cls.append(sorted(tgts))
-        sets.append(per_cls)
+    n_keys = n_cls ** r
+    sets = _packed_candidate_sets(packed, r)
     i_max = max(1, max((len(s) for per in sets for s in per), default=1))
     pad = np.array([packed.sinks[k] if packed.sinks[k] >= 0 else packed.starts[k]
                     for k in range(k_pat)], np.int32)
     candidates = np.broadcast_to(pad[None, :, None],
-                                 (n_cls, k_pat, i_max)).copy()
-    cand_count = np.zeros((n_cls, k_pat), np.int32)
-    cand_index = np.full((n_cls, q_tot), -1, np.int32)
-    for c in range(n_cls):
+                                 (n_keys, k_pat, i_max)).copy()
+    cand_count = np.zeros((n_keys, k_pat), np.int32)
+    cand_index = np.full((n_keys, q_tot), -1, np.int32)
+    for key in range(n_keys):
         for k in range(k_pat):
-            ordered = sets[c][k]
-            cand_count[c, k] = len(ordered)
+            ordered = sets[key][k]
+            cand_count[key, k] = len(ordered)
             for j, st in enumerate(ordered):
-                candidates[c, k, j] = st
-                cand_index[c, st] = j
+                candidates[key, k, j] = st
+                cand_index[key, st] = j
     gamma = 0.0
     for k in range(k_pat):
         q_k = int(packed.offsets[k + 1] - packed.offsets[k])
@@ -210,7 +261,8 @@ def build_packed_lookahead_tables(packed: PackedDFA) -> PackedLookaheadTables:
         k_imax = max(1, int(cand_count[:, k].max(initial=0)))
         gamma = max(gamma, min(float(k_imax) / float(live), 1.0))
     return PackedLookaheadTables(candidates=candidates, cand_count=cand_count,
-                                 cand_index=cand_index, i_max=i_max, gamma=gamma)
+                                 cand_index=cand_index, i_max=i_max,
+                                 gamma=gamma, r=r, n_keys=n_keys)
 
 
 def build_lookahead_tables(dfa: DFA, *, r: int = 1) -> LookaheadTables:

@@ -1,4 +1,4 @@
-"""Offline capacity profiling (paper Sec. 4.1 step 1, Eq. 1).
+"""Offline capacity profiling (paper Sec. 4.1 step 1, Eq. 1) + shape autotuner.
 
 On heterogeneous fleets (the paper's EC2 scenario; for us, mixed-generation
 TPU pods or cloud VMs) the partitioner needs per-worker matching capacities
@@ -7,11 +7,25 @@ takes the *median* — we do the same, against a benchmark DFA, using the jit'd
 sequential matcher.  Profiling is re-run at cluster (re)start, which is also
 our straggler-mitigation hook: a persistently slow host simply receives a
 proportionally smaller shard (Eq. 5).
+
+The same measure-then-choose discipline drives ``autotune_spec_shapes``, the
+opt-in shape autotuner behind ``Matcher(autotune=True)``: instead of the
+near-square ``mesh_shape="auto"`` heuristic and fixed kernel block sizes, it
+times candidate ``(num_chunks, mesh_shape, l_blk)`` configurations on a
+synthetic probe corpus and applies the measured winner.  Results cache per
+(DFA, candidates, fleet, backend) key — in-process by default, on disk when
+``$REPRO_AUTOTUNE_CACHE`` names a JSON path (so repeated cold starts on the
+same host skip the measurement entirely).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
+import os
 import time
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -23,7 +37,8 @@ from .engine import sequential_state
 from .partition import capacity_weights
 
 __all__ = ["profile_capacity", "profile_workers", "synthetic_capacities",
-           "calibrated_capacities", "clear_calibration_cache"]
+           "calibrated_capacities", "clear_calibration_cache",
+           "TunedShape", "autotune_spec_shapes", "clear_autotune_cache"]
 
 
 def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
@@ -117,6 +132,190 @@ def clear_calibration_cache() -> None:
 def profile_workers(capacities: np.ndarray | list[float]) -> np.ndarray:
     """Eq. 1 weights from measured capacities (one entry per worker)."""
     return capacity_weights(np.asarray(capacities, dtype=np.float64))
+
+
+# --------------------------------------------------------------------------
+# shape autotuner (Matcher(autotune=True))
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TunedShape:
+    """A measured shape choice for the speculative path.
+
+    ``mesh_shape`` is the winning (doc, chunk) extents when the search ran
+    over an ``"auto"`` sharded mesh (else the caller's value echoed back);
+    ``l_blk`` is the winning kernel symbol-block length (0 = not searched —
+    only the pallas backend scans symbols in L-blocks).  ``source`` records
+    provenance: "measured", "cache" (in-process) or "disk" (the
+    ``$REPRO_AUTOTUNE_CACHE`` file).
+    """
+
+    num_chunks: int
+    mesh_shape: Optional[tuple]
+    l_blk: int
+    us_per_call: float
+    source: str
+
+
+_AUTOTUNE_CACHE: dict[str, TunedShape] = {}
+_AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def clear_autotune_cache() -> None:
+    """Drop every in-process autotune result (tests; never touches disk)."""
+    _AUTOTUNE_CACHE.clear()
+
+
+def _autotune_key(packed, backend: str, nc_cands, lb_cands, mesh_shape,
+                  devices, lookahead_r) -> str:
+    h = hashlib.sha256()
+    h.update(packed.table.tobytes())
+    h.update(packed.starts.tobytes())
+    h.update(repr((backend, tuple(nc_cands), tuple(lb_cands),
+                   mesh_shape, devices, lookahead_r,
+                   tuple(str(d) for d in jax.devices()))).encode())
+    return h.hexdigest()[:24]
+
+
+def _disk_cache_load(path: str) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return {}
+
+
+def _disk_cache_store(path: str, key: str, tuned: TunedShape) -> None:
+    data = _disk_cache_load(path)
+    row = dataclasses.asdict(tuned)
+    row["mesh_shape"] = list(tuned.mesh_shape) if isinstance(
+        tuned.mesh_shape, tuple) else tuned.mesh_shape
+    data[key] = row
+    try:
+        with open(path, "w") as fh:
+            json.dump(data, fh, indent=1, sort_keys=True)
+    except OSError:
+        pass  # unwritable cache path degrades to in-process caching
+
+
+def _probe_corpus(num_docs: int, doc_bytes: int, n_alpha: int = 8):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, n_alpha, size=doc_bytes).astype(np.uint8)
+            for _ in range(num_docs)]
+
+
+def _measure_config(packed, probe, *, backend: str, num_chunks: int,
+                    mesh_shape, devices, l_blk: int, lookahead_r,
+                    repeats: int) -> float:
+    from .engine.facade import Matcher  # lazy: facade imports this module
+    kw = {}
+    if backend == "sharded":
+        kw.update(mesh_shape=mesh_shape, devices=devices)
+    m = Matcher(packed, num_chunks=num_chunks, backend=backend,
+                batch_tile=max(8, len(probe)), lookahead_r=lookahead_r, **kw)
+    if l_blk:
+        m.executor.spec_l_blk[0] = int(l_blk)
+    m.membership_batch(probe)  # warmup: trace + compile outside the clock
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        m.membership_batch(probe)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def autotune_spec_shapes(packed, *, backend: str = "local",
+                         num_chunks_candidates: Sequence[int] = (4, 8),
+                         mesh_shape=None, devices: Optional[int] = None,
+                         lookahead_r="auto",
+                         l_blk_candidates: Sequence[int] = (128, 256, 512),
+                         probe_docs: int = 8, probe_bytes: int = 2048,
+                         repeats: int = 2,
+                         time_fn: Optional[Callable[[dict], float]] = None,
+                         refresh: bool = False) -> TunedShape:
+    """Measure candidate speculative shapes and return the fastest.
+
+    Greedy coordinate descent over three axes — ``num_chunks`` (every
+    backend), mesh (doc, chunk) extents (sharded backend with
+    ``mesh_shape="auto"``: all divisor factorings of the fleet, near-square
+    first), and the kernel symbol-block length ``l_blk`` (pallas backend
+    only) — each axis tuned while the others hold their incumbent, so a
+    3-axis search costs sums of candidates, not products.  Each candidate is
+    one ``Matcher`` construction timed on a deterministic synthetic corpus
+    (median of ``repeats`` post-warmup ``membership_batch`` calls).
+
+    ``time_fn`` replaces the measurement: it receives the candidate config
+    as a dict (``backend`` / ``num_chunks`` / ``mesh_shape`` / ``l_blk``)
+    and returns a cost in microseconds — deterministic unit testing without
+    timing noise or device work.  Results cache per (DFA, candidates,
+    fleet, backend) key: in-process always, and through the JSON file named
+    by ``$REPRO_AUTOTUNE_CACHE`` when set (``refresh=True`` re-measures and
+    overwrites both).
+    """
+    nc_cands = [int(c) for c in num_chunks_candidates if int(c) >= 1]
+    if not nc_cands:
+        raise ValueError("need at least one num_chunks candidate")
+    lb_cands = ([int(b) for b in l_blk_candidates if int(b) >= 1]
+                if backend == "pallas" else [])
+    key = _autotune_key(packed, backend, nc_cands, lb_cands, mesh_shape,
+                        devices, lookahead_r)
+    cache_path = os.environ.get(_AUTOTUNE_CACHE_ENV)
+    if not refresh:
+        if key in _AUTOTUNE_CACHE:
+            return dataclasses.replace(_AUTOTUNE_CACHE[key], source="cache")
+        if cache_path:
+            row = _disk_cache_load(cache_path).get(key)
+            if row is not None:
+                ms = row.get("mesh_shape")
+                tuned = TunedShape(
+                    num_chunks=int(row["num_chunks"]),
+                    mesh_shape=tuple(ms) if isinstance(ms, list) else ms,
+                    l_blk=int(row["l_blk"]),
+                    us_per_call=float(row["us_per_call"]), source="disk")
+                _AUTOTUNE_CACHE[key] = tuned
+                return tuned
+
+    if backend == "sharded" and mesh_shape == "auto":
+        n_dev = int(devices) if devices else len(jax.devices())
+        mesh_cands = sorted(((d, n_dev // d) for d in range(1, n_dev + 1)
+                             if n_dev % d == 0),
+                            key=lambda s: abs(s[0] - s[1]))
+    else:
+        mesh_cands = [mesh_shape if backend == "sharded" else None]
+
+    probe = _probe_corpus(probe_docs, probe_bytes)
+    scores: dict[tuple, float] = {}
+
+    def cost(nc: int, ms, lb: int) -> float:
+        cfg = (nc, tuple(ms) if isinstance(ms, (tuple, list)) else ms, lb)
+        if cfg not in scores:
+            if time_fn is not None:
+                scores[cfg] = float(time_fn(
+                    {"backend": backend, "num_chunks": nc,
+                     "mesh_shape": cfg[1], "l_blk": lb}))
+            else:
+                scores[cfg] = _measure_config(
+                    packed, probe, backend=backend, num_chunks=nc,
+                    mesh_shape=ms, devices=devices, l_blk=lb,
+                    lookahead_r=lookahead_r, repeats=repeats)
+        return scores[cfg]
+
+    base_lb = lb_cands[-1] if lb_cands else 0
+    best_nc = min(nc_cands, key=lambda nc: cost(nc, mesh_cands[0], base_lb))
+    best_ms = (min(mesh_cands, key=lambda ms: cost(best_nc, ms, base_lb))
+               if len(mesh_cands) > 1 else mesh_cands[0])
+    best_lb = (min(lb_cands, key=lambda lb: cost(best_nc, best_ms, lb))
+               if lb_cands else 0)
+    tuned = TunedShape(
+        num_chunks=best_nc,
+        mesh_shape=(tuple(best_ms) if isinstance(best_ms, (tuple, list))
+                    else best_ms),
+        l_blk=best_lb, us_per_call=cost(best_nc, best_ms, best_lb),
+        source="measured")
+    _AUTOTUNE_CACHE[key] = tuned
+    if cache_path:
+        _disk_cache_store(cache_path, key, tuned)
+    return tuned
 
 
 def synthetic_capacities(n_workers: int, *, ratio: float = 1.41,

@@ -32,7 +32,8 @@ from jax.experimental.pallas import tpu as pltpu
 from .pallas_compat import CompilerParams
 
 __all__ = ["spec_match_kernel", "spec_match_pallas",
-           "spec_match_merge_kernel", "spec_match_merge_pallas"]
+           "spec_match_merge_kernel", "spec_match_merge_pallas",
+           "spec_match_merge_lanes_kernel", "spec_match_merge_lanes_pallas"]
 
 
 def spec_match_kernel(table_ref, chunks_ref, init_ref, out_ref, carry_ref, *,
@@ -108,9 +109,58 @@ def spec_match_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
 # Batched multi-pattern kernel: grid over documents, merge fused in-kernel
 # --------------------------------------------------------------------------
 
+def _scan_block_with_exit(table_ref, chunks_ref, init_ref, absorb_ref,
+                          skip_ref, carry_ref, done_ref, *, n_cls_pad: int,
+                          early_exit: bool):
+    """Shared symbol-block scan of the fused merge kernels, with the
+    in-flight all-absorbed early exit.
+
+    The per-document done flag lives in SMEM scratch and is read *before*
+    the block body, so the block that discovers the condition still runs and
+    every later grid step along the "arbitrary" dimension is a no-op (the
+    skipped-step counter accumulates into ``skip_ref``).  Freezing the carry
+    is bit-exact: absorbing states self-loop on every class including the
+    identity pad column, so the remaining symbol blocks could not have moved
+    any lane.  The probe itself is one [C, K*S] gather + reduction per block
+    — amortized over ``l_blk`` symbol steps.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = init_ref[0] * n_cls_pad
+        skip_ref[0, 0] = 0
+        done_ref[0] = 0
+
+    live = done_ref[0] == 0
+
+    @pl.when(live)
+    def _scan():
+        table = table_ref[...]
+        syms = chunks_ref[0]          # [C, l_blk]
+        states = carry_ref[...]       # [C, K * S] pre-scaled
+
+        def body(l, states):
+            # idx = state * n_cls_pad + class (the paper's 1-D SBase lookup)
+            idx = states + jax.lax.dynamic_slice_in_dim(syms, l, 1, axis=1)
+            return jnp.take(table, idx, axis=0)
+
+        states = jax.lax.fori_loop(0, syms.shape[1], body, states)
+        carry_ref[...] = states
+        if early_exit:
+            absorbed = jnp.take(absorb_ref[...], states // n_cls_pad, axis=0)
+            done_ref[0] = absorbed.all().astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        skip_ref[0, 0] = skip_ref[0, 0] + 1
+
+
 def spec_match_merge_kernel(table_ref, chunks_ref, init_ref, la_ref, cidx_ref,
-                            sinks_ref, out_ref, carry_ref, *, n_cls_pad: int,
-                            l_blocks: int, n_patterns: int, pad_cls: int):
+                            sinks_ref, absorb_ref, out_ref, skip_ref,
+                            carry_ref, done_ref, *, n_cls_pad: int,
+                            l_blocks: int, n_patterns: int, pad_cls: int,
+                            early_exit: bool):
     """One (document, symbol-block) grid step of the fused batch pipeline.
 
     table_ref : [Q_total * n_cls_pad] int32 pre-scaled flat packed table (VMEM)
@@ -120,39 +170,32 @@ def spec_match_merge_kernel(table_ref, chunks_ref, init_ref, la_ref, cidx_ref,
                 0 — the pattern starts for whole documents, or a streaming
                 cursor's resumed states (the ``LanePlan`` entry-seed stage,
                 ``engine.executors.LaneExecutor._seed_chunk0``; the kernel
-                is agnostic to which, by construction).  The kernel always
-                runs its grid start-to-end: the absorbing-state early exit
-                lives in the lowering (``LocalExecutor._lower_spec_kernel``
-                skips the whole dispatch for all-absorbed buckets).
-    la_ref    : [1, C] int32 per-chunk reverse-lookahead class (entry 0 unused)
-    cidx_ref  : [n_cls_pad, Q_total] int32 candidate-lane index (VMEM, whole)
+                is agnostic to which, by construction).
+    la_ref    : [1, C] int32 per-chunk boundary key (entry 0 unused)
+    cidx_ref  : [n_keys_pad, Q_total] int32 candidate-lane index (VMEM, whole)
     sinks_ref : [K] int32 packed sink per pattern (-1 if none)
+    absorb_ref: [Q_total] int32 absorbing-state flags (the early-exit probe)
     out_ref   : [1, K] int32 final packed state per pattern (last block only)
+    skip_ref  : [1, 1] int32 symbol blocks skipped by the in-kernel exit
     carry_ref : [C, K * S] int32 VMEM scratch carrying pre-scaled states
+    done_ref  : [1] int32 SMEM scratch — the per-document all-absorbed flag
 
     The Eq. 8 fold over chunks runs *inside* the kernel on the final symbol
     block, so one grid pass emits the per-document answer — no host-driven
     ``lax.scan`` over chunk L-vectors and no intermediate [B, C, S] output.
+    With ``early_exit`` the symbol-block body is guarded on the SMEM done
+    flag (``_scan_block_with_exit``): once every lane of the document sits
+    in an absorbing state, the remaining grid steps along the "arbitrary"
+    dimension only bump the skipped counter.  The merge still runs on the
+    last block, reading the frozen (exact) carry.
     """
-    j = pl.program_id(1)
+    _scan_block_with_exit(table_ref, chunks_ref, init_ref, absorb_ref,
+                          skip_ref, carry_ref, done_ref, n_cls_pad=n_cls_pad,
+                          early_exit=early_exit)
 
-    @pl.when(j == 0)
-    def _init():
-        carry_ref[...] = init_ref[0] * n_cls_pad
-
-    table = table_ref[...]
-    syms = chunks_ref[0]              # [C, l_blk]
-    states = carry_ref[...]           # [C, K * S] pre-scaled
-
-    def body(l, states):
-        idx = states + jax.lax.dynamic_slice_in_dim(syms, l, 1, axis=1)
-        return jnp.take(table, idx, axis=0)
-
-    states = jax.lax.fori_loop(0, syms.shape[1], body, states)
-    carry_ref[...] = states
-
-    @pl.when(j == l_blocks - 1)
+    @pl.when(pl.program_id(1) == l_blocks - 1)
     def _merge():
+        states = carry_ref[...]
         c = states.shape[0]
         lv = (states // n_cls_pad).reshape(c, n_patterns, -1)
         la = la_ref[0]
@@ -172,32 +215,68 @@ def spec_match_merge_kernel(table_ref, chunks_ref, init_ref, la_ref, cidx_ref,
         out_ref[0, :] = jax.lax.fori_loop(1, c, fold, lv[0, :, 0])
 
 
-@functools.partial(jax.jit, static_argnames=("pad_cls", "l_blk", "interpret"))
-def spec_match_merge_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
-                            init_states: jnp.ndarray, lookahead: jnp.ndarray,
-                            cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
-                            pad_cls: int, l_blk: int = 512,
-                            interpret: bool = True) -> jnp.ndarray:
-    """Pallas-backed equivalent of ``ref.spec_match_merge_ref``.
+def spec_match_merge_lanes_kernel(table_ref, chunks_ref, init_ref, la_ref,
+                                  cidx_ref, sinks_ref, absorb_ref, out_ref,
+                                  skip_ref, carry_ref, done_ref, *,
+                                  n_cls_pad: int, l_blocks: int,
+                                  n_patterns: int, pad_cls: int,
+                                  early_exit: bool):
+    """Lane-carrying variant of ``spec_match_merge_kernel`` (streaming tick).
 
-    table [Q_total, n_cls_pad] (identity pad column included); chunks
-    [B, C, L]; init_states [B, C, K*S]; lookahead [B, C]; cand_index
-    [n_cls_pad, Q_total]; sinks [K].  L must divide by l_blk (ops.py picks
-    the block).  Grid: (B, L / l_blk) — documents ride the parallel grid
-    dimension, the symbol recurrence rides the arbitrary one.
+    Same operands and scan, but chunk 0's lanes are the Eq. 11 candidate
+    entries of each document's boundary key — not an exact state — and the
+    in-kernel Eq. 8 fold keeps the full ``[K, S]`` carry, composing later
+    chunks lane-for-lane (``ref.spec_merge_lanes_ref`` semantics).
+    ``out_ref [1, K * S]`` is the document's restricted transition map; the
+    lowering composes it with the caller's cursor lanes in one tiny jnp op
+    (``LaneExecutor._compose_cursor``).  This is what puts
+    ``Matcher.advance_cursors`` — the streaming hot path — on the fused
+    kernel instead of staged jnp.
     """
+    _scan_block_with_exit(table_ref, chunks_ref, init_ref, absorb_ref,
+                          skip_ref, carry_ref, done_ref, n_cls_pad=n_cls_pad,
+                          early_exit=early_exit)
+
+    @pl.when(pl.program_id(1) == l_blocks - 1)
+    def _merge():
+        states = carry_ref[...]
+        c = states.shape[0]
+        s = states.shape[1] // n_patterns
+        lv = (states // n_cls_pad).reshape(c, n_patterns, s)
+        la = la_ref[0]
+        cidx = cidx_ref[...]
+        sinks = sinks_ref[...]
+
+        def fold(i, st):  # st [K, S] carried lane states
+            la_i = jax.lax.dynamic_index_in_dim(la, i, 0, keepdims=False)
+            lv_i = jax.lax.dynamic_index_in_dim(lv, i, 0, keepdims=False)
+            lane = jnp.take(jnp.take(cidx, la_i, axis=0), st)      # [K, S]
+            hit = jnp.take_along_axis(lv_i, jnp.maximum(lane, 0), axis=1)
+            sk = sinks[:, None]
+            nxt = jnp.where(lane < 0, jnp.where(sk >= 0, sk, st), hit)
+            nxt = jnp.where(la_i == pad_cls, st, nxt)
+            return nxt.astype(jnp.int32)
+
+        out_ref[0, :] = jax.lax.fori_loop(1, c, fold, lv[0]).reshape(-1)
+
+
+def _merge_pallas_call(kernel_fn, table, chunks, init_states, lookahead,
+                       cand_index, sinks, absorbing, *, pad_cls, l_blk,
+                       out_width, early_exit, interpret):
+    """Shared ``pallas_call`` plumbing of the two fused merge kernels."""
     q, n_cls_pad = table.shape
     b, c, l = chunks.shape
     s_tot = init_states.shape[-1]
     k = sinks.shape[0]
+    n_keys_pad = cand_index.shape[0]
     assert l % l_blk == 0, (l, l_blk)
     flat = (table.astype(jnp.int32) * n_cls_pad).reshape(-1)
     l_blocks = l // l_blk
 
-    kernel = functools.partial(spec_match_merge_kernel, n_cls_pad=n_cls_pad,
+    kernel = functools.partial(kernel_fn, n_cls_pad=n_cls_pad,
                                l_blocks=l_blocks, n_patterns=k,
-                               pad_cls=pad_cls)
-    return pl.pallas_call(
+                               pad_cls=pad_cls, early_exit=early_exit)
+    out, skipped = pl.pallas_call(
         kernel,
         grid=(b, l_blocks),
         in_specs=[
@@ -205,15 +284,71 @@ def spec_match_merge_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
             pl.BlockSpec((1, c, l_blk), lambda i, j: (i, 0, j)),   # symbols
             pl.BlockSpec((1, c, s_tot), lambda i, j: (i, 0, 0)),   # init lanes
             pl.BlockSpec((1, c), lambda i, j: (i, 0)),             # lookahead
-            pl.BlockSpec((n_cls_pad, q), lambda i, j: (0, 0)),     # cand index
+            pl.BlockSpec((n_keys_pad, q), lambda i, j: (0, 0)),    # cand index
             pl.BlockSpec((k,), lambda i, j: (0,)),                 # sinks
+            pl.BlockSpec((q,), lambda i, j: (0,)),                 # absorbing
         ],
-        out_specs=pl.BlockSpec((1, k), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((c, s_tot), jnp.int32)],
+        out_specs=[pl.BlockSpec((1, out_width), lambda i, j: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, out_width), jnp.int32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((c, s_tot), jnp.int32),
+                        pltpu.SMEM((1,), jnp.int32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(flat, chunks.astype(jnp.int32), init_states.astype(jnp.int32),
       lookahead.astype(jnp.int32), cand_index.astype(jnp.int32),
-      sinks.astype(jnp.int32))
+      sinks.astype(jnp.int32), absorbing.astype(jnp.int32))
+    return out, skipped[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("pad_cls", "l_blk", "early_exit",
+                                             "interpret"))
+def spec_match_merge_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
+                            init_states: jnp.ndarray, lookahead: jnp.ndarray,
+                            cand_index: jnp.ndarray, sinks: jnp.ndarray,
+                            absorbing: jnp.ndarray, *, pad_cls: int,
+                            l_blk: int = 512, early_exit: bool = True,
+                            interpret: bool = True
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas-backed equivalent of ``ref.spec_match_merge_ref``.
+
+    table [Q_total, n_cls_pad] (identity pad column included); chunks
+    [B, C, L]; init_states [B, C, K*S]; lookahead [B, C] boundary keys;
+    cand_index [n_keys_pad, Q_total]; sinks [K]; absorbing [Q_total].
+    L must divide by l_blk (ops.py pads/picks the block).  Grid:
+    (B, L / l_blk) — documents ride the parallel grid dimension, the symbol
+    recurrence rides the arbitrary one.  Returns ``(finals [B, K],
+    skipped [B])`` — symbol blocks skipped per document by the in-kernel
+    all-absorbed early exit (0 when ``early_exit=False``).
+    """
+    return _merge_pallas_call(spec_match_merge_kernel, table, chunks,
+                              init_states, lookahead, cand_index, sinks,
+                              absorbing, pad_cls=pad_cls, l_blk=l_blk,
+                              out_width=sinks.shape[0],
+                              early_exit=early_exit, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("pad_cls", "l_blk", "early_exit",
+                                             "interpret"))
+def spec_match_merge_lanes_pallas(table: jnp.ndarray, chunks: jnp.ndarray,
+                                  init_states: jnp.ndarray,
+                                  lookahead: jnp.ndarray,
+                                  cand_index: jnp.ndarray, sinks: jnp.ndarray,
+                                  absorbing: jnp.ndarray, *, pad_cls: int,
+                                  l_blk: int = 512, early_exit: bool = True,
+                                  interpret: bool = True
+                                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas-backed equivalent of ``ref.spec_match_merge_lanes_ref``.
+
+    Same operands as ``spec_match_merge_pallas`` but the output keeps the
+    candidate lane axis: ``(lanes [B, K * S], skipped [B])`` — each
+    document's restricted transition map under every Eq. 11 candidate entry
+    of its boundary key.
+    """
+    return _merge_pallas_call(spec_match_merge_lanes_kernel, table, chunks,
+                              init_states, lookahead, cand_index, sinks,
+                              absorbing, pad_cls=pad_cls, l_blk=l_blk,
+                              out_width=init_states.shape[-1],
+                              early_exit=early_exit, interpret=interpret)

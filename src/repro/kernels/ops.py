@@ -16,14 +16,16 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .dfa_match import spec_match_merge_pallas, spec_match_pallas
+from .dfa_match import (spec_match_merge_lanes_pallas,
+                        spec_match_merge_pallas, spec_match_pallas)
 from .flash_attn import flash_attn_pallas
 from .lvec_compose import lvec_compose_pallas
 from .onehot_match import onehot_block_maps_pallas
 from .token_mask import token_mask_pallas
 
-__all__ = ["on_tpu", "spec_match", "spec_match_merge", "lvec_compose",
-           "onehot_block_maps", "token_mask", "mxu_profitable", "flash_attn"]
+__all__ = ["on_tpu", "spec_match", "spec_match_merge",
+           "spec_match_merge_lanes", "lvec_compose", "onehot_block_maps",
+           "token_mask", "mxu_profitable", "flash_attn"]
 
 
 def on_tpu() -> bool:
@@ -43,6 +45,33 @@ def _pick_block(n: int, target: int) -> int:
                 if cand <= target and cand > best:
                     best = cand
     return best
+
+
+def _pad_to_block(n: int, target: int) -> tuple[int, int]:
+    """Block size and padded extent for a length-``n`` axis.
+
+    Returns ``(block, n_padded)`` with ``block = min(n, target)`` and
+    ``n_padded`` the next multiple of ``block``.  This replaces the old
+    exact-divisor search (``_pick_block``), which degenerated to block size
+    1 for prime/odd ``n`` — turning the kernels into symbol-at-a-time grids.
+    Callers pad the axis with identity-class symbols (or identity maps), so
+    the extra tail is a semantic no-op.
+    """
+    blk = max(1, min(n, target))
+    return blk, n + (-n) % blk
+
+
+def _identity_padded_table(table: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Append an identity class column (state q maps to itself).
+
+    Raw transition tables have no reserved padding class; this returns a
+    widened table plus the new class index, giving padded symbols a sound
+    no-op transition.  (Packed ``table_pad`` variants already carry an
+    identity ``pad_cls`` column, so they never need this.)
+    """
+    q = table.shape[0]
+    ident = jnp.arange(q, dtype=table.dtype)[:, None]
+    return jnp.concatenate([table, ident], axis=1), table.shape[1]
 
 
 def mxu_profitable(q: int, s: int, *, vpu_lanes: int = 1024,
@@ -70,7 +99,11 @@ def spec_match(table: jnp.ndarray, chunks: jnp.ndarray,
     if use_mxu is None:
         use_mxu = mxu_profitable(q, s)
     if use_mxu:
-        l_blk = _pick_block(l, 256)
+        l_blk, l_pad = _pad_to_block(l, 256)
+        if l_pad != l:
+            table, id_cls = _identity_padded_table(table)
+            chunks = jnp.pad(chunks, ((0, 0), (0, l_pad - l)),
+                             constant_values=id_cls)
         def per_chunk(syms):
             maps = onehot_block_maps_pallas(table, syms, l_blk=l_blk,
                                             interpret=interpret)
@@ -78,46 +111,115 @@ def spec_match(table: jnp.ndarray, chunks: jnp.ndarray,
             return full
         full_maps = jax.vmap(per_chunk)(chunks)             # [C, Q]
         return jnp.take_along_axis(full_maps, init_states.astype(jnp.int32), axis=1)
-    c_blk = _pick_block(c, 8)
-    l_blk = _pick_block(l, 512)
+    c_blk, c_pad = _pad_to_block(c, 8)
+    l_blk, l_pad = _pad_to_block(l, 512)
+    if (c_pad, l_pad) != (c, l):
+        table, id_cls = _identity_padded_table(table)
+        chunks = jnp.pad(chunks, ((0, c_pad - c), (0, l_pad - l)),
+                         constant_values=id_cls)
+        init_states = jnp.pad(init_states, ((0, c_pad - c), (0, 0)))
+        return spec_match_pallas(table, chunks, init_states, c_blk=c_blk,
+                                 l_blk=l_blk, interpret=interpret)[:c]
     return spec_match_pallas(table, chunks, init_states, c_blk=c_blk,
                              l_blk=l_blk, interpret=interpret)
 
 
+def _pad_merge_chunks(chunks: jnp.ndarray, pad_cls: int,
+                      l_blk_target: int) -> tuple[jnp.ndarray, int]:
+    """Pad the symbol axis of [B, C, L] chunks with the identity pad class."""
+    l = chunks.shape[-1]
+    l_blk, l_pad = _pad_to_block(l, l_blk_target)
+    if l_pad != l:
+        chunks = jnp.pad(chunks, ((0, 0), (0, 0), (0, l_pad - l)),
+                         constant_values=pad_cls)
+    return chunks, l_blk
+
+
 def spec_match_merge(table: jnp.ndarray, chunks: jnp.ndarray,
                      init_states: jnp.ndarray, lookahead: jnp.ndarray,
-                     cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
-                     pad_cls: int,
-                     interpret: bool | None = None) -> jnp.ndarray:
+                     cand_index: jnp.ndarray, sinks: jnp.ndarray,
+                     absorbing: jnp.ndarray, *, pad_cls: int,
+                     pad_key: int | None = None, early_exit: bool = True,
+                     l_blk: int = 512, interpret: bool | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
     """Fused batch classify-stream match + merge; see ``ref.spec_match_merge_ref``.
 
     One kernel launch covers a whole document bucket: grid over documents,
     Eq. 8 merge fused into the last symbol block, output [B, K] finals only.
+    ``table`` must be the padded packed table (identity ``pad_cls`` column);
+    L is padded with ``pad_cls`` symbols up to the block multiple.
+    ``pad_key`` is the merge fold's passthrough boundary key — it equals
+    ``pad_cls`` for r=1 lookahead tables (the default) but is ``n_classes**2``
+    under r=2 pair keys.  Returns ``(finals [B, K], skipped [B], l_blk)`` —
+    per-document symbol blocks skipped by the in-kernel all-absorbed early
+    exit, and the block size the lowering needs to convert that count into an
+    exit position.
     """
     interpret = _interpret() if interpret is None else interpret
-    l = chunks.shape[-1]
-    l_blk = _pick_block(l, 512)
-    return spec_match_merge_pallas(table, chunks, init_states, lookahead,
-                                   cand_index, sinks, pad_cls=pad_cls,
-                                   l_blk=l_blk, interpret=interpret)
+    pad_key = pad_cls if pad_key is None else pad_key
+    chunks, l_blk = _pad_merge_chunks(chunks, pad_cls, l_blk)
+    out, skipped = spec_match_merge_pallas(
+        table, chunks, init_states, lookahead, cand_index, sinks, absorbing,
+        pad_cls=pad_key, l_blk=l_blk, early_exit=early_exit,
+        interpret=interpret)
+    return out, skipped, l_blk
+
+
+def spec_match_merge_lanes(table: jnp.ndarray, chunks: jnp.ndarray,
+                           init_states: jnp.ndarray, lookahead: jnp.ndarray,
+                           cand_index: jnp.ndarray, sinks: jnp.ndarray,
+                           absorbing: jnp.ndarray, *, pad_cls: int,
+                           pad_key: int | None = None,
+                           early_exit: bool = True, l_blk: int = 512,
+                           interpret: bool | None = None
+                           ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Fused lane-carrying match + merge; see ``ref.spec_match_merge_lanes_ref``.
+
+    The streaming-tick variant: the full [K, S] candidate lane axis survives
+    the in-kernel Eq. 8 fold, so the output is each document's restricted
+    transition map rather than a single final per pattern.  Returns
+    ``(lanes [B, K, S], skipped [B], l_blk)``.  ``pad_key`` as in
+    ``spec_match_merge``.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    pad_key = pad_cls if pad_key is None else pad_key
+    chunks, l_blk = _pad_merge_chunks(chunks, pad_cls, l_blk)
+    out, skipped = spec_match_merge_lanes_pallas(
+        table, chunks, init_states, lookahead, cand_index, sinks, absorbing,
+        pad_cls=pad_key, l_blk=l_blk, early_exit=early_exit,
+        interpret=interpret)
+    k = sinks.shape[0]
+    return out.reshape(out.shape[0], k, -1), skipped, l_blk
 
 
 def lvec_compose(maps: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
     """Compose [C, Q] maps left-to-right -> [Q]; see ``ref.lvec_compose_ref``."""
     interpret = _interpret() if interpret is None else interpret
-    c = maps.shape[0]
-    c_blk = _pick_block(c, 8)
+    c, q = maps.shape
+    c_blk, c_pad = _pad_to_block(c, 8)
+    if c_pad != c:  # identity maps compose as no-ops
+        ident = jnp.broadcast_to(jnp.arange(q, dtype=maps.dtype),
+                                 (c_pad - c, q))
+        maps = jnp.concatenate([maps, ident], axis=0)
     return lvec_compose_pallas(maps, c_blk=c_blk, interpret=interpret)
 
 
 def onehot_block_maps(table: jnp.ndarray, symbols: jnp.ndarray, *,
                       block_l: int = 256,
                       interpret: bool | None = None) -> jnp.ndarray:
-    """Block maps via the MXU formulation; see ``ref.onehot_block_maps_ref``."""
+    """Block maps via the MXU formulation; see ``ref.onehot_block_maps_ref``.
+
+    Non-multiple L is padded with an appended identity class, so any extra
+    trailing block maps are identity permutations (no-ops under
+    composition).
+    """
     interpret = _interpret() if interpret is None else interpret
     l = symbols.shape[0]
-    block_l = _pick_block(l, block_l)
-    return onehot_block_maps_pallas(table, symbols, l_blk=block_l,
+    l_blk, l_pad = _pad_to_block(l, block_l)
+    if l_pad != l:
+        table, id_cls = _identity_padded_table(table)
+        symbols = jnp.pad(symbols, (0, l_pad - l), constant_values=id_cls)
+    return onehot_block_maps_pallas(table, symbols, l_blk=l_blk,
                                     interpret=interpret)
 
 
@@ -127,12 +229,12 @@ def token_mask(states: jnp.ndarray, allowed: jnp.ndarray, logits: jnp.ndarray,
     """Fused grammar mask; see ``ref.token_mask_ref``.  Pads V to the tile."""
     interpret = _interpret() if interpret is None else interpret
     b, v = logits.shape
-    v_blk = 2048 if v % 2048 == 0 else _pick_block(v, 2048)
-    if v_blk < 128 and v >= 128:  # ragged vocab: pad to the tile boundary
-        pad = (-v) % 2048
-        logits_p = jnp.pad(logits, ((0, 0), (0, pad)))
-        allowed_p = jnp.pad(allowed.astype(jnp.uint8), ((0, 0), (0, pad)))
-        out = token_mask_pallas(states, allowed_p, logits_p, v_blk=2048,
+    v_blk, v_pad = _pad_to_block(v, 2048)
+    if v_pad != v:  # ragged vocab: pad to the tile boundary (masked -> neg)
+        logits_p = jnp.pad(logits, ((0, 0), (0, v_pad - v)))
+        allowed_p = jnp.pad(allowed.astype(jnp.uint8),
+                            ((0, 0), (0, v_pad - v)))
+        out = token_mask_pallas(states, allowed_p, logits_p, v_blk=v_blk,
                                 neg=neg, interpret=interpret)
         return out[:, :v]
     return token_mask_pallas(states, allowed, logits, v_blk=v_blk, neg=neg,

@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["spec_match_ref", "spec_merge_ref", "spec_merge_lanes_ref",
-           "spec_match_merge_ref", "cursor_merge_ref",
-           "classify_ref", "classify_pad_ref", "lvec_compose_ref",
-           "onehot_block_maps_ref", "token_mask_ref"]
+           "spec_match_merge_ref", "spec_match_merge_lanes_ref",
+           "cursor_merge_ref", "classify_ref", "classify_pad_ref",
+           "lvec_compose_ref", "onehot_block_maps_ref", "token_mask_ref"]
 
 
 def classify_ref(byte_to_class: np.ndarray, data: bytes | np.ndarray) -> np.ndarray:
@@ -93,6 +93,34 @@ def spec_match_merge_ref(table: jnp.ndarray, chunks: jnp.ndarray,
         chunks.reshape(b * c, l).T)
     return spec_merge_ref(lvecs.reshape(b, c, k, s), lookahead, cand_index,
                           sinks, pad_cls=pad_cls)
+
+
+def spec_match_merge_lanes_ref(table: jnp.ndarray, chunks: jnp.ndarray,
+                               init_states: jnp.ndarray,
+                               lookahead: jnp.ndarray,
+                               cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                               pad_cls: int) -> jnp.ndarray:
+    """Lane-carrying twin of ``spec_match_merge_ref`` (the streaming tick).
+
+    Same chunk scan, but chunk 0's lanes are the Eq. 11 candidate entries of
+    a boundary key (not an exact state), and the Eq. 8 fold keeps the full
+    ``[K, S]`` carry (``spec_merge_lanes_ref`` semantics) — the output
+    ``[B, K * S]`` is each document's restricted transition map, ready to
+    compose with a streaming cursor (``cursor_merge_ref``).  This is the
+    oracle of the fused lanes kernel (``dfa_match
+    .spec_match_merge_lanes_pallas``).
+    """
+    b, c, l = chunks.shape
+    k = sinks.shape[0]
+    s = init_states.shape[-1] // k
+
+    lvecs, _ = jax.lax.scan(
+        lambda st, cls_row: (table[st, cls_row[:, None]], None),
+        init_states.reshape(b * c, k * s).astype(jnp.int32),
+        chunks.reshape(b * c, l).T)
+    out = spec_merge_lanes_ref(lvecs.reshape(b, c, k, s), lookahead,
+                               cand_index, sinks, pad_cls=pad_cls)
+    return out.reshape(b, k * s)
 
 
 def _merge_fold(start: jnp.ndarray, lvecs: jnp.ndarray, lookahead: jnp.ndarray,

@@ -67,8 +67,9 @@ class SegmentResult:
     lane_states: np.ndarray  # [K, S] int32 exit states per entry lane
     entry_class: int         # joint class keying the lane axis, or ENTRY_EXACT
     n_bytes: int
-    last_class: int          # class of the segment's last byte; ENTRY_EXACT
-                             # when the segment is empty
+    last_class: int          # boundary key after the segment (r-byte suffix
+                             # window, ``DeviceTables.advance_key``);
+                             # ENTRY_EXACT when the segment is empty
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,7 +164,8 @@ def segment_result(tables: DeviceTables, data: bytes | np.ndarray,
         states = packed.table[states, int(c)]
     return SegmentResult(lane_states=states.astype(np.int32),
                          entry_class=int(entry_class), n_bytes=int(arr.size),
-                         last_class=int(cls[-1]) if arr.size else ENTRY_EXACT)
+                         last_class=(tables.advance_key(entry_class, arr)
+                                     if arr.size else ENTRY_EXACT))
 
 
 def merge(cursor: MatchCursor, seg: SegmentResult, *,
@@ -200,7 +202,7 @@ def merge(cursor: MatchCursor, seg: SegmentResult, *,
             cursor.lane_states[None], seg.lane_states[None],
             np.array([seg.entry_class], np.int32),
             tables.tables.cand_index, tables.packed.sinks,
-            pad_cls=tables.pad_cls)[0]
+            pad_cls=tables.pad_key)[0]
     return MatchCursor(lane_states=lane_states,
                        entry_class=cursor.entry_class,
                        absorbed=tables.absorbing[lane_states].all(axis=1),

@@ -241,7 +241,8 @@ class MicroBatchScheduler:
             session._pending_wall = None
             self._queue.pop(session.sid, None)
             if buf:
-                last_class = int(self.matcher.packed.byte_to_class[buf[-1]])
+                last_class = self.matcher.dev.advance_key(
+                    session.cursor.last_class, buf)
                 session.cursor = session.cursor.skipped(len(buf), last_class)
                 self.stats.absorbed_skips += 1
             if not session._evicted:
@@ -324,7 +325,7 @@ class MicroBatchScheduler:
             s._pending_wall = None
             if not data:
                 continue
-            last_class = int(self.matcher.packed.byte_to_class[data[-1]])
+            last_class = self.matcher.dev.advance_key(s.cursor.last_class, data)
             if bool(s.cursor.absorbed.all()):
                 # enqueue-time eviction keeps absorbed sessions out of the
                 # queue, so this only catches sessions absorbed *by the

@@ -186,13 +186,19 @@ def test_spec_match_merge_kernel_matches_ref(shape):
     init[:, 1:] = cand[la[:, 1:]]
     init = init.reshape(b, c, k * s)
 
+    absorbing = (packed.table == np.arange(q)[:, None]).all(axis=1)
     args = (jnp.asarray(table), jnp.asarray(chunks), jnp.asarray(init),
             jnp.asarray(la), jnp.asarray(cidx), jnp.asarray(packed.sinks))
     want = np.stack([packed.run_all(d) for d in docs])
     got_ref = np.asarray(ref.spec_match_merge_ref(*args, pad_cls=pad_cls))
-    got_ker = np.asarray(ops.spec_match_merge(*args, pad_cls=pad_cls))
+    for early_exit in (False, True):
+        got_ker, skipped, l_blk = ops.spec_match_merge(
+            *args, jnp.asarray(absorbing.astype(np.int32)), pad_cls=pad_cls,
+            early_exit=early_exit)
+        assert (np.asarray(got_ker) == want).all()
+        if not early_exit:
+            assert (np.asarray(skipped) == 0).all()
     assert (got_ref == want).all()
-    assert (got_ker == want).all()
 
 
 # --------------------------------------------------------------------------

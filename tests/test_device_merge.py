@@ -65,19 +65,19 @@ def _drive(m, rng, n_streams=6, n_steps=3, max_len=400):
     for _ in range(n_streams):
         doc = bytes(rng.choice(ALPHABET,
                                size=int(rng.integers(2, max_len))).astype(np.uint8))
-        cuts = sorted(1 + int(rng.integers(0, len(doc)))
+        cuts = sorted(2 + int(rng.integers(0, len(doc) - 1))
                       for _ in range(n_steps - 1))
         bounds = [0] + cuts + [len(doc)]
         parts = [doc[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
-        # the exact prefix must be non-empty so every stream has a boundary
-        # class; later segments may be empty (identity composition)
+        # the exact prefix must span >= 2 bytes so every stream has a full
+        # boundary key under any r; later segments may be empty (identity)
         docs.append(doc)
         splits.append(parts)
 
     entry = np.tile(m.packed.starts, (n_streams, 1))
     r0 = m.advance_segments([sp[0] for sp in splits], entry)
-    c0 = np.array([int(m.packed.byte_to_class[sp[0][-1]]) for sp in splits],
-                  np.int32)
+    c0 = np.array([m.dev.advance_key(-1, sp[0]) for sp in splits], np.int32)
+    assert (c0 >= 0).all()
     host = [_identity_cursor(m, c) for c in c0]
     lanes = np.stack([h.lane_states for h in host])
     last = c0.copy()
@@ -96,8 +96,7 @@ def _drive(m, rng, n_streams=6, n_steps=3, max_len=400):
         np.testing.assert_array_equal(
             res.absorbed, m.dev.absorbing[host_lanes].all(axis=2))
         lanes = res.lane_states
-        last = np.array([int(m.packed.byte_to_class[segs[i][-1]])
-                         if segs[i] else last[i]
+        last = np.array([m.dev.advance_key(int(last[i]), segs[i])
                          for i in range(n_streams)], np.int32)
 
     # collapse onto the exact prefix (one more host composition) and compare
@@ -130,17 +129,17 @@ def test_device_merge_matches_host_merge_hypothesis():
     m = _matcher("local", None, num_chunks=4)
 
     @hyp.settings(max_examples=20, deadline=None)
-    @hyp.given(doc=st.binary(min_size=1, max_size=200),
-               cuts=st.lists(st.integers(min_value=1, max_value=200),
+    @hyp.given(doc=st.binary(min_size=2, max_size=200),
+               cuts=st.lists(st.integers(min_value=2, max_value=200),
                              min_size=1, max_size=4))
     def check(doc, cuts):
         bounds = [0] + sorted(min(c, len(doc)) for c in cuts) + [len(doc)]
         parts = [doc[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
-        if not parts[0]:  # the exact prefix supplies the boundary class
-            parts = [doc[:1], doc[1:]]
+        if len(parts[0]) < 2:  # the exact prefix supplies the boundary key
+            parts = [doc[:2], doc[2:]]
         entry = m.packed.starts[None, :]
         r0 = m.advance_segments([parts[0]], entry)
-        c0 = int(m.packed.byte_to_class[parts[0][-1]])
+        c0 = m.dev.advance_key(-1, parts[0])
         host = _identity_cursor(m, c0)
         lanes = host.lane_states[None]
         last = np.array([c0], np.int32)
@@ -150,8 +149,7 @@ def test_device_merge_matches_host_merge_hypothesis():
                 host = merge(host, segment_result(m.dev, seg,
                                                   int(host.last_class)),
                              tables=m.dev)
-                last = np.array([int(m.packed.byte_to_class[seg[-1]])],
-                                np.int32)
+            last = np.array([m.dev.advance_key(int(last[0]), seg)], np.int32)
             np.testing.assert_array_equal(res.lane_states[0],
                                           host.lane_states)
             lanes = res.lane_states
@@ -180,9 +178,9 @@ def test_compose_cursor_matches_ref_on_random_lanes():
         b = int(rng.integers(1, 9))
         cur = rng.integers(0, q, size=(b, k, s)).astype(np.int32)
         seg = rng.integers(0, q, size=(b, k, s)).astype(np.int32)
-        ec = rng.integers(0, t.pad_cls + 1, size=b).astype(np.int32)
+        ec = rng.integers(0, t.n_keys + 1, size=b).astype(np.int32)
         want = kref.cursor_merge_ref(cur, seg, ec, cidx_pad,
-                                     m.packed.sinks, pad_cls=t.pad_cls)
+                                     m.packed.sinks, pad_cls=t.pad_key)
         got = np.asarray(m.executor._compose_cursor(
             np.asarray(cur), np.asarray(seg), np.asarray(ec)))
         np.testing.assert_array_equal(got, want)
@@ -232,7 +230,10 @@ def test_lane_plan_validation():
     with pytest.raises(ValueError):
         LanePlan(kind="seq", width=8, chunk_len=0, entry="bogus")
     p = LanePlan(kind="spec", width=32, chunk_len=8, entry=ENTRY_STARTS)
-    assert p.key == ("spec", 32, 8, ENTRY_STARTS, True)
+    assert p.key == ("spec", 32, 8, ENTRY_STARTS, True, 1)
+    p2 = LanePlan(kind="spec", width=32, chunk_len=8, entry=ENTRY_STARTS,
+                  spec_r=2)
+    assert p2.key != p.key  # the r choice forks the compiled program
 
 
 # --------------------------------------------------------------------------

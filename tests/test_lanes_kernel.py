@@ -1,0 +1,399 @@
+"""Raw-speed tier: the fused lane-carrying kernel, in-kernel early exit,
+r=2 boundary keys, block padding and the shape autotuner.
+
+Covers the PR's guarantees end to end:
+
+  * ``ops.spec_match_merge_lanes`` (the fused Pallas kernel carrying the
+    full [K, S] lane axis through the chunk scan *and* the Eq. 8 fold) is
+    bit-identical to ``ref.spec_merge_lanes_ref`` on raw arrays, under both
+    r=1 and r=2 boundary keys, with the in-kernel early exit on and off;
+  * ``Matcher.advance_cursors`` on the pallas backend rides that kernel
+    (no jnp-stage fallback) and matches the local backend bit-for-bit —
+    seeded and under hypothesis when installed (the cross-backend / mesh
+    sweep lives in tests/test_device_merge.py);
+  * the early-exit scratch flag actually skips grid steps on all-absorbed
+    documents and never on live ones (``kernel_skipped_steps``);
+  * ``ops._pad_to_block`` pads prime/odd lengths to a block multiple
+    instead of degenerating to symbol-at-a-time grids;
+  * r=2 candidate tables satisfy the Eq. 13 feasibility invariant, shrink
+    the lane width when they should, and ``DeviceTables.advance_key``
+    maintains the 2-byte suffix window across any segmentation;
+  * ``autotune_spec_shapes`` picks by measured cost (``time_fn`` injection)
+    and round-trips its on-disk cache.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Matcher, build_packed_lookahead_tables, compile_regex,
+                        make_search_dfa, pack_dfas, random_dfa)
+from repro.core.engine.plan import DeviceTables
+from repro.core.profiling import (TunedShape, autotune_spec_shapes,
+                                  clear_autotune_cache)
+from repro.kernels import ops, ref
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = list(b"abxy0189")
+
+
+# --------------------------------------------------------------------------
+# fused lanes kernel vs the host reference (raw arrays)
+# --------------------------------------------------------------------------
+
+def _host_scan(table_pad, chunks, init):
+    """[B, C, n] lane states after scanning each chunk's symbols."""
+    st = np.asarray(init, np.int32).copy()
+    for pos in range(chunks.shape[-1]):
+        st = table_pad[st, chunks[:, :, pos][:, :, None]]
+    return st
+
+
+def _boundary_keys(dev, chunks):
+    """[B, C] entry keys per chunk: chunk i keyed on chunk i-1's suffix."""
+    b, c, _ = chunks.shape
+    last1 = chunks[:, :-1, -1]
+    if dev.spec_r == 2:
+        key = chunks[:, :-1, -2] * dev.pad_cls + last1
+        key = np.where(last1 == dev.pad_cls, dev.pad_key, key)
+    else:
+        key = last1
+    la = np.zeros((b, c), np.int32)
+    la[:, 1:] = key
+    return la
+
+
+@pytest.mark.parametrize("r", [1, 2])
+@pytest.mark.parametrize("shape", [(2, 4, 8), (3, 2, 16), (1, 8, 32)])
+def test_lanes_kernel_matches_ref(shape, r):
+    b, c, lc = shape
+    rng = np.random.default_rng(70 + r)
+    packed = pack_dfas([random_dfa(8, 4, rng=rng), random_dfa(5, 3, rng=rng)])
+    dev = DeviceTables.build(packed, lookahead_r=r)
+    t = dev.tables
+    k, s, q = packed.n_patterns, t.i_max, packed.n_states
+    table_pad = np.concatenate(
+        [packed.table, np.arange(q, dtype=np.int32).reshape(-1, 1)], axis=1)
+    cidx_pad = np.concatenate([t.cand_index, np.full((1, q), -1, np.int32)])
+    absorbing = (packed.table == np.arange(q)[:, None]).all(axis=1)
+
+    docs = [rng.integers(0, 256, size=int(n), dtype=np.uint8)
+            for n in rng.integers(c * lc // 2, c * lc + 1, size=b)]
+    chunks = np.full((b, c, lc), dev.pad_cls, np.int32)
+    for i, d in enumerate(docs):
+        cls = packed.classes_of(d)
+        chunks.reshape(b, -1)[i, :len(cls)] = cls
+    la = _boundary_keys(dev, chunks)
+    entry_keys = rng.integers(0, dev.n_keys, size=b)
+    init = np.zeros((b, c, k, s), np.int32)
+    init[:, 0] = t.candidates[entry_keys]
+    init[:, 1:] = np.concatenate([t.candidates, t.candidates[:1]]
+                                 )[np.minimum(la[:, 1:], dev.n_keys)]
+
+    lvecs = _host_scan(table_pad, chunks, init.reshape(b, c, k * s))
+    want = np.asarray(ref.spec_merge_lanes_ref(
+        jnp.asarray(lvecs.reshape(b, c, k, s)), jnp.asarray(la),
+        jnp.asarray(cidx_pad), jnp.asarray(packed.sinks),
+        pad_cls=dev.pad_key))
+
+    args = (jnp.asarray(table_pad), jnp.asarray(chunks),
+            jnp.asarray(init.reshape(b, c, k * s)), jnp.asarray(la),
+            jnp.asarray(cidx_pad), jnp.asarray(packed.sinks),
+            jnp.asarray(absorbing.astype(np.int32)))
+    for early_exit in (False, True):
+        got, skipped, l_blk = ops.spec_match_merge_lanes(
+            *args, pad_cls=dev.pad_cls, pad_key=dev.pad_key,
+            early_exit=early_exit, l_blk=8)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"early_exit={early_exit}")
+        if not early_exit:
+            assert (np.asarray(skipped) == 0).all()
+
+
+# --------------------------------------------------------------------------
+# facade: the pallas cursor tick rides the fused lanes kernel
+# --------------------------------------------------------------------------
+
+def _cursor_traffic(m, rng, n_streams=5, seg_len=120):
+    prefixes = [bytes(rng.choice(ALPHABET, size=8).astype(np.uint8))
+                for _ in range(n_streams)]
+    entry = np.tile(m.packed.starts, (n_streams, 1))
+    r0 = m.advance_segments(prefixes, entry)
+    keys = np.array([m.dev.advance_key(-1, p) for p in prefixes], np.int32)
+    lanes = m.dev.tables.candidates[keys].astype(np.int32)
+    segs = [bytes(rng.choice(ALPHABET, size=seg_len).astype(np.uint8))
+            for _ in range(n_streams)]
+    return segs, lanes, keys, r0
+
+
+def test_advance_cursors_pallas_rides_lanes_kernel():
+    rng = np.random.default_rng(71)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    mp = Matcher(dfas, backend="pallas", num_chunks=4, batch_tile=8)
+    ml = Matcher(dfas, backend="local", num_chunks=4, batch_tile=8)
+    segs, lanes, keys, _ = _cursor_traffic(mp, rng)
+    got = mp.advance_cursors(segs, lanes, keys)
+    want = ml.advance_cursors(segs, lanes, keys)
+    np.testing.assert_array_equal(got.lane_states, want.lane_states)
+    np.testing.assert_array_equal(got.absorbed, want.absorbed)
+    # the acceptance criterion: the candidate-keyed tick lowered to the
+    # fused lanes kernel, not a jnp-stage fallback
+    kinds = set(mp.executor.lowering_kinds.values())
+    assert "spec-kernel-lanes" in kinds, kinds
+    assert not any(k == "spec-jnp" for k in kinds), kinds
+
+
+def test_advance_cursors_pallas_matches_local_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS[:2]]
+    mp = Matcher(dfas, backend="pallas", num_chunks=4, batch_tile=4)
+    ml = Matcher(dfas, backend="local", num_chunks=4, batch_tile=4)
+
+    @hyp.settings(max_examples=15, deadline=None)
+    @hyp.given(prefix=st.binary(min_size=2, max_size=20),
+               seg=st.binary(min_size=0, max_size=150))
+    def check(prefix, seg):
+        key = mp.dev.advance_key(-1, prefix)
+        lanes = mp.dev.tables.candidates[key][None].astype(np.int32)
+        keys = np.array([key], np.int32)
+        got = mp.advance_cursors([seg], lanes, keys)
+        want = ml.advance_cursors([seg], lanes, keys)
+        np.testing.assert_array_equal(got.lane_states, want.lane_states)
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# in-kernel early exit: grid steps skipped iff a document is all-absorbed
+# --------------------------------------------------------------------------
+
+def _skip_probe_matcher():
+    dfa = make_search_dfa(compile_regex(".*(hit)"))
+    m = Matcher(dfa, num_chunks=4, backend="pallas", batch_tile=4)
+    m.executor.spec_l_blk[0] = 64  # several grid steps per 200-byte chunk
+    return m
+
+
+def test_early_exit_skips_grid_steps_on_absorbed_docs():
+    m = _skip_probe_matcher()
+    # every chunk of this doc sees "hit" inside its first 64-symbol block,
+    # so every lane absorbs there and the remaining blocks must be skipped
+    hot = b"hit " * 200
+    live = b"xyz " * 200  # keeps the bucket live so the kernel actually runs
+    before = m.executor.kernel_skipped_steps()
+    res = m.membership_batch([hot, live])
+    skipped = m.executor.kernel_skipped_steps() - before
+    assert skipped > 0, "absorbed doc must skip symbol blocks in-kernel"
+    assert bool(res.accepted[0, 0]) and not bool(res.accepted[1, 0])
+    # bit-identity is not bought with the skips
+    want = Matcher(make_search_dfa(compile_regex(".*(hit)")),
+                   num_chunks=4).membership_batch([hot, live])
+    np.testing.assert_array_equal(res.final_states, want.final_states)
+
+
+def test_early_exit_never_skips_on_live_docs():
+    m = _skip_probe_matcher()
+    docs = [b"xyz " * 200, b"abc " * 200]  # never absorb
+    before = m.executor.kernel_skipped_steps()
+    m.membership_batch(docs)
+    assert m.executor.kernel_skipped_steps() == before
+
+
+# --------------------------------------------------------------------------
+# block padding: prime/odd lengths keep real block sizes
+# --------------------------------------------------------------------------
+
+def test_pad_to_block_units():
+    assert ops._pad_to_block(512, 512) == (512, 512)
+    assert ops._pad_to_block(513, 512) == (512, 1024)
+    assert ops._pad_to_block(127, 512) == (127, 127)   # short axis: one block
+    assert ops._pad_to_block(1021, 256) == (256, 1024) # prime L: padded, not 1
+    assert ops._pad_to_block(0, 8) == (1, 0)
+    blk, padded = ops._pad_to_block(509, 128)
+    assert blk == 128 and padded % blk == 0 and padded >= 509
+
+
+@pytest.mark.parametrize("n", [127, 509, 1021])
+def test_spec_match_prime_lengths_stay_exact(n):
+    """The old divisor search fell to block 1 on prime L; the padded path
+    must stay bit-identical to the reference at full block sizes."""
+    rng = np.random.default_rng(72)
+    packed = pack_dfas([random_dfa(6, 4, rng=rng)])
+    t = build_packed_lookahead_tables(packed)
+    q = packed.n_states
+    table_pad = np.concatenate(
+        [packed.table, np.arange(q, dtype=np.int32).reshape(-1, 1)], axis=1)
+    c, s = 4, t.i_max
+    chunks = rng.integers(0, packed.n_classes, size=(c, n)).astype(np.int32)
+    init = np.broadcast_to(t.candidates[0, 0][None, :], (c, s)).copy()
+    init = init.astype(np.int32)
+    got = np.asarray(ops.spec_match(jnp.asarray(table_pad),
+                                    jnp.asarray(chunks), jnp.asarray(init)))
+    want = np.asarray(ref.spec_match_ref(jnp.asarray(packed.table),
+                                         jnp.asarray(chunks),
+                                         jnp.asarray(init)))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# r=2 boundary keys: Eq. 13 tables and the host-side key window
+# --------------------------------------------------------------------------
+
+def test_r2_candidate_invariant():
+    """The state reached after any suffix (c1, c2) is a candidate of the
+    pair key c1 * n + c2 — or the pattern's sink (Eq. 13 feasibility)."""
+    rng = np.random.default_rng(73)
+    packed = pack_dfas([random_dfa(9, 4, rng=rng), random_dfa(5, 3, rng=rng)])
+    t2 = build_packed_lookahead_tables(packed, r=2)
+    n = packed.n_classes
+    for c1 in range(n):
+        for c2 in range(n):
+            key = c1 * n + c2
+            tgt = packed.table[packed.table[:, c1], c2]
+            for k in range(packed.n_patterns):
+                lo, hi = packed.offsets[k], packed.offsets[k + 1]
+                for q in set(int(x) for x in tgt[lo:hi]):
+                    if q == packed.sinks[k]:
+                        assert t2.cand_index[key, q] == -1
+                    else:
+                        j = t2.cand_index[key, q]
+                        assert j >= 0 and int(t2.candidates[key, k, j]) == q
+
+
+def test_r2_shrinks_lane_width_and_auto_choice():
+    rng = np.random.default_rng(74)
+    packed = pack_dfas([random_dfa(16, 6, rng=rng)])
+    t1 = build_packed_lookahead_tables(packed, r=1)
+    t2 = build_packed_lookahead_tables(packed, r=2)
+    assert t2.i_max <= t1.i_max  # pair keys only ever restrict the image
+    assert t2.n_keys == packed.n_classes ** 2 and t2.r == 2
+    dev = DeviceTables.build(packed, lookahead_r="auto")
+    if t2.i_max < t1.i_max and t1.i_max > 1:
+        assert dev.spec_r == 2 and dev.i_max == t2.i_max
+    else:
+        assert dev.spec_r == 1
+    assert dev.pad_key == dev.n_keys
+    # forcing a depth overrides the auto choice
+    assert DeviceTables.build(packed, lookahead_r=1).spec_r == 1
+
+
+def test_advance_key_maintains_suffix_window():
+    """advance_key over any segmentation == the key of the full suffix."""
+    rng = np.random.default_rng(75)
+    packed = pack_dfas([make_search_dfa(compile_regex(p)) for p in PATTERNS])
+    for r in (1, 2):
+        dev = DeviceTables.build(packed, lookahead_r=r)
+        data = rng.integers(0, 256, size=64, dtype=np.uint8)
+        b2c = packed.byte_to_class
+        full = (int(b2c[data[-1]]) if r == 1 else
+                int(b2c[data[-2]]) * packed.n_classes + int(b2c[data[-1]]))
+        for trial in range(10):
+            cuts = np.sort(rng.integers(0, len(data) + 1, size=3))
+            key = -1
+            for a, b in zip([0, *cuts], [*cuts, len(data)]):
+                key = dev.advance_key(key, data[a:b])
+            assert key == full, (r, trial)
+        # insufficient history stays conservative
+        assert dev.advance_key(-1, data[:1]) == (-1 if r == 2
+                                                 else int(b2c[data[0]]))
+        assert dev.advance_key(-1, b"") == -1
+
+
+# --------------------------------------------------------------------------
+# shape autotuner
+# --------------------------------------------------------------------------
+
+def _toy_packed():
+    return pack_dfas([make_search_dfa(compile_regex(".*ab+c"))])
+
+
+def test_autotune_picks_measured_winner_and_caches():
+    clear_autotune_cache()
+    packed = _toy_packed()
+    seen = []
+
+    def fake(cfg):
+        seen.append(cfg)
+        return {4: 300.0, 8: 100.0, 16: 200.0}[cfg["num_chunks"]]
+
+    t = autotune_spec_shapes(packed, backend="local",
+                             num_chunks_candidates=[4, 8, 16], time_fn=fake)
+    assert isinstance(t, TunedShape)
+    assert t.num_chunks == 8 and t.us_per_call == 100.0
+    assert t.l_blk == 0 and t.source == "measured"  # local: no l_blk search
+    assert {c["num_chunks"] for c in seen} == {4, 8, 16}
+    # second call is a pure in-process cache hit
+    n_calls = len(seen)
+    t2 = autotune_spec_shapes(packed, backend="local",
+                              num_chunks_candidates=[4, 8, 16], time_fn=fake)
+    assert len(seen) == n_calls and t2.source == "cache"
+    assert t2.num_chunks == 8
+    assert dataclasses.asdict(t2)["num_chunks"] == 8
+    clear_autotune_cache()
+
+
+def test_autotune_searches_l_blk_on_pallas_and_mesh_on_sharded():
+    clear_autotune_cache()
+    packed = _toy_packed()
+    t = autotune_spec_shapes(packed, backend="pallas",
+                             num_chunks_candidates=[4],
+                             l_blk_candidates=[128, 256, 512],
+                             time_fn=lambda c: float(c["l_blk"]))
+    assert t.l_blk == 128
+    ts = autotune_spec_shapes(
+        packed, backend="sharded", num_chunks_candidates=[4],
+        mesh_shape="auto", devices=8,
+        # prefer wide chunk axes: (1, 8) must win over near-square (2, 4)
+        time_fn=lambda c: float(c["mesh_shape"][0]))
+    assert ts.mesh_shape == (1, 8)
+    clear_autotune_cache()
+
+
+def test_autotune_disk_cache_roundtrip(tmp_path, monkeypatch):
+    clear_autotune_cache()
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    packed = _toy_packed()
+    calls = []
+
+    def fake(cfg):
+        calls.append(cfg)
+        return 50.0
+
+    t = autotune_spec_shapes(packed, backend="pallas",
+                             num_chunks_candidates=[4], time_fn=fake)
+    assert t.source == "measured" and path.is_file()
+    clear_autotune_cache()  # drop in-process memory: force the disk path
+    n_calls = len(calls)
+    t2 = autotune_spec_shapes(packed, backend="pallas",
+                              num_chunks_candidates=[4], time_fn=fake)
+    assert t2.source == "disk" and len(calls) == n_calls
+    assert (t2.num_chunks, t2.l_blk) == (t.num_chunks, t.l_blk)
+    # refresh re-measures and overwrites
+    t3 = autotune_spec_shapes(packed, backend="pallas",
+                              num_chunks_candidates=[4], time_fn=fake,
+                              refresh=True)
+    assert t3.source == "measured" and len(calls) > n_calls
+    clear_autotune_cache()
+
+
+def test_matcher_autotune_applies_tuned_shape(monkeypatch):
+    clear_autotune_cache()
+    import repro.core.profiling as prof
+
+    def fake_tune(packed, **kw):
+        assert kw["backend"] == "pallas"
+        return prof.TunedShape(num_chunks=4, mesh_shape=None, l_blk=256,
+                               us_per_call=1.0, source="measured")
+
+    monkeypatch.setattr(prof, "autotune_spec_shapes", fake_tune)
+    m = Matcher(_toy_packed(), backend="pallas", num_chunks=8, autotune=True)
+    assert m.num_chunks == 4
+    assert m.executor.spec_l_blk[0] == 256
+    assert m.perf_report()["autotune"]["l_blk"] == 256
+    clear_autotune_cache()

@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Throughput regression gate over ``BENCH_*.json`` artifacts.
+
+Compares a freshly produced benchmark artifact (``benchmarks.run --json``)
+against the committed baselines in ``benchmarks/baselines/``: every
+throughput row (``derived`` column of names ending in ``segments_per_s`` or
+``bytes_per_s`` — higher is better) must reach at least
+``(1 - threshold)`` of the best value any baseline recorded for it.
+Wall-clock rows other than throughput are provenance, not gates — they move
+with host load; the throughput rows are what the raw-speed tier promises.
+
+Usage:
+    python tools/bench_compare.py BENCH_fresh.json [--baselines DIR]
+        [--threshold 0.25] [--update]
+
+Exit codes: 0 = within budget, 1 = regression, 2 = usage/IO error.
+``--update`` additionally copies the fresh artifact into the baselines
+directory (under its own basename) after a passing comparison — how a PR
+commits a new post-seed baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+THROUGHPUT_SUFFIXES = ("segments_per_s", "bytes_per_s")
+
+
+def load_throughput_rows(path: str) -> dict[str, float]:
+    with open(path) as fh:
+        payload = json.load(fh)
+    return {r["name"]: float(r["derived"]) for r in payload.get("rows", [])
+            if r["name"].endswith(THROUGHPUT_SUFFIXES)}
+
+
+def best_baselines(paths: list[str]) -> dict[str, tuple[float, str]]:
+    """Per row name, the best (derived, source file) across all baselines."""
+    best: dict[str, tuple[float, str]] = {}
+    for p in paths:
+        for name, derived in load_throughput_rows(p).items():
+            if name not in best or derived > best[name][0]:
+                best[name] = (derived, os.path.basename(p))
+    return best
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed baseline artifacts")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="tolerated fractional drop vs the best baseline "
+                         "(default 0.25 = fail below 75%% of baseline)")
+    ap.add_argument("--update", action="store_true",
+                    help="after a passing comparison, copy the fresh "
+                         "artifact into the baselines directory")
+    args = ap.parse_args(argv)
+
+    if not os.path.isfile(args.fresh):
+        print(f"bench_compare: no such artifact: {args.fresh}",
+              file=sys.stderr)
+        return 2
+    if not 0.0 <= args.threshold < 1.0:
+        print("bench_compare: --threshold must be in [0, 1)", file=sys.stderr)
+        return 2
+    fresh_real = os.path.realpath(args.fresh)
+    paths = [p for p in sorted(glob.glob(os.path.join(args.baselines,
+                                                      "*.json")))
+             if os.path.realpath(p) != fresh_real]
+    if not paths:
+        print(f"bench_compare: no baselines under {args.baselines}; "
+              "nothing to gate (first run passes)")
+        if args.update:
+            return _update(args)
+        return 0
+
+    try:
+        fresh = load_throughput_rows(args.fresh)
+        best = best_baselines(paths)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench_compare: unreadable artifact: {e}", file=sys.stderr)
+        return 2
+
+    regressions, compared = [], 0
+    for name, (old, src) in sorted(best.items()):
+        if name not in fresh:
+            # a benchmark the fresh run did not execute (different --only
+            # set) is not gated — CI runs a fixed set, so this only shows
+            # up in local partial runs
+            print(f"  skip  {name}  (not in fresh run)")
+            continue
+        new = fresh[name]
+        floor = old * (1.0 - args.threshold)
+        ratio = new / old if old > 0 else float("inf")
+        verdict = "OK  " if new >= floor else "FAIL"
+        print(f"  {verdict}  {name}  {new:,.0f} vs {old:,.0f} "
+              f"({ratio:.2f}x, floor {floor:,.0f}, baseline {src})")
+        compared += 1
+        if new < floor:
+            regressions.append((name, new, old, src))
+
+    if not compared:
+        print("bench_compare: no overlapping throughput rows; nothing gated")
+    if regressions:
+        print(f"bench_compare: {len(regressions)} throughput regression(s) "
+              f"beyond {args.threshold:.0%}:", file=sys.stderr)
+        for name, new, old, src in regressions:
+            print(f"  {name}: {new:,.0f} < {old * (1 - args.threshold):,.0f} "
+                  f"(baseline {old:,.0f} from {src})", file=sys.stderr)
+        return 1
+    print(f"bench_compare: {compared} throughput row(s) within "
+          f"{args.threshold:.0%} of baseline")
+    if args.update:
+        return _update(args)
+    return 0
+
+
+def _update(args) -> int:
+    dst = os.path.join(args.baselines, os.path.basename(args.fresh))
+    if os.path.realpath(dst) != os.path.realpath(args.fresh):
+        os.makedirs(args.baselines, exist_ok=True)
+        shutil.copyfile(args.fresh, dst)
+    print(f"bench_compare: baseline updated: {dst}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
