@@ -488,3 +488,109 @@ def bench_stream_throughput(doc_len: int = 2048, seg_len: int = 256,
             f"host-merge regression: the streaming tick path performed "
             f"{host_merges} per-stream host merges (must be 0 — composition "
             "belongs on device; see streaming.cursor.merge_calls)")
+
+
+# --------------------------------------------------------------------------
+# out-of-order ingestion: match-first throughput vs in-order delivery
+# --------------------------------------------------------------------------
+
+def bench_ooo_throughput(doc_len: int = 2048, seg_len: int = 256,
+                         n_streams: int = 64,
+                         shuffle_fracs: tuple[float, ...] = (0.0, 0.25, 1.0),
+                         smoke: bool = False) -> None:
+    """Throughput of the out-of-order tier across arrival-shuffle fractions.
+
+    N streams each deliver a ``doc_len``-byte document in ``seg_len``
+    segments, round-robin.  Per stream, a ``frac`` fraction of its segments
+    is displaced to the end of its arrival sequence (shuffled) — ``0.0`` is
+    pure in-order delivery (must ride the exact path: zero parking, zero
+    scan folds), ``1.0`` a fully shuffled transport.  Every delivery carries
+    its ``prev_tail`` boundary hint (producers shipping from a contiguous
+    source have those bytes for free), so displaced segments are matched
+    speculatively on arrival and each closing gap folds through one
+    associative-scan dispatch.
+
+    Derived columns per (streams, frac): segments/sec, bytes/sec,
+    ``vs_inorder`` (bytes/sec ratio to the frac=0.0 run — the price of the
+    reorder machinery), batch occupancy (real matched segments per padded
+    device row), ``scan_batch`` (mean buffered maps folded per scan
+    dispatch) and ``buffer_peak`` (max segments parked in any one stream's
+    reorder buffer — the memory-bound witness).
+
+    **Host-merge regression guard**: like the in-order tick path, feed /
+    flush / close must perform *zero* host-side compositions
+    (``streaming.cursor.merge_calls``); the run aborts otherwise.
+    ``smoke=True`` shrinks sizes for CI.
+    """
+    from repro.core import Matcher, compile_regex, make_search_dfa
+    from repro.core.patterns import PCRE_PATTERNS
+    from repro.streaming import OooPolicy, OooStreamMatcher
+    from repro.streaming.cursor import merge_calls
+
+    if smoke:
+        doc_len, seg_len, n_streams = 512, 128, 16
+    rng = np.random.default_rng(29)
+    pats = list(PCRE_PATTERNS.values())[:4]
+    dfas = [make_search_dfa(compile_regex(".*(" + p + ")")) for p in pats]
+    docs = [rng.integers(0, 256, size=doc_len, dtype=np.uint8).tobytes()
+            for _ in range(n_streams)]
+    n_segs = doc_len // seg_len
+    total_bytes = n_streams * doc_len
+    m = Matcher(dfas, num_chunks=1, batch_tile=64)
+    want = m.membership_batch(docs)
+    merges_before = merge_calls()
+
+    bs_inorder = None
+    for frac in shuffle_fracs:
+        # fixed arrival plan per stream: the last round(frac * n_segs)
+        # positions hold displaced segments, shuffled among themselves
+        prng = np.random.default_rng(41)
+        arrivals = []
+        for _ in range(n_streams):
+            k = int(round(frac * n_segs))
+            displaced = (sorted(prng.choice(n_segs, size=k, replace=False)
+                                .tolist()) if k else [])
+            kept = [i for i in range(n_segs) if i not in set(displaced)]
+            prng.shuffle(displaced)
+            arrivals.append(kept + list(displaced))
+        ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=n_streams))
+
+        def run_streams():
+            streams = [ooo.open() for _ in range(n_streams)]
+            for r in range(n_segs):
+                for s, d, order in zip(streams, docs, arrivals):
+                    i = order[r]
+                    s.feed(i, d[i * seg_len:(i + 1) * seg_len],
+                           prev_tail=d[max(0, i * seg_len - 2):i * seg_len])
+                ooo.flush()
+            return [s.close() for s in streams]
+
+        # correctness guard: permuted arrival == one-shot batch decisions
+        got = run_streams()
+        assert all(np.array_equal(got[i].final_states, want.final_states[i])
+                   for i in range(n_streams))
+        if frac == 0.0:
+            assert ooo.stats.scan_folds == 0 and ooo.stats.spec_matched == 0, \
+                "in-order delivery must ride the exact path untouched"
+
+        us = time_us(run_streams, repeats=2, warmup=1)
+        segs = n_streams * n_segs
+        bs = total_bytes / (us / 1e6)
+        if bs_inorder is None:
+            bs_inorder = bs
+        st = ooo.stats
+        tag = f"ooo_throughput/S{n_streams}/shuffle{frac:g}"
+        emit(f"{tag}/segments_per_s", us / segs, segs / (us / 1e6))
+        emit(f"{tag}/bytes_per_s", 0.0, bs)
+        emit(f"{tag}/vs_inorder", 0.0, bs / max(bs_inorder, 1e-9))
+        emit(f"{tag}/occupancy", 0.0, st.occupancy)
+        emit(f"{tag}/scan_batch", 0.0, st.scan_batch)
+        emit(f"{tag}/buffer_peak", 0.0, float(st.peak_buffered_segments))
+
+    host_merges = merge_calls() - merges_before
+    emit(f"ooo_throughput/S{n_streams}/host_merges", 0.0, float(host_merges))
+    if host_merges:
+        raise SystemExit(
+            f"host-merge regression: the out-of-order data path performed "
+            f"{host_merges} host-side merges (must be 0 — composition "
+            "belongs on device; see streaming.cursor.merge_calls)")

@@ -44,6 +44,7 @@ def main() -> None:
         ("batch_throughput", pf.bench_batch_throughput),     # batched pipeline
         ("capacity_balance", pf.bench_capacity_balance),     # sharded runtime
         ("stream_throughput", pf.bench_stream_throughput),   # streaming runtime
+        ("ooo_throughput", pf.bench_ooo_throughput),         # out-of-order tier
     ]
     if args.only:
         names = set(args.only.split(","))

@@ -1,0 +1,127 @@
+"""Log-tail intrusion detection over out-of-order multi-host shippers.
+
+  PYTHONPATH=src python examples/log_tail_ids.py
+
+A fleet of hosts each tails its own log and ships fixed-size segments
+tagged ``(host, seq_no)`` through an unreliable transport: segments arrive
+interleaved across hosts, out of order within a host, and sometimes twice.
+``OooStreamMatcher`` runs the intrusion-detection patterns over every
+host's log as the segments land:
+
+  * each arrival carries its ``prev_tail`` (the <= 2 log bytes preceding
+    the segment — a tailer shipping from a contiguous file has them for
+    free), so the segment is matched *immediately* as a candidate-keyed
+    transition map, predecessors still missing;
+  * ``early_accepts()`` raises the alarm the moment some already-buffered
+    future segment guarantees a pattern hit — often long before the
+    sequence gap closes;
+  * when gaps do close, each contiguous run of buffered maps folds into
+    the exact cursor in ONE associative-scan dispatch, and the closed
+    stream's verdict is bit-identical to reading the log in order.
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import Matcher, compile_regex, make_search_dfa
+from repro.streaming import OooPolicy, OooStreamMatcher
+
+SIGNATURES = {
+    "backdoor-key": r".*SECRET-[0-9]+",
+    "root-login":   r".*uid=0\(root\)",
+    "scan-burst":   r".*(GET /admin ){2}",
+}
+
+CLEAN = (b"GET /index uid=12(app) ok\n", b"POST /api uid=40(web) ok\n",
+         b"GET /static ok\n")
+ATTACK = (b"auth SECRET-4411 accepted\n", b"su: uid=0(root) shell\n",
+          b"GET /admin GET /admin probe\n")
+
+
+def synth_logs(n_hosts: int, n_lines: int, attack_rate: float, seed: int):
+    """Per-host log bytes; some hosts get attack lines spliced in."""
+    rng = np.random.default_rng(seed)
+    logs, truth = [], []
+    for h in range(n_hosts):
+        attacked = rng.random() < attack_rate
+        lines = [CLEAN[int(rng.integers(len(CLEAN)))]
+                 for _ in range(n_lines)]
+        if attacked:
+            lines[int(rng.integers(1, n_lines))] = \
+                ATTACK[int(rng.integers(len(ATTACK)))]
+        logs.append(b"".join(lines))
+        truth.append(attacked)
+    return logs, truth
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--hosts", type=int, default=12)
+    ap.add_argument("--lines", type=int, default=24)
+    ap.add_argument("--seg-len", type=int, default=64)
+    ap.add_argument("--attack-rate", type=float, default=0.4)
+    ap.add_argument("--dup-rate", type=float, default=0.15)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+
+    names = list(SIGNATURES)
+    dfas = [make_search_dfa(compile_regex(p)) for p in SIGNATURES.values()]
+    logs, truth = synth_logs(args.hosts, args.lines, args.attack_rate,
+                             args.seed)
+
+    ooo = OooStreamMatcher(dfas, policy=OooPolicy(match_batch=args.hosts))
+    streams = [ooo.open() for _ in logs]
+
+    # one shuffled delivery schedule across ALL hosts: (host, seq_no) pairs
+    rng = np.random.default_rng(args.seed)
+    sched = [(h, i) for h, log in enumerate(logs)
+             for i in range(0, (len(log) + args.seg_len - 1) // args.seg_len)]
+    rng.shuffle(sched)
+
+    alerts: dict[int, list[str]] = {}
+    for n, (h, i) in enumerate(sched):
+        log, lo = logs[h], i * args.seg_len
+        seg = log[lo:lo + args.seg_len]
+        tail = log[max(0, lo - 2):lo]
+        streams[h].feed(i, seg, prev_tail=tail)
+        if rng.random() < args.dup_rate:          # at-least-once transport
+            streams[h].feed(i, seg, prev_tail=tail)
+        if n % args.hosts == 0:                   # periodic detection sweep
+            ooo.flush()
+            for hh, s in enumerate(streams):
+                hit = s.early_accepts()
+                for k in np.flatnonzero(hit):
+                    alerts.setdefault(hh, []).append(names[k])
+
+    flagged = {}
+    for h, s in enumerate(streams):
+        res = s.close()                           # exact, in-order verdict
+        flagged[h] = [names[k] for k in np.flatnonzero(res.accepted)]
+
+    # every close() is bit-identical to matching the assembled log whole
+    whole = Matcher(dfas, num_chunks=1).membership_batch(logs)
+    assert all((whole.accepted[h] == np.isin(names, flagged[h])).all()
+               for h in range(len(logs)))
+    assert [bool(flagged[h]) for h in range(len(logs))] == truth
+
+    st = ooo.stats
+    early = sum(1 for h in flagged if flagged[h] and alerts.get(h))
+    print(f"{len(sched)} segments from {args.hosts} hosts, shuffled; "
+          f"{st.duplicates} duplicate deliveries dropped, "
+          f"{st.ooo_arrivals} arrivals ahead of their frontier")
+    print(f"{st.spec_matched} segments matched before sequencing "
+          f"({st.match_rounds} fused rounds); gaps closed via "
+          f"{st.scan_folds} associative-scan dispatches "
+          f"(mean {st.scan_batch:.1f} maps/scan)")
+    print(f"hosts flagged: {sorted(h for h in flagged if flagged[h])} "
+          f"(ground truth {sorted(h for h, t in enumerate(truth) if t)}); "
+          f"{early} flagged by early_accepts before their gaps closed")
+    for h in sorted(alerts):
+        if flagged[h]:
+            print(f"  host {h:2d}: early alert {sorted(set(alerts[h]))} -> "
+                  f"closed with {flagged[h]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -70,6 +70,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..lvector import merge_scan_lanes_jnp
 from .plan import (ENTRY_LANES, ENTRY_STARTS, ENTRY_STATES, DeviceTables,
                    LanePlan)
 
@@ -291,6 +292,36 @@ class LaneExecutor:
         out = jnp.where((entry_cls == t.pad_key)[:, None, None],
                         cursor_lanes, out)
         return out.astype(jnp.int32)
+
+    # -- stage: bulk scan-compose (the OOO gap-close path) -------------------
+
+    def compose_lane_maps(self, lane_maps, entry_keys) -> jnp.ndarray:
+        """Fold runs of candidate-keyed lane maps in one log-depth scan.
+
+        ``lane_maps [B, N, K, S]`` + ``entry_keys [B, N]`` -> ``[B, K, S]``
+        compositions (the last scan prefix), via ``lvector
+        .merge_scan_lanes_jnp`` — one ``associative_scan`` dispatch for the
+        whole batch of runs.  Keys equal to ``pad_key`` are right
+        identities, so ragged runs arrive padded to a shared N; the compiled
+        program is cached per N (plain jnp: the sharded backend runs it
+        replicated, bit-identical by construction).
+        """
+        key = ("compose_scan", int(lane_maps.shape[1]))
+        fn = self._lowered.get(key)
+        if fn is None:
+            t = self.t
+
+            def body(lanes, keys):
+                out = merge_scan_lanes_jnp(lanes, keys, t.cidx_pad_j,
+                                           t.sinks_j, pad_key=t.pad_key,
+                                           axis=1)
+                return out[:, -1]
+
+            fn = self._jit_lowering(body)
+            self._lowered[key] = fn
+            self.lowering_kinds[key] = "compose-scan"
+        return fn(jnp.asarray(lane_maps, jnp.int32),
+                  jnp.asarray(entry_keys, jnp.int32))
 
     # -- seq lowering (shared: single-device rows; also the per-shard body
     # of the sharded backend's document-axis split) --------------------------

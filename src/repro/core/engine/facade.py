@@ -277,6 +277,10 @@ class Matcher:
         if self._tuned is not None and self._tuned.l_blk:
             self.executor.spec_l_blk[0] = int(self._tuned.l_blk)  # default key
         self._advance_fn = jax.jit(self._advance_impl)
+        # scan-compose dispatch counter: one per compose_lane_maps device
+        # call — lets the OOO tier assert "one associative_scan per
+        # contiguous run", the same way merge_calls() guards the tick path
+        self.compose_calls = 0
 
     # -- properties ---------------------------------------------------------
 
@@ -591,6 +595,55 @@ class Matcher:
                                  absorbed=self.dev.absorbing[out].all(axis=2),
                                  lengths=lengths, bucket_calls=calls,
                                  padded_rows=rows, early_exits=early)
+
+    def compose_lane_maps(self, lane_maps: np.ndarray,
+                          entry_keys: np.ndarray) -> np.ndarray:
+        """Fold B runs of candidate-keyed lane maps in ONE device scan.
+
+        ``lane_maps [B, N, K, S]`` holds, per row, a run of transition maps
+        (leftmost first — e.g. a stream's cursor broadcast to lane width
+        followed by buffered segment maps); ``entry_keys [B, N]`` the
+        boundary key selecting each map's Eq. 11 candidate entry row.
+        Returns the ``[B, K, S]`` composition of every row via a single
+        log-depth ``lax.associative_scan`` dispatch (``lvector
+        .merge_scan_lanes_jnp``; ``kernels.ref.spec_merge_lanes_scan_ref``
+        is the sequential oracle) — the out-of-order gap-close bulk path:
+        one device call per batch of contiguous runs, not one compose per
+        segment.
+
+        Keys equal to ``DeviceTables.pad_key`` compose as the identity, so
+        ragged runs are padded on the right; element 0's key is never read.
+        N is padded to a power of two here to bound retraces (the compiled
+        scan is cached per padded N).  ``compose_calls`` counts dispatches.
+        """
+        k = self.packed.n_patterns
+        s = self.tables.i_max
+        lanes = np.ascontiguousarray(np.asarray(lane_maps, np.int32))
+        if lanes.ndim != 4 or lanes.shape[2:] != (k, s):
+            raise ValueError(f"lane_maps must be [B, N, {k}, {s}], "
+                             f"got {lanes.shape}")
+        b, n = lanes.shape[:2]
+        keys = np.asarray(entry_keys, np.int32)
+        if keys.shape != (b, n):
+            raise ValueError(f"entry_keys must be [{b}, {n}], "
+                             f"got {keys.shape}")
+        pad_key = self.dev.pad_key
+        if n and ((keys[:, 1:] < 0) | (keys[:, 1:] > pad_key)).any():
+            raise ValueError("entry_keys[:, 1:] must be boundary keys in "
+                             "[0, n_keys] (pad_key = identity)")
+        if b == 0 or n == 0:
+            return np.zeros((b, k, s), np.int32)
+        if n == 1:
+            return lanes[:, 0].copy()
+        np2 = next_pow2(n)
+        if np2 != n:
+            lanes = np.concatenate(
+                [lanes, np.zeros((b, np2 - n, k, s), np.int32)], axis=1)
+            keys = np.concatenate(
+                [keys, np.full((b, np2 - n), pad_key, np.int32)], axis=1)
+        out = np.asarray(self.executor.compose_lane_maps(lanes, keys))
+        self.compose_calls += 1
+        return out.astype(np.int32)
 
     # -- serving hook -------------------------------------------------------
 

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "identity_lvec", "compose", "compose_jnp", "merge_sequential",
-    "merge_tree", "merge_scan_jnp", "merge_compressed",
+    "merge_tree", "merge_scan_jnp", "merge_scan_lanes_jnp",
+    "merge_compressed",
 ]
 
 
@@ -73,6 +74,47 @@ def merge_scan_jnp(lvecs: jnp.ndarray) -> jnp.ndarray:
     with the RG-LRU / mLSTM recurrences (DESIGN.md §3.3).
     """
     return jax.lax.associative_scan(lambda a, b: compose_jnp(a, b), lvecs, axis=0)
+
+
+def merge_scan_lanes_jnp(
+    lane_maps: jnp.ndarray,   # [..., N, K, S] candidate-keyed lane maps
+    entry_keys: jnp.ndarray,  # [..., N] boundary key of each map's entry row
+    cand_index: jnp.ndarray,  # [n_keys + 1, Q] inverse candidate map (pad row -1)
+    sinks: jnp.ndarray,       # [K] per-pattern sink state (-1 = none)
+    *,
+    pad_key: int,
+    axis: int = 0,
+) -> jnp.ndarray:
+    """All-prefix composition of candidate-keyed [K, S] lane maps.
+
+    The compressed-representation analogue of :func:`merge_scan_jnp`: each
+    scan element is a segment's restricted transition map (lane s of pattern
+    k holds delta*(candidates[key][k, s], segment)) together with the
+    boundary key that selects its candidate entry row.  Composition locates
+    the left map's carried states inside the right map's candidate row via
+    ``cand_index`` (Eq. 11); a missing candidate is the pattern's sink by
+    construction.  Keys equal to ``pad_key`` compose as the identity, so
+    runs may be padded on the right to a fixed N.  ``out[..., i, :, :]`` is
+    the composition of maps 0..i; element 0's key is never read (prefixes
+    start there), letting callers seed the scan with an exact cursor
+    broadcast to lane width.
+    """
+    lanes = jnp.asarray(lane_maps, jnp.int32)
+    keys = jnp.asarray(entry_keys, jnp.int32)
+    cidx = jnp.asarray(cand_index, jnp.int32)
+    sk = jnp.asarray(sinks, jnp.int32)[:, None]  # [K, 1]
+
+    def combine(a, b):
+        al, ak = a
+        bl, bk = b
+        lane = cidx[bk[..., None, None], al]
+        hit = jnp.take_along_axis(bl, jnp.maximum(lane, 0), axis=-1)
+        out = jnp.where(lane < 0, jnp.where(sk >= 0, sk, al), hit)
+        out = jnp.where((bk == pad_key)[..., None, None], al, out)
+        return out.astype(jnp.int32), ak
+
+    out, _ = jax.lax.associative_scan(combine, (lanes, keys), axis=axis)
+    return out
 
 
 def merge_compressed(

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 __all__ = ["spec_match_ref", "spec_merge_ref", "spec_merge_lanes_ref",
            "spec_match_merge_ref", "spec_match_merge_lanes_ref",
-           "cursor_merge_ref", "classify_ref", "classify_pad_ref",
+           "cursor_merge_ref", "spec_merge_lanes_scan_ref",
+           "classify_ref", "classify_pad_ref",
            "lvec_compose_ref", "onehot_block_maps_ref", "token_mask_ref"]
 
 
@@ -238,6 +239,31 @@ def cursor_merge_ref(cursor_lanes: np.ndarray, seg_lanes: np.ndarray,
     out = np.where(lane < 0, np.where(sk >= 0, sk, q), hit)
     out = np.where((ec == pad_cls)[:, None, None], q, out)
     return out.astype(np.int32)
+
+
+def spec_merge_lanes_scan_ref(lane_maps: np.ndarray, entry_keys: np.ndarray,
+                              cand_index: np.ndarray, sinks: np.ndarray,
+                              *, pad_cls: int) -> np.ndarray:
+    """Sequential-fold oracle of the associative lane-map scan.
+
+    ``lane_maps [B, N, K, S]`` holds, per batch row, a run of candidate-keyed
+    segment transition maps (leftmost first); ``entry_keys [B, N]`` the
+    boundary key selecting each map's Eq. 11 candidate entry row.  Returns
+    all prefixes ``out[:, i] = m_0 ; ... ; m_i`` by repeated
+    :func:`cursor_merge_ref` — the semantics ``core.lvector
+    .merge_scan_lanes_jnp`` must reproduce in log depth (keys equal to
+    ``pad_cls`` compose as the identity; element 0's key is never read).
+    """
+    lanes = np.asarray(lane_maps, np.int32)
+    keys = np.asarray(entry_keys, np.int32)
+    out = np.empty_like(lanes)
+    if lanes.shape[1] == 0:
+        return out
+    out[:, 0] = lanes[:, 0]
+    for i in range(1, lanes.shape[1]):
+        out[:, i] = cursor_merge_ref(out[:, i - 1], lanes[:, i], keys[:, i],
+                                     cand_index, sinks, pad_cls=pad_cls)
+    return out
 
 
 def lvec_compose_ref(maps: jnp.ndarray) -> jnp.ndarray:

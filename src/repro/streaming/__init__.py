@@ -57,9 +57,13 @@ import numpy as np
 from ..core.engine.facade import Matcher
 from .checkpoint import (load_sessions_tree, save_sessions_tree,
                          sessions_tree, table_signature, unpack_cursor)
-from .cursor import (ENTRY_EXACT, MatchCursor, SegmentResult, merge,
-                     merge_calls, open_cursor, segment_result)
+from .cursor import (ENTRY_EXACT, MatchCursor, SegmentResult, counting_merges,
+                     merge, merge_calls, open_cursor, open_lane_cursor,
+                     reset_merge_calls, segment_result)
 from .faults import FaultPlan, InjectedFault
+from .ooo import (OooIntegrityError, OooPolicy, OooStats, OooStream,
+                  OooStreamMatcher, ReorderBufferFull, SequenceGapError,
+                  segment_fingerprint)
 from .scheduler import (MicroBatchScheduler, RetryPolicy, SchedulerStats,
                         TickPolicy)
 from .session import StreamResult, StreamSession
@@ -67,9 +71,13 @@ from .session import StreamResult, StreamSession
 __all__ = ["StreamMatcher", "StreamSession", "StreamResult", "TickPolicy",
            "RetryPolicy", "SchedulerStats", "MicroBatchScheduler",
            "MatchCursor", "SegmentResult", "ENTRY_EXACT", "open_cursor",
-           "segment_result", "merge", "merge_calls", "FaultPlan",
+           "open_lane_cursor", "segment_result", "merge", "merge_calls",
+           "reset_merge_calls", "counting_merges", "FaultPlan",
            "InjectedFault", "table_signature", "sessions_tree",
-           "save_sessions_tree", "load_sessions_tree", "unpack_cursor"]
+           "save_sessions_tree", "load_sessions_tree", "unpack_cursor",
+           "OooStreamMatcher", "OooStream", "OooStats", "OooPolicy",
+           "ReorderBufferFull", "SequenceGapError", "OooIntegrityError",
+           "segment_fingerprint"]
 
 
 class StreamMatcher:
@@ -104,7 +112,7 @@ class StreamMatcher:
     def __init__(self, source, *, policy: TickPolicy | None = None,
                  clock=None, retry: RetryPolicy | None = None,
                  straggler=None, fault_plan: FaultPlan | None = None,
-                 **matcher_kwargs):
+                 lane_ticks: bool = False, **matcher_kwargs):
         if isinstance(source, Matcher):
             if matcher_kwargs:
                 raise ValueError("matcher kwargs conflict with a pre-built "
@@ -118,7 +126,7 @@ class StreamMatcher:
         # straggler / fault_plan configure the scheduler's fault-tolerance
         # layer (see scheduler.py docstring).
         sched_kwargs = dict(retry=retry, straggler=straggler,
-                            fault_plan=fault_plan)
+                            fault_plan=fault_plan, lane_ticks=lane_ticks)
         if clock is not None:
             sched_kwargs["clock"] = clock
         self.scheduler = MicroBatchScheduler(self.matcher, policy,
@@ -136,6 +144,49 @@ class StreamMatcher:
         session = StreamSession(sid, self, open_cursor(self.matcher.dev))
         self._sessions[sid] = session
         return session
+
+    def open_at(self, entry_class: int) -> StreamSession:
+        """Open a candidate-keyed stream *mid-flight*: its bytes start at an
+        unknown position whose preceding boundary key is ``entry_class``.
+
+        Requires ``lane_ticks=True``.  The session's cursor stays a [K, S]
+        restricted transition map across ticks (``Matcher.advance_cursors``
+        advances it without collapsing), so ``close_map`` can hand back a
+        ``SegmentResult`` composable onto whatever prefix eventually lands —
+        the scheduler half of the out-of-order tier (``streaming.ooo`` owns
+        sequencing).
+        """
+        if not self.scheduler.lane_ticks:
+            raise ValueError("open_at requires StreamMatcher(..., "
+                             "lane_ticks=True)")
+        sid = self._next_sid
+        self._next_sid += 1
+        session = StreamSession(sid, self,
+                                open_lane_cursor(self.matcher.dev,
+                                                 entry_class))
+        self._sessions[sid] = session
+        return session
+
+    def close_map(self, session: StreamSession) -> SegmentResult:
+        """Close a candidate-keyed session; returns its accumulated
+        restricted transition map (everything fed, as one composable
+        ``SegmentResult`` keyed on the session's ``entry_class``)."""
+        if session.closed:
+            raise ValueError("stream session is already closed")
+        if session.owner is not self:
+            raise ValueError("session belongs to a different StreamMatcher")
+        if session.cursor.exact:
+            raise ValueError("session is exact (opened at byte 0); use "
+                             "close() for its final decision")
+        if session.pending_bytes:
+            self.scheduler.tick()
+        session.closed = True
+        self._sessions.pop(session.sid, None)
+        cur = session.cursor
+        return SegmentResult(lane_states=cur.lane_states.copy(),
+                             entry_class=cur.entry_class,
+                             n_bytes=cur.byte_count,
+                             last_class=cur.last_class)
 
     def feed(self, session: StreamSession, data: bytes | np.ndarray, *,
              flush: bool = False) -> None:

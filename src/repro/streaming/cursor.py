@@ -31,6 +31,7 @@ through any segmentation is therefore bit-identical to one-shot matching
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -39,7 +40,8 @@ from ..core.engine.plan import DeviceTables
 from ..kernels.ref import cursor_merge_ref
 
 __all__ = ["ENTRY_EXACT", "MatchCursor", "SegmentResult", "open_cursor",
-           "segment_result", "merge", "merge_calls"]
+           "open_lane_cursor", "segment_result", "merge", "merge_calls",
+           "reset_merge_calls", "counting_merges"]
 
 ENTRY_EXACT = -1  # lane axis is exact (one true lane), not candidate-keyed
 
@@ -53,6 +55,33 @@ _MERGE_CALLS = 0
 def merge_calls() -> int:
     """Host-side ``merge`` invocations so far (regression counter)."""
     return _MERGE_CALLS
+
+
+def reset_merge_calls() -> int:
+    """Zero the counter; returns the value it had.
+
+    Tests must not couple through import-lifetime state: an autouse fixture
+    (tests/conftest.py) resets the counter before every test, so a test that
+    asserts ``merge_calls() == 0`` measures only its own tick path, not
+    whichever test imported the module first.
+    """
+    global _MERGE_CALLS
+    prev = _MERGE_CALLS
+    _MERGE_CALLS = 0
+    return prev
+
+
+@contextlib.contextmanager
+def counting_merges():
+    """Scoped view of the counter: yields a callable returning the number of
+    host merges performed since entering the context.
+
+        with counting_merges() as merged:
+            ... tick path ...
+        assert merged() == 0
+    """
+    start = _MERGE_CALLS
+    yield lambda: _MERGE_CALLS - start
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +156,27 @@ class MatchCursor:
                            byte_count=self.byte_count + int(n_bytes),
                            last_class=int(last_class))
 
+    def advanced_lanes(self, lane_states: np.ndarray, n_bytes: int,
+                       last_class: int,
+                       absorbed: np.ndarray) -> "MatchCursor":
+        """Candidate-keyed successor from a device cursor result — the
+        lane-tick scheduler path (``Matcher.advance_cursors`` rows).
+
+        The cursor stays keyed on its original ``entry_class`` across ticks
+        (its restricted transition map just grew by one segment), so it
+        remains composable onto whatever prefix eventually lands.
+        """
+        if self.exact:
+            raise ValueError("exact cursors continue via advanced(); "
+                             "advanced_lanes extends candidate-keyed maps")
+        if n_bytes == 0:
+            return self
+        return MatchCursor(lane_states=np.asarray(lane_states, np.int32),
+                           entry_class=self.entry_class,
+                           absorbed=np.asarray(absorbed, bool).reshape(-1),
+                           byte_count=self.byte_count + int(n_bytes),
+                           last_class=int(last_class))
+
     def skipped(self, n_bytes: int, last_class: int) -> "MatchCursor":
         """Account bytes the scheduler never matched (fully absorbed)."""
         return dataclasses.replace(self, byte_count=self.byte_count + int(n_bytes),
@@ -139,6 +189,26 @@ def open_cursor(tables: DeviceTables) -> MatchCursor:
     return MatchCursor(lane_states=starts.copy(), entry_class=ENTRY_EXACT,
                        absorbed=tables.absorbing[starts].all(axis=1),
                        byte_count=0, last_class=ENTRY_EXACT)
+
+
+def open_lane_cursor(tables: DeviceTables, entry_class: int) -> MatchCursor:
+    """Identity candidate-keyed cursor: zero bytes read, keyed on
+    ``entry_class``.
+
+    Its lane map is the identity on the Eq. 11 candidate row itself — lane
+    ``(k, j)`` holds ``candidates[entry_class, k, j]`` — so composing it
+    under any prefix ending in ``entry_class`` is a no-op.  This is how a
+    stream opens *mid-flight* (an out-of-order segment run, a lane-tick
+    scheduler session): match first, compose onto the exact prefix later.
+    """
+    cls = int(entry_class)
+    if not 0 <= cls < tables.n_keys:
+        raise ValueError(f"entry_class must be a boundary key in "
+                         f"[0, {tables.n_keys}), got {cls}")
+    lanes = tables.tables.candidates[cls].astype(np.int32).copy()
+    return MatchCursor(lane_states=lanes, entry_class=cls,
+                       absorbed=tables.absorbing[lanes].all(axis=1),
+                       byte_count=0, last_class=cls)
 
 
 def segment_result(tables: DeviceTables, data: bytes | np.ndarray,

@@ -1,0 +1,49 @@
+"""Rabin fingerprints over byte segments (after arXiv:1512.09228).
+
+A segment's fingerprint is its byte string read as a base-256 polynomial
+modulo the Mersenne prime 2^61 - 1:
+
+    fp(b_0 .. b_{n-1}) = (sum_i b_i * 256^(n-1-i)) mod (2^61 - 1)
+
+computed via CPython's bignum (``int.from_bytes`` + one ``%``), so hashing
+is C-speed rather than a per-byte Python loop.  The payoff is the algebra:
+fingerprints *compose* exactly like the transition maps they tag —
+
+    fp(a || b) = (fp(a) * 256^len(b) + fp(b)) mod p
+
+— so the out-of-order tier can (a) key every buffered segment map by
+``(seq_no, fp, n_bytes)`` and drop duplicate deliveries from at-least-once
+transports without re-matching or double-composing, and (b) maintain a
+whole-stream fingerprint incrementally as gaps close, giving a cheap
+equality witness that the bytes sequenced out of order are the bytes an
+in-order reader would have seen (``OooStream.stream_fingerprint``).
+
+Like any polynomial fingerprint, ``fp`` alone does not see leading zero
+bytes (``fp(b"\\x00a") == fp(b"a")``); every comparison here therefore
+pairs the fingerprint with the byte count, which restores uniqueness of
+the pair up to hash collisions (~2^-61 per comparison, non-adversarial).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["FP_MOD", "segment_fingerprint", "compose_fingerprints"]
+
+FP_MOD = (1 << 61) - 1  # Mersenne prime modulus
+
+
+def segment_fingerprint(data: bytes | np.ndarray) -> int:
+    """Rabin fingerprint of one segment (0 for the empty segment)."""
+    if not isinstance(data, (bytes, bytearray, memoryview)):
+        data = np.asarray(data, np.uint8).tobytes()
+    return int.from_bytes(data, "big") % FP_MOD
+
+
+def compose_fingerprints(fp_a: int, fp_b: int, len_b: int) -> int:
+    """Fingerprint of the concatenation a || b from the parts.
+
+    ``len_b`` is b's byte count (the shift amount); composition is
+    associative with identity ``(0, 0)``, mirroring Eq. 9 map composition.
+    """
+    return (fp_a * pow(256, int(len_b), FP_MOD) + fp_b) % FP_MOD

@@ -191,9 +191,17 @@ class MicroBatchScheduler:
     def __init__(self, matcher: Matcher, policy: TickPolicy | None = None,
                  *, clock=time.monotonic, retry: RetryPolicy | None = None,
                  straggler: StragglerPolicy | None = None,
-                 fault_plan: FaultPlan | None = None, sleep=time.sleep):
+                 fault_plan: FaultPlan | None = None, sleep=time.sleep,
+                 lane_ticks: bool = False):
         self.matcher = matcher
         self.policy = policy or TickPolicy()
+        # lane_ticks=True admits candidate-keyed sessions (opened mid-flight
+        # via StreamMatcher.open_at): their cursors stay [K, S] lane maps
+        # across ticks — advanced through Matcher.advance_cursors instead of
+        # collapsing to exact states every tick — so a session's accumulated
+        # map remains composable onto whatever prefix eventually lands (the
+        # out-of-order tier's "match first, sequence later")
+        self.lane_ticks = bool(lane_ticks)
         self.retry = retry or RetryPolicy()
         self.straggler = straggler
         self.fault_plan = fault_plan
@@ -318,6 +326,7 @@ class MicroBatchScheduler:
         sessions = list(self._queue.values())
         self._queue.clear()
         live, segs, entries = [], [], []
+        lanes, lane_segs, lane_entries, lane_keys = [], [], [], []
         for s in sessions:
             data = bytes(s._pending)
             s._pending = bytearray()
@@ -333,38 +342,62 @@ class MicroBatchScheduler:
                 s.cursor = s.cursor.skipped(len(data), last_class)
                 self.stats.absorbed_skips += 1
                 continue
-            live.append((s, len(data), last_class))
-            segs.append(data)
-            entries.append(s.cursor.states)
-        if live:
-            res = self._dispatch_tick(tick_idx, live, segs, entries)
-            self.stats.segments += len(live)
-            self.stats.bytes_matched += int(res.lengths.sum())
-            self.stats.bucket_calls += res.bucket_calls
-            self.stats.rows_dispatched += res.padded_rows
-            self.stats.early_exits += res.early_exits
+            if s.cursor.exact:
+                live.append((s, len(data), last_class))
+                segs.append(data)
+                entries.append(s.cursor.states)
+            else:
+                if not self.lane_ticks:
+                    raise ValueError(
+                        "candidate-keyed session admitted without "
+                        "lane_ticks=True (open mid-flight streams via "
+                        "StreamMatcher(..., lane_ticks=True).open_at)")
+                lanes.append((s, len(data), last_class))
+                lane_segs.append(data)
+                lane_entries.append(s.cursor.lane_states)
+                lane_keys.append(s.cursor.last_class)
+        if live or lanes:
+            res, lres = self._dispatch_tick(tick_idx, live, segs, entries,
+                                            lanes, lane_segs, lane_entries,
+                                            lane_keys)
+            self.stats.segments += len(live) + len(lanes)
+            for r in (res, lres):
+                if r is None:
+                    continue
+                self.stats.bytes_matched += int(r.lengths.sum())
+                self.stats.bucket_calls += r.bucket_calls
+                self.stats.rows_dispatched += r.padded_rows
+                self.stats.early_exits += r.early_exits
         self.stats.ticks += 1
         return len(sessions)
 
     # -- fault-tolerant dispatch ---------------------------------------------
 
-    def _dispatch_tick(self, tick_idx: int, live, segs, entries):
-        """One fused dispatch under retry-with-restore semantics.
+    def _dispatch_tick(self, tick_idx: int, live, segs, entries,
+                       lanes=(), lane_segs=(), lane_entries=(),
+                       lane_keys=()):
+        """One fused dispatch round under retry-with-restore semantics.
 
         The pre-tick cursors are the snapshot — ``MatchCursor`` is frozen,
         so holding the references is a complete, immutable copy.  The fused
-        call *and* the cursor commit run as one ``RestartManager`` step: a
-        raise anywhere (device loss inside ``advance_segments``, or a
-        post-commit fault) restores every affected cursor from its snapshot
-        via the manager's ``restore_fn``, applies the bounded backoff, lets
-        the straggler monitor rebalance the layout, and re-dispatches the
-        identical segments — so a retried segment is composed exactly once.
-        When ``RetryPolicy.max_retries`` is exhausted the segments are
-        requeued into admission (no byte lost) and the failure propagates,
-        cursors restored.
+        calls *and* the cursor commits run as one ``RestartManager`` step
+        (exact sessions through ``advance_segments``, candidate-keyed
+        lane-tick sessions through ``advance_cursors``): a raise anywhere
+        (device loss inside a fused call, or a post-commit fault) restores
+        every affected cursor from its snapshot via the manager's
+        ``restore_fn``, applies the bounded backoff, lets the straggler
+        monitor rebalance the layout, and re-dispatches the identical
+        segments — so a retried segment is composed exactly once.  When
+        ``RetryPolicy.max_retries`` is exhausted the segments are requeued
+        into admission (no byte lost) and the failure propagates, cursors
+        restored.
         """
-        snapshots = [s.cursor for (s, _, _) in live]
-        entry = np.stack(entries).astype(np.int32)
+        lanes = list(lanes)
+        all_live = list(live) + lanes
+        snapshots = [s.cursor for (s, _, _) in all_live]
+        entry = np.stack(entries).astype(np.int32) if live else None
+        lentry = (np.stack(lane_entries).astype(np.int32) if lanes else None)
+        lkeys = np.asarray(lane_keys, np.int32) if lanes else None
         state = {"attempt": 0}
         box: dict[str, object] = {}
 
@@ -374,21 +407,30 @@ class MicroBatchScheduler:
             if self.fault_plan is not None:
                 self.fault_plan.maybe_fail(tick_idx, attempt, "pre")
             t0 = self._clock()
-            res = self.matcher.advance_segments(segs, entry)
+            res = lres = None
+            if live:
+                res = self.matcher.advance_segments(segs, entry)
+            if lanes:
+                lres = self.matcher.advance_cursors(lane_segs, lentry, lkeys)
             wall = self._clock() - t0
-            for i, (s, n, last_class) in enumerate(live):
-                s.cursor = s.cursor.advanced(res.final_states[i], n,
-                                             last_class, self.matcher.dev,
-                                             absorbed=res.absorbed[i])
+            if live:
+                for i, (s, n, last_class) in enumerate(live):
+                    s.cursor = s.cursor.advanced(res.final_states[i], n,
+                                                 last_class, self.matcher.dev,
+                                                 absorbed=res.absorbed[i])
+            for i, (s, n, last_class) in enumerate(lanes):
+                s.cursor = s.cursor.advanced_lanes(lres.lane_states[i], n,
+                                                   last_class,
+                                                   lres.absorbed[i])
             if self.fault_plan is not None:
                 # post-commit fault: cursors are already updated — recovery
                 # MUST roll them back or the retry double-composes
                 self.fault_plan.maybe_fail(tick_idx, attempt, "post")
-            box["res"], box["wall"] = res, wall
+            box["res"], box["lres"], box["wall"] = res, lres, wall
             return st
 
         def restore_fn():
-            for (s, _, _), cur in zip(live, snapshots):
+            for (s, _, _), cur in zip(all_live, snapshots):
                 s.cursor = cur
             retry_idx = state["attempt"] - 1  # per-dispatch backoff index
             self.stats.retries += 1
@@ -408,16 +450,16 @@ class MicroBatchScheduler:
             # retries exhausted: cursors back to their snapshots, segments
             # back into admission ahead of anything fed later — the caller
             # sees the failure, the queue sees no loss
-            for (s, _, _), cur in zip(live, snapshots):
+            for (s, _, _), cur in zip(all_live, snapshots):
                 s.cursor = cur
-            self._requeue(live, segs)
+            self._requeue(all_live, list(segs) + list(lane_segs))
             self.stats.failed_ticks += 1
             raise
         finally:
             self.stats.dispatch_failures += len(mgr.failures)
             self.failures.extend((tick_idx, msg) for _, msg in mgr.failures)
         self._feed_straggler(tick_idx, float(box["wall"]))
-        return box["res"]
+        return box["res"], box["lres"]
 
     def _requeue(self, live, segs) -> None:
         """Return a failed tick's segments to the head of admission."""

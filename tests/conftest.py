@@ -18,3 +18,19 @@ _FLAG = "xla_force_host_platform_device_count"
 _flags = os.environ.get("XLA_FLAGS", "")
 if _FLAG not in _flags:
     os.environ["XLA_FLAGS"] = f"--{_FLAG}=8 {_flags}".strip()
+
+import pytest  # noqa: E402  (env flag above must precede any jax import)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_merge_counter():
+    """Reset streaming.cursor's module-global host-merge counter per test.
+
+    The counter exists to guard the scheduler tick path (zero host merges);
+    without a reset, tests asserting on ``merge_calls()`` would couple
+    through import-lifetime state and depend on execution order.  The import
+    happens lazily inside the fixture so collecting tests never forces jax.
+    """
+    from repro.streaming.cursor import reset_merge_calls
+    reset_merge_calls()
+    yield

@@ -1,0 +1,487 @@
+"""Out-of-order ingestion tier: match-first / sequence-later invariants.
+
+The tier's whole contract is ONE sentence: for any arrival permutation,
+any duplicate deliveries, and any segmentation, a closed stream's decision
+is bit-identical to feeding the same bytes in order — on every backend and
+mesh shape, with zero host-side compositions on the data path and the gap
+close folding each contiguous buffered run through a single
+``lax.associative_scan`` dispatch.  These tests pin each clause:
+
+  * the scan-compose primitive against its sequential numpy reference
+    (``kernels.ref.spec_merge_lanes_scan_ref``) and against whole-document
+    matching (seeded sweep + hypothesis property when installed);
+  * permutation/duplicate bit-identity across local / pallas / sharded
+    backends and 1x1 / 2x4 / 8x1 meshes, ``merge_calls()`` flat;
+  * single-dispatch gap close (``OooStats.scan_folds``), dedup, integrity
+    conflicts, backpressure, bounded buffers, zero-byte segments;
+  * failover: snapshot mid-reorder (parked payloads AND matched maps)
+    restores bit-identically, including across mesh shapes;
+  * the scheduler twin: ``StreamMatcher(lane_ticks=True)`` +
+    ``open_at``/``close_map`` composes candidate-keyed sessions across
+    ticks against the pure host reference.
+"""
+
+import os
+import random
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import Matcher, compile_regex, make_search_dfa
+from repro.core.lvector import merge_scan_lanes_jnp
+from repro.kernels import ref as kref
+from repro.launch.mesh import make_matcher_mesh
+from repro.streaming import (OooPolicy, OooStreamMatcher, SequenceGapError,
+                             StreamMatcher, merge, merge_calls,
+                             open_lane_cursor, segment_result)
+from repro.streaming.ooo import (FP_MOD, OooIntegrityError, ReorderBufferFull,
+                                 compose_fingerprints, segment_fingerprint)
+from repro.streaming.ooo.checkpoint import OOO_TREE_KEYS, ooo_tree
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = list(b"abxy0189")
+
+BACKENDS = [("local", None), ("pallas", None),
+            ("sharded", (1, 1)), ("sharded", (2, 4)), ("sharded", (8, 1))]
+
+
+def _matcher(backend, shape, **kw):
+    if backend == "sharded":
+        n = shape[0] * shape[1]
+        if len(jax.devices()) < n:
+            pytest.skip(f"needs {n} host devices (conftest forces 8)")
+        kw["mesh"] = make_matcher_mesh(shape=shape)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    return Matcher(dfas, backend=backend, batch_tile=8, **kw)
+
+
+def _doc(rng, n):
+    return bytes(rng.choice(ALPHABET) for _ in range(n))
+
+
+def _segments(rng, doc, *, max_seg=7, with_empty=True):
+    segs, i = [], 0
+    while i < len(doc):
+        n = rng.randint(1, max_seg)
+        segs.append(doc[i:i + n])
+        i += n
+    if with_empty and rng.random() < 0.5:
+        # empties may land anywhere; offsets stay consistent (cumsum adds 0)
+        segs.insert(rng.randint(0, len(segs)), b"")
+    assert b"".join(segs) == doc
+    return segs
+
+
+def _offsets(segs):
+    return np.concatenate([[0], np.cumsum([len(s) for s in segs])]).astype(int)
+
+
+def _oracle(m, doc):
+    starts = m.packed.starts.astype(np.int32)[None]
+    return m.advance_segments([doc], starts).final_states[0]
+
+
+def _feed_permuted(ooo, segs, doc, order, rng, *, hints, dup_rate=0.0):
+    s = ooo.open()
+    offs = _offsets(segs)
+    for i in order:
+        tail = doc[max(0, offs[i] - 2):offs[i]] if hints else None
+        s.feed(i, segs[i], prev_tail=tail)
+        if dup_rate and rng.random() < dup_rate:
+            s.feed(i, segs[i], prev_tail=tail)
+    return s
+
+
+# --------------------------------------------------------------------------
+# the scan-compose primitive
+# --------------------------------------------------------------------------
+
+def test_scan_compose_matches_sequential_ref():
+    m = _matcher("local", None)
+    dev, t = m.dev, m.dev.tables
+    rng = random.Random(7)
+    for _ in range(10):
+        doc = _doc(rng, rng.randint(8, 40))
+        offs = list(range(4, len(doc), 4))  # >= 4 bytes before every cut:
+        segs = [doc[a:b]                    # boundary keys valid for r <= 2
+                for a, b in zip([0] + offs, offs + [len(doc)])]
+        maps, keys = [], []
+        for i in range(1, len(segs)):
+            cls = dev.advance_key(-1, doc[offs[i - 1] - 2:offs[i - 1]])
+            assert cls >= 0
+            r = segment_result(dev, segs[i], cls)
+            maps.append(np.broadcast_to(
+                r.lane_states, (m.packed.n_patterns, t.i_max)))
+            keys.append(cls)
+        if not maps:
+            continue
+        lanes = np.stack(maps)[None].astype(np.int32)
+        ks = np.array(keys, np.int32)[None]
+        ref = kref.spec_merge_lanes_scan_ref(
+            lanes, ks, np.asarray(t.cand_index), np.asarray(m.packed.sinks),
+            pad_cls=dev.pad_key)
+        out = np.asarray(merge_scan_lanes_jnp(
+            lanes, ks, dev.cidx_pad_j, dev.sinks_j,
+            pad_key=dev.pad_key, axis=1))
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_compose_lane_maps_one_dispatch_equals_whole_doc():
+    m = _matcher("local", None)
+    dev = m.dev
+    rng = random.Random(3)
+    for _ in range(5):
+        doc = _doc(rng, rng.randint(12, 50))
+        segs = [doc[i:i + 4] for i in range(0, len(doc), 4)]
+        n, k, s = len(segs), m.packed.n_patterns, dev.i_max
+        # row = [exact seed advanced through seg 0] + maps of segs 1..n-1
+        lanes = np.zeros((1, n, k, s), np.int32)
+        keys = np.full((1, n), dev.pad_key, np.int32)
+        seed = m.advance_segments(
+            [segs[0]], m.packed.starts.astype(np.int32)[None])
+        lanes[0, 0] = seed.final_states[0][:, None]
+        for i in range(1, n):
+            cls = dev.advance_key(-1, doc[4 * i - 2:4 * i])
+            r = segment_result(dev, segs[i], cls)
+            lanes[0, i] = np.broadcast_to(r.lane_states, (k, s))
+            keys[0, i] = cls
+        before = m.compose_calls
+        out = m.compose_lane_maps(lanes, keys)
+        assert m.compose_calls == before + 1
+        np.testing.assert_array_equal(out[0, :, 0], _oracle(m, doc))
+
+
+# --------------------------------------------------------------------------
+# permutation bit-identity, all backends / meshes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,shape", BACKENDS,
+                         ids=[f"{b}-{s}" for b, s in BACKENDS])
+def test_permutation_bit_identity(backend, shape):
+    m = _matcher(backend, shape)
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=4))
+    rng = random.Random(11)
+    base = merge_calls()
+    for trial in range(6):
+        doc = _doc(rng, rng.randint(0, 48))
+        segs = _segments(rng, doc)
+        order = list(range(len(segs)))
+        rng.shuffle(order)
+        s = _feed_permuted(ooo, segs, doc, order, rng,
+                           hints=(trial % 2 == 0), dup_rate=0.3)
+        res = s.close()
+        np.testing.assert_array_equal(res.final_states, _oracle(m, doc))
+        np.testing.assert_array_equal(
+            res.accepted, m.packed.accepting[_oracle(m, doc)])
+        assert res.byte_count == len(doc)
+    assert merge_calls() == base, "host-side merge on the ooo data path"
+    assert ooo.stats.scan_folds <= ooo.stats.gap_closes
+
+
+def test_property_permutations_and_duplicates():
+    """Hypothesis property when installed; the seeded sweep always runs."""
+    m = _matcher("local", None)
+
+    def run_case(doc, cuts, order_seed, dup_every):
+        segs = [doc[a:b] for a, b in zip([0] + cuts, cuts + [len(doc)])]
+        order = list(range(len(segs)))
+        random.Random(order_seed).shuffle(order)
+        ooo = OooStreamMatcher(m)
+        rng = random.Random(order_seed)
+        s = ooo.open()
+        offs = _offsets(segs)
+        for j, i in enumerate(order):
+            tail = doc[max(0, offs[i] - 2):offs[i]] if i % 2 else None
+            s.feed(i, segs[i], prev_tail=tail)
+            if dup_every and j % dup_every == 0:
+                s.feed(i, segs[i])
+        ooo.flush()
+        fp = ooo._streams[s.sid].stream_fp  # pre-close: composed so far
+        res = s.close()
+        np.testing.assert_array_equal(res.final_states, _oracle(m, doc))
+        assert compose_fingerprints(
+            fp, segment_fingerprint(b""), 0) == fp  # identity sanity
+        return res
+
+    rng = random.Random(23)
+    for _ in range(8):
+        doc = _doc(rng, rng.randint(0, 40))
+        cuts = sorted(rng.sample(range(len(doc) + 1),
+                                 min(len(doc), rng.randint(0, 6))))
+        run_case(doc, cuts, rng.randint(0, 999), rng.choice([0, 2, 3]))
+
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(doc=st.binary(max_size=32).map(
+               lambda b: bytes(ALPHABET[x % len(ALPHABET)] for x in b)),
+           data=st.data())
+    def prop(doc, data):
+        cuts = sorted(data.draw(st.lists(
+            st.integers(0, len(doc)), max_size=5)))
+        run_case(doc, cuts, data.draw(st.integers(0, 10_000)),
+                 data.draw(st.sampled_from([0, 2])))
+
+    prop()
+
+
+def test_stream_fingerprint_matches_whole_doc():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m)
+    rng = random.Random(5)
+    doc = _doc(rng, 33)
+    segs = _segments(rng, doc)
+    s = _feed_permuted(ooo, segs, doc, list(reversed(range(len(segs)))),
+                       rng, hints=False)
+    ooo.flush()
+    assert ooo._streams[s.sid].stream_fp == segment_fingerprint(doc)
+    s.close()
+    assert segment_fingerprint(b"\x00" + doc) == segment_fingerprint(doc), \
+        "leading-zero blindness is WHY comparisons pair fp with n_bytes"
+    assert compose_fingerprints(
+        segment_fingerprint(doc[:7]), segment_fingerprint(doc[7:]),
+        len(doc) - 7) == segment_fingerprint(doc)
+    assert 0 <= segment_fingerprint(doc) < FP_MOD
+
+
+# --------------------------------------------------------------------------
+# dispatch discipline: one scan per gap close, batched spec matching
+# --------------------------------------------------------------------------
+
+def test_gap_close_is_one_scan_dispatch():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=1))
+    rng = random.Random(2)
+    doc = b"ab0189ba" * 4
+    segs = [doc[i:i + 4] for i in range(0, len(doc), 4)]
+    offs = _offsets(segs)
+    s = ooo.open()
+    for i in range(1, len(segs)):
+        s.feed(i, segs[i], prev_tail=doc[offs[i] - 2:offs[i]], flush=True)
+    assert ooo.stats.spec_matched == len(segs) - 1
+    assert s.buffered_bytes == 0, "matched payloads must be released"
+    folds = ooo.stats.scan_folds
+    s.feed(0, segs[0], flush=True)
+    assert ooo.stats.scan_folds == folds + 1, \
+        "closing the gap must fold the whole run in ONE scan dispatch"
+    assert ooo.stats.scan_fold_segments >= len(segs) - 1
+    assert ooo.stats.scan_batch > 1
+    res = s.close()
+    np.testing.assert_array_equal(res.final_states, _oracle(m, doc))
+
+
+def test_in_order_streams_never_park():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=1))
+    s = ooo.open()
+    for i, seg in enumerate([b"ab01", b"89ba", b"xy"]):
+        s.feed(i, seg, flush=True)
+        assert s.buffered_segments == 0
+    assert ooo.stats.spec_matched == 0, "in-order rides the exact path"
+    assert ooo.stats.scan_folds == 0
+    assert ooo.stats.exact_segments == 3
+    s.close()
+
+
+# --------------------------------------------------------------------------
+# duplicates, integrity, backpressure, gaps
+# --------------------------------------------------------------------------
+
+def test_duplicate_deliveries_dedup_and_conflict():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=1))
+    s = ooo.open()
+    s.feed(0, b"ab01", flush=True)          # folded
+    s.feed(0, b"ab01")                      # late duplicate of folded seq
+    s.feed(2, b"xy")                        # parked
+    s.feed(2, b"xy")                        # duplicate of parked seq
+    assert ooo.stats.duplicates == 2
+    assert s.buffered_segments == 1
+    with pytest.raises(OooIntegrityError):
+        s.feed(0, b"abXX")                  # folded seq, different content
+    with pytest.raises(OooIntegrityError):
+        s.feed(2, b"xY")                    # parked seq, different content
+    with pytest.raises(OooIntegrityError):
+        # hint contradicts the actual predecessor bytes ("01" keys class
+        # pairs differently than the claimed "xy")
+        s.feed(1, b"89", prev_tail=b"xy")
+        ooo.flush()
+        s.feed(1, b"89")  # unreachable when the hint check fires at resolve
+    ooo2 = OooStreamMatcher(m)
+    s2 = ooo2.open()
+    with pytest.raises(ValueError):
+        s2.feed(0, b"ab", prev_tail=b"x")   # nothing precedes segment 0
+    with pytest.raises(ValueError):
+        s2.feed(-1, b"ab")
+
+
+def test_backpressure_bounded_buffer():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(
+        m, policy=OooPolicy(max_buffered_segments=4, match_batch=1000))
+    s = ooo.open()
+    for i in range(1, 5):
+        s.feed(i, b"ab")
+    with pytest.raises(ReorderBufferFull) as exc:
+        s.feed(5, b"ba")
+    assert exc.value.seq_no == 5 and exc.value.stream_id == s.sid
+    assert s.buffered_segments == 4, "refused admission must not mutate"
+    s.feed(0, b"xy")  # frontier bypasses caps and drains at the next flush
+    ooo.flush()
+    assert s.buffered_segments == 0
+    s.feed(5, b"ba")  # redelivery after backpressure now admits
+    s.close()
+    bytes_pol = OooPolicy(max_buffered_bytes=8, match_batch=1000,
+                          dedup_window=0)
+    ooo2 = OooStreamMatcher(m, policy=bytes_pol)
+    s2 = ooo2.open()
+    s2.feed(3, b"abababab")  # 8 raw bytes parked, no hint -> stays raw
+    with pytest.raises(ReorderBufferFull):
+        s2.feed(4, b"x")
+    with pytest.raises(ValueError):
+        OooPolicy(max_buffered_segments=0)
+    with pytest.raises(ValueError):
+        OooPolicy(dedup_window=-1)
+
+
+def test_close_with_gap_raises():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m)
+    s = ooo.open()
+    s.feed(0, b"ab")
+    s.feed(2, b"ba")
+    with pytest.raises(SequenceGapError, match="seq 1 never arrived"):
+        s.close()
+    s.feed(1, b"01")
+    res = s.close()
+    np.testing.assert_array_equal(res.final_states, _oracle(m, b"ab01ba"))
+    with pytest.raises(ValueError):
+        s.feed(3, b"x")  # closed stream
+
+
+def test_zero_byte_segments_and_absorbed_skip():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=1))
+    s = ooo.open()
+    s.feed(0, b"", flush=True)
+    s.feed(2, b"")
+    s.feed(1, b"abba", flush=True)
+    res = s.close()
+    np.testing.assert_array_equal(res.final_states, _oracle(m, b"abba"))
+    # fully absorbed stream: payloads are never parked nor matched
+    doc = b"abba" + b"012" + b"xxy"  # all three patterns absorb after this
+    s2 = ooo.open()
+    s2.feed(0, doc, flush=True)
+    skips = ooo.stats.absorbed_skips
+    s2.feed(2, b"9999ab")
+    s2.feed(1, b"xyxy01", flush=True)
+    assert ooo.stats.absorbed_skips >= skips + 2
+    res2 = s2.close()
+    assert res2.accepted.all()
+    assert res2.byte_count == len(doc) + 12
+    np.testing.assert_array_equal(
+        res2.final_states, _oracle(m, doc + b"xyxy019999ab"))
+
+
+def test_early_accepts_before_sequencing():
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=1))
+    s = ooo.open()
+    # segment 2 arrives first, carrying a full ".*[0-9]{3}" hit with its
+    # boundary hint -> decided before segments 0 and 1 ever land
+    s.feed(2, b"z0189zz", prev_tail=b"qq", flush=True)
+    dec = s.early_accepts()
+    assert dec[PATTERNS.index(".*[0-9]{3}")]
+    assert not dec.all()
+    s.feed(0, b"zz", flush=True)
+    s.feed(1, b"qq", flush=True)
+    res = s.close()
+    assert res.accepted[PATTERNS.index(".*[0-9]{3}")]
+
+
+# --------------------------------------------------------------------------
+# failover: snapshot/restore mid-reorder, cross-mesh
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("src,dst", [
+    (("local", None), ("local", None)),
+    (("local", None), ("sharded", (2, 4))),
+    (("sharded", (8, 1)), ("local", None)),
+])
+def test_snapshot_restore_mid_reorder(tmp_path, src, dst):
+    m1 = _matcher(*src)
+    m2 = m1 if src == dst else _matcher(*dst)
+    ooo = OooStreamMatcher(m1, policy=OooPolicy(match_batch=1000))
+    rng = random.Random(17)
+    doc = _doc(rng, 44)
+    segs = _segments(rng, doc, with_empty=False)
+    offs = _offsets(segs)
+    s = ooo.open()
+    for i in range(1, len(segs), 2):  # gaps + a mix of matched/raw parks
+        hint = doc[max(0, offs[i] - 2):offs[i]] if i % 4 == 1 else None
+        s.feed(i, segs[i], prev_tail=hint)
+    ooo.flush()
+    assert s.buffered_segments > 0
+    tree = ooo_tree(ooo)
+    assert set(tree) == set(OOO_TREE_KEYS)
+    ooo.snapshot(str(tmp_path))
+    ooo2 = OooStreamMatcher(m2, policy=ooo.policy)
+    (s2,) = ooo2.restore(str(tmp_path))
+    assert (s2.sid, s2.next_seq, s2.buffered_segments) == \
+        (s.sid, s.next_seq, s.buffered_segments)
+    for owner, h in ((ooo, s), (ooo2, s2)):
+        for i in range(0, len(segs), 2):
+            h.feed(i, segs[i])
+    r1, r2 = s.close(), s2.close()
+    np.testing.assert_array_equal(r1.final_states, r2.final_states)
+    np.testing.assert_array_equal(r1.final_states, _oracle(m1, doc))
+    assert r1.byte_count == r2.byte_count == len(doc)
+
+
+def test_restore_refuses_foreign_tables(tmp_path):
+    m = _matcher("local", None)
+    ooo = OooStreamMatcher(m)
+    ooo.open().feed(1, b"ab")
+    ooo.snapshot(str(tmp_path))
+    other = Matcher([make_search_dfa(compile_regex(".*zz"))],
+                    backend="local", batch_tile=8)
+    with pytest.raises(ValueError, match="different packed pattern set"):
+        OooStreamMatcher(other).restore(str(tmp_path))
+
+
+# --------------------------------------------------------------------------
+# the scheduler twin: candidate-keyed sessions across ticks
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,shape",
+                         [("local", None), ("sharded", (2, 4))],
+                         ids=["local", "sharded-2x4"])
+def test_lane_ticks_scheduler_matches_host_reference(backend, shape):
+    m = _matcher(backend, shape)
+    sm = StreamMatcher(m, lane_ticks=True)
+    rng = random.Random(9)
+    dev = m.dev
+    classes = list(range(min(4, dev.n_keys)))
+    plans = {cls: [_doc(rng, rng.randint(0, 9)) for _ in range(3)]
+             for cls in classes}
+    base = merge_calls()
+    got = {}
+    for cls in classes:
+        sess = sm.open_at(cls)
+        for seg in plans[cls]:
+            sess.feed(seg)
+        got[cls] = sm.close_map(sess)
+    assert merge_calls() == base, "lane ticks must not compose on host"
+    for cls in classes:
+        want = open_lane_cursor(dev, cls)
+        for seg in plans[cls]:
+            want = merge(want, segment_result(dev, seg, want.last_class),
+                         tables=dev)
+        np.testing.assert_array_equal(got[cls].lane_states, want.lane_states)
+        assert got[cls].entry_class == cls
+        assert got[cls].n_bytes == want.byte_count
+    with pytest.raises(ValueError, match="lane_ticks"):
+        StreamMatcher(m).open_at(0)

@@ -19,6 +19,11 @@ concatenated bytes):
     *different* mesh shape restores and finishes: 2x4 -> 1x1 and 2x4 -> 8x1,
     with a crashed-writer ``step_*.tmp`` directory left in the checkpoint
     dir to prove restore ignores it.
+  * ``ooo_reorder``       — the out-of-order tier under a hostile transport:
+    arbitrary arrival permutations, at-least-once duplicate deliveries, and
+    one late straggler segment per stream withheld until the very end; the
+    ``OooStreamMatcher`` must close every stream bit-identical to the
+    in-order oracle with zero host-side merges.
 
 Run (exits non-zero if any scenario fails its bit-identity check):
 
@@ -234,6 +239,48 @@ def scenario_snapshot_restore(dfas, docs, oracle, seg_len: int,
     return _verify(name, sessions, docs, oracle, sm2)
 
 
+def scenario_ooo_reorder(dfas, docs, oracle, seg_len: int) -> dict:
+    """Reordered, duplicated and late-delivered segments through the
+    out-of-order tier: arbitrary arrival permutation + at-least-once
+    duplicates + one straggler segment per stream held back until the very
+    end must still close bit-identical to the in-order oracle, with zero
+    host-side merges."""
+    from repro.streaming import OooPolicy, OooStreamMatcher, merge_calls
+
+    rng = np.random.default_rng(1234)
+    ooo = OooStreamMatcher(dfas, policy=OooPolicy(match_batch=8))
+    segs = [_segments(d, seg_len) for d in docs]
+    streams = [ooo.open() for _ in docs]
+    base = merge_calls()
+    late: list[tuple] = []
+    for s, d, ss in zip(streams, docs, segs):
+        order = rng.permutation(len(ss))
+        hold = int(order[0])  # late delivery: withheld until every other
+        for i in order[1:]:   # stream's segments have long since arrived
+            i = int(i)
+            tail = d[max(0, i * seg_len - 2):i * seg_len]
+            s.feed(i, ss[i], prev_tail=tail)
+            if rng.random() < 0.25:
+                s.feed(i, ss[i], prev_tail=tail)  # duplicate delivery
+        late.append((s, hold, ss[hold],
+                     d[max(0, hold * seg_len - 2):hold * seg_len]))
+    ooo.flush()
+    for s, hold, seg, tail in late:
+        s.feed(hold, seg, prev_tail=tail)
+    finals = np.stack([s.close().final_states for s in streams])
+    st = ooo.stats
+    return {"scenario": "ooo_reorder",
+            "ok": bool((finals == oracle).all()) and merge_calls() == base
+                  and st.duplicates > 0 and st.ooo_arrivals > 0,
+            "bit_identical": bool((finals == oracle).all()),
+            "host_merges": merge_calls() - base,
+            "arrivals": st.arrivals, "duplicates": st.duplicates,
+            "ooo_arrivals": st.ooo_arrivals, "spec_matched": st.spec_matched,
+            "gap_closes": st.gap_closes, "scan_folds": st.scan_folds,
+            "scan_batch": round(st.scan_batch, 2),
+            "peak_buffered_segments": st.peak_buffered_segments}
+
+
 def run_faultbench(*, n_streams: int = 8, n_bytes: int = 192,
                    seg_len: int = 48, seed: int = 0) -> list[dict]:
     """Run every scenario; returns one result dict per scenario."""
@@ -249,6 +296,7 @@ def run_faultbench(*, n_streams: int = 8, n_bytes: int = 192,
                                   src_shape=(2, 4), dst_shape=(1, 1)),
         scenario_snapshot_restore(dfas, docs, oracle, seg_len,
                                   src_shape=(2, 4), dst_shape=(8, 1)),
+        scenario_ooo_reorder(dfas, docs, oracle, seg_len),
     ]
 
 
