@@ -594,3 +594,68 @@ def bench_ooo_throughput(doc_len: int = 2048, seg_len: int = 256,
             f"host-merge regression: the out-of-order data path performed "
             f"{host_merges} host-side merges (must be 0 — composition "
             "belongs on device; see streaming.cursor.merge_calls)")
+
+
+# --------------------------------------------------------------------------
+# pattern-set scale tier: K sweep through K-blocked plans +/- prefilter
+# --------------------------------------------------------------------------
+
+def bench_pattern_scale(k_sweep: tuple[int, ...] = (16, 128, 512, 2048),
+                        k_blk: int = 32, n_docs: int = 32,
+                        doc_len: int = 512, smoke: bool = False) -> None:
+    """Throughput vs pattern count K through the pattern-set scale tier.
+
+    Every K in the sweep builds a ``BlockedMatcher`` (blocks of ``k_blk``,
+    independently-determinized packs) over literal-bearing patterns and
+    scans the same document batch twice — required-literal prefilter on and
+    off.  A quarter of the documents plant some pattern's literal, so the
+    gate has real survivors; the rest dispatch zero blocks when gating is
+    on.  Emitted per (K, gate): ``bytes_per_s`` (the ``tools/bench_compare``
+    regression gate rides these rows) and ``skipped_blocks`` /
+    ``gated_docs`` (the gate's work-avoidance witness, from
+    ``perf_report()["prefilter_skipped_blocks"]``).
+
+    Correctness guard: the gated and ungated [B, K] verdicts must be
+    identical — the prefilter may only skip guaranteed non-matches — and at
+    least one document must match (the gate is not vacuous).
+    ``smoke=True`` shrinks the sweep for CI.
+    """
+    from repro.core import BlockedMatcher
+
+    if smoke:
+        k_sweep, n_docs, doc_len = (16, 64), 16, 256
+    rng = np.random.default_rng(17)
+    k_max = max(k_sweep)
+    pats = [f"P{i:04x}e" for i in range(k_max)]
+    docs = []
+    for d in range(n_docs):
+        body = rng.integers(ord("f"), ord("z") + 1, size=doc_len,
+                            dtype=np.uint8).tobytes()
+        if d % 4 == 0:  # plant a first-block literal mid-document, so the
+            # gate's skip witness is exactly n_blocks - 1 at every K
+            lit = pats[int(rng.integers(0, min(k_blk, k_max)))].encode()
+            body = body[:doc_len // 2] + lit + body[doc_len // 2 + len(lit):]
+        docs.append(body)
+    total_bytes = n_docs * doc_len
+
+    for k in k_sweep:
+        runs = {}
+        for gate in (True, False):
+            bm = BlockedMatcher(pats[:k], k_blk=k_blk, prefilter=gate,
+                                num_chunks=4, lookahead_r=1, batch_tile=32)
+            res = bm.membership_batch(docs)  # warm + correctness capture
+            us = time_us(lambda: bm.membership_batch(docs), repeats=2,
+                         warmup=0)
+            runs[gate] = res.accepted
+            tag = (f"pattern_scale/K{k}/"
+                   + ("prefilter" if gate else "noprefilter"))
+            emit(f"{tag}/bytes_per_s", us, total_bytes / (us / 1e6))
+            if gate:
+                rep = bm.perf_report()
+                per_scan = rep["prefilter_skipped_blocks"] / 3  # 3 scans
+                emit(f"pattern_scale/K{k}/skipped_blocks", 0.0, per_scan)
+                emit(f"pattern_scale/K{k}/gated_docs", 0.0,
+                     rep["prefilter_gated_docs"] / 3)
+        assert (runs[True] == runs[False]).all(), \
+            "prefilter changed a verdict — the gate must be sound"
+        assert runs[True].any(), "planted literals must produce matches"

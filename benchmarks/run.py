@@ -45,6 +45,7 @@ def main() -> None:
         ("capacity_balance", pf.bench_capacity_balance),     # sharded runtime
         ("stream_throughput", pf.bench_stream_throughput),   # streaming runtime
         ("ooo_throughput", pf.bench_ooo_throughput),         # out-of-order tier
+        ("pattern_scale", pf.bench_pattern_scale),           # pattern-set scale tier
     ]
     if args.only:
         names = set(args.only.split(","))

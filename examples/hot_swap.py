@@ -1,0 +1,56 @@
+"""Pattern-set scale tier: K-blocked matching, prefilter gate, hot swap.
+
+  PYTHONPATH=src python examples/hot_swap.py
+
+A ``PatternSet`` splits K patterns into independently-determinized blocks;
+``BlockedMatcher`` fans a document batch over the per-block matchers and the
+required-literal prefilter skips every block whose literals cannot occur in
+any document of the batch.  ``swap_patterns`` then hot-swaps part of the set:
+only the changed blocks rebuild — unchanged blocks keep their compiled
+lowerings, and (on the streaming side) their live cursors carry over
+bit-identically mid-stream.
+"""
+
+import numpy as np
+
+from repro.core import BlockedMatcher, PatternSet
+from repro.streaming import BlockedStreamMatcher, TickPolicy
+
+
+def main() -> None:
+    # 256 block-list patterns, every one carrying a required literal
+    patterns = {f"rule{i:02x}": f"BAD{i:02x}[0-9]+" for i in range(256)}
+    ps = PatternSet(patterns, k_blk=32, search=True)
+    bm = BlockedMatcher(ps, num_chunks=4, batch_tile=16)
+    docs = [b"clean traffic, nothing to see",
+            b"payload BAD07333 end",
+            b"BADff9 tail hit"]
+    res = bm.membership_batch(docs)
+    rep = bm.perf_report()
+    print(f"K={bm.n_patterns} patterns in {bm.n_blocks} blocks; "
+          f"doc hits: {res.accepted.any(axis=1).tolist()}")
+    print(f"prefilter skipped {rep['prefilter_skipped_blocks']} block "
+          f"dispatches ({rep['prefilter_gated_docs']} gated doc-blocks)")
+
+    # hot swap: one rule changes -> one block rebuilds, 7 are reused
+    info = bm.swap_patterns(ps.with_patterns({"rule07": "SAFE[a-z]+"}))
+    print(f"swap: reused blocks {info['reused']}, rebuilt {info['rebuilt']}")
+    res2 = bm.membership_batch(docs)
+    assert not res2.accepted[1].any()  # rule07 no longer fires
+    assert res2.accepted[2].any()      # untouched rules still do
+
+    # mid-stream swap: unchanged blocks keep their cursors bit-identically
+    sm = BlockedStreamMatcher(bm, policy=TickPolicy(max_batch=2, max_delay=1))
+    sess = sm.open()
+    sess.feed(b"BADff")           # prefix lands before the swap...
+    sm.flush()
+    sm.swap_patterns(sm.pattern_set.with_patterns({"rule00": "OTHER"}))
+    sess.feed(b"9 after swap")    # ...suffix after; block 7's cursor carried
+    out = sess.close()
+    hit = [sm.pattern_set.names[k] for k in np.flatnonzero(out.accepted)]
+    print(f"mid-stream swap kept the match alive: {hit}")
+    assert hit == ["ruleff"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,26 +1,30 @@
 """Core library: the paper's speculative parallel DFA membership test."""
 
-from .automata import DFA, NFA, PackedDFA, make_search_dfa, pack_dfas, random_dfa
+from .automata import (DFA, NFA, PackedDFA, make_search_dfa, pack_dfas,
+                       packed_signature, random_dfa)
 from .determinize import compile_prosite, compile_regex, minimize, nfa_to_dfa
-from .engine import (BatchMatcher, BatchResult, ChunkLayout, DeviceTables,
-                     Matcher, MatchPlan, MatchResult, MeshLayout, Planner,
-                     SegmentBatchResult, ShardedExecutor, SpecDFAEngine,
-                     match_chunks_lanes, sequential_state)
+from .engine import (BatchMatcher, BatchResult, BlockedMatcher, ChunkLayout,
+                     DeviceTables, Matcher, MatchPlan, MatchResult,
+                     MeshLayout, Planner, SegmentBatchResult, ShardedExecutor,
+                     SpecDFAEngine, match_chunks_lanes, sequential_state)
 from .lookahead import (LookaheadTables, PackedLookaheadTables,
                         build_lookahead_tables, build_packed_lookahead_tables,
                         i_max_r, i_sigma_sets)
 from .lvector import (compose, compose_jnp, identity_lvec, merge_compressed,
                       merge_scan_jnp, merge_sequential, merge_tree)
 from .partition import Partition, capacity_weights, uniform_partition, weighted_partition
-from .patterns import PCRE_PATTERNS, PROSITE_PATTERNS, compile_pattern_suite
+from .patterns import (PCRE_PATTERNS, PROSITE_PATTERNS, PatternSet,
+                       compile_pattern_suite)
+from .prefilter import Prefilter, required_literal, window_fingerprints
 from .profiling import profile_capacity, profile_workers, synthetic_capacities
 from .regex import parse_regex, prosite_to_regex, regex_to_nfa
 
 __all__ = [
-    "DFA", "NFA", "PackedDFA", "make_search_dfa", "pack_dfas", "random_dfa",
+    "DFA", "NFA", "PackedDFA", "make_search_dfa", "pack_dfas",
+    "packed_signature", "random_dfa",
     "compile_regex", "compile_prosite", "minimize", "nfa_to_dfa",
     "MatchResult", "BatchResult", "SegmentBatchResult", "SpecDFAEngine",
-    "BatchMatcher", "Matcher",
+    "BatchMatcher", "Matcher", "BlockedMatcher",
     "MatchPlan", "Planner", "ChunkLayout", "MeshLayout", "DeviceTables",
     "ShardedExecutor",
     "match_chunks_lanes", "sequential_state",
@@ -29,7 +33,9 @@ __all__ = [
     "compose", "compose_jnp", "identity_lvec", "merge_compressed",
     "merge_scan_jnp", "merge_sequential", "merge_tree",
     "Partition", "capacity_weights", "uniform_partition", "weighted_partition",
-    "PCRE_PATTERNS", "PROSITE_PATTERNS", "compile_pattern_suite",
+    "PCRE_PATTERNS", "PROSITE_PATTERNS", "PatternSet",
+    "compile_pattern_suite",
+    "Prefilter", "required_literal", "window_fingerprints",
     "profile_capacity", "profile_workers", "synthetic_capacities",
     "parse_regex", "prosite_to_regex", "regex_to_nfa",
 ]

@@ -17,11 +17,13 @@ loop is branch-free, exactly as in the paper's Listing 1.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["NFA", "DFA", "PackedDFA", "make_search_dfa", "pack_dfas", "random_dfa"]
+__all__ = ["NFA", "DFA", "PackedDFA", "make_search_dfa", "pack_dfas",
+           "packed_signature", "random_dfa"]
 
 
 @dataclasses.dataclass
@@ -206,6 +208,25 @@ def pack_dfas(dfas: Sequence[DFA]) -> PackedDFA:
                      accepting=np.concatenate([d.accepting for d in dfas]),
                      starts=starts, sinks=sinks, offsets=offsets,
                      byte_to_class=byte_to_class)
+
+
+def packed_signature(packed: PackedDFA) -> str:
+    """Content hash of a packed pattern block.
+
+    Two ``PackedDFA``s with equal signatures are byte-for-byte the same
+    automaton: every array that determines matching behaviour (and state-id
+    layout, which streaming cursors depend on) is folded in, shapes included.
+    Used as the identity for block-level lowering reuse across
+    ``swap_patterns`` and for checkpoint compatibility checks.
+    """
+    h = hashlib.sha1()
+    for arr in (packed.table, packed.accepting, packed.starts, packed.sinks,
+                packed.offsets, packed.byte_to_class):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 def make_search_dfa(dfa: DFA) -> DFA:

@@ -43,6 +43,7 @@ matching.
 """
 
 from .baselines import PaperSpecEngine
+from .blocked import BlockedMatcher
 from .executors import Executor, LaneExecutor, LocalExecutor
 from .facade import (BatchMatcher, BatchResult, CursorBatchResult, Matcher,
                      SegmentBatchResult)
@@ -57,6 +58,7 @@ from .spec import (VPU_LANES, MatcherFn, MatchResult, SpecDFAEngine,
 __all__ = [
     "MatchResult", "BatchResult", "SegmentBatchResult", "CursorBatchResult",
     "SpecDFAEngine", "PaperSpecEngine", "BatchMatcher", "Matcher",
+    "BlockedMatcher",
     "sequential_state", "match_chunks_lanes", "VPU_LANES", "MatcherFn",
     "Planner", "MatchPlan", "BucketPlan", "ChunkLayout", "MeshLayout",
     "DeviceTables", "LanePlan",

@@ -166,6 +166,25 @@ class LaneExecutor:
         """
         self.layout_epoch += 1
 
+    def retable(self, tables: DeviceTables) -> None:
+        """Swap the constant matcher tables underneath the executor (the
+        hot pattern swap, ``Matcher.swap_patterns``).
+
+        Every compiled lowering closed over the *old* ``DeviceTables``
+        arrays at trace time, so — unlike ``invalidate_layouts`` — there is
+        nothing table-independent to keep: the whole cache drops and
+        programs re-lower lazily against the new tables.  The planner's
+        bumped ``table_epoch`` is stamped into every subsequent
+        ``LanePlan.key``, so even an entry that somehow escaped the clear
+        could never be looked up again.  ``traces`` keeps counting
+        monotonically; unchanged blocks of a ``BlockedMatcher`` swap never
+        pass through here, which is what makes their lowering survival
+        observable (and asserted) from outside.
+        """
+        self.t = tables
+        self._lowered.clear()
+        self.lowering_kinds.clear()
+
     def _jit_lowering(self, body):
         """jit a lowering body under the retrace counter and buffer donation.
 

@@ -27,7 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..automata import DFA, PackedDFA, pack_dfas
+from ..automata import DFA, PackedDFA, pack_dfas, packed_signature
 from ..partition import capacity_weights
 from .executors import LocalExecutor
 from .plan import (ENTRY_LANES, ENTRY_STARTS, ENTRY_STATES, DeviceTables,
@@ -181,12 +181,7 @@ class Matcher:
                  spec_m: int = 1, calibrate: bool = False,
                  early_exit_segments: int = 4,
                  lookahead_r: int | str = "auto", autotune: bool = False):
-        if isinstance(source, PackedDFA):
-            packed = source
-        elif isinstance(source, DFA):
-            packed = pack_dfas([source])
-        else:
-            packed = pack_dfas(list(source))
+        packed = self._pack_source(source)
         if num_chunks < 1:
             raise ValueError("num_chunks must be >= 1")
         if max_buckets < 1:
@@ -199,6 +194,7 @@ class Matcher:
         self.backend = backend
         self.max_buckets = int(max_buckets)
         self.batch_tile = next_pow2(int(batch_tile))
+        self._lookahead_r = lookahead_r  # swap_patterns rebuilds with it
         self.dev = DeviceTables.build(packed, lookahead_r=lookahead_r)
         self.pad_cls = self.dev.pad_cls
         self.autotune = bool(autotune)
@@ -281,6 +277,58 @@ class Matcher:
         # call — lets the OOO tier assert "one associative_scan per
         # contiguous run", the same way merge_calls() guards the tick path
         self.compose_calls = 0
+
+    @staticmethod
+    def _pack_source(source) -> PackedDFA:
+        """Normalize every accepted pattern source to one ``PackedDFA``.
+
+        A multi-block ``PatternSet`` is refused here on purpose: one Matcher
+        runs exactly one table, and silently flattening the blocks would
+        defeat the set's whole point (``core.engine.BlockedMatcher`` is the
+        multi-block front end).
+        """
+        from ..patterns import PatternSet
+        if isinstance(source, PatternSet):
+            if source.n_blocks != 1:
+                raise ValueError(
+                    f"PatternSet has {source.n_blocks} blocks; a Matcher "
+                    "runs exactly one — use core.engine.BlockedMatcher for "
+                    "multi-block sets (or raise k_blk to cover all patterns)")
+            return source.blocks[0]
+        if isinstance(source, PackedDFA):
+            return source
+        if isinstance(source, DFA):
+            return pack_dfas([source])
+        return pack_dfas(list(source))
+
+    def swap_patterns(self, source) -> bool:
+        """Hot-swap the pattern tables in place; True iff anything changed.
+
+        An identical table content (``automata.packed_signature``) is a
+        guaranteed no-op and returns False — in-flight streaming cursors
+        carry over bit-identically.  On a real change the planner keeps its
+        sticky buckets and compiled seq width (*shapes* survive the swap),
+        but every compiled lowering baked the old device tables as trace
+        constants, so the executor cache clears (``LaneExecutor.retable``)
+        and programs re-lower lazily on next dispatch; ``Planner
+        .table_epoch`` stamps every post-swap plan so a stale program can
+        never be served.  Block-granular lowering *reuse* lives one level up
+        — ``BlockedMatcher.swap_patterns`` leaves unchanged blocks' matchers
+        untouched.  Streaming callers must swap at a tick boundary
+        (``StreamMatcher.swap_patterns`` owns the cursor carry rules).
+        """
+        packed = self._pack_source(source)
+        if packed_signature(packed) == packed_signature(self.packed):
+            return False
+        self.packed = packed
+        self.dev = DeviceTables.build(packed, lookahead_r=self._lookahead_r)
+        self.pad_cls = self.dev.pad_cls
+        self.planner.table_epoch += 1
+        self.executor.retable(self.dev)
+        # the jitted cursor advance baked the old tables too — fresh wrapper,
+        # fresh trace cache
+        self._advance_fn = jax.jit(self._advance_impl)
+        return True
 
     # -- properties ---------------------------------------------------------
 
@@ -689,6 +737,10 @@ class Matcher:
                           for key, kind in
                           self.executor.lowering_kinds.items()},
             "kernel_skipped_steps": None,
+            "table_epoch": self.planner.table_epoch,
+            # single-table matchers have no block gate; the key exists so
+            # perf consumers read one schema (BlockedMatcher fills it in)
+            "prefilter_skipped_blocks": None,
             "autotune": dataclasses.asdict(self._tuned)
                         if self._tuned is not None else None,
         }

@@ -401,6 +401,10 @@ class LanePlan:
     entry: str       # ENTRY_STARTS | ENTRY_STATES | ENTRY_LANES
     early_exit: bool = True
     spec_r: int = 1  # boundary-key lookahead depth (DeviceTables.spec_r)
+    table_epoch: int = 0  # pattern-set generation (Planner.table_epoch):
+    #   bumped by hot swaps the way layout_epoch tracks boundary moves, so a
+    #   compiled program that baked pre-swap tables can never be looked up
+    #   again even if an executor cache entry survived
 
     def __post_init__(self):
         if self.kind not in ("seq", "spec"):
@@ -413,7 +417,7 @@ class LanePlan:
     @property
     def key(self) -> tuple:
         return (self.kind, self.width, self.chunk_len, self.entry,
-                self.early_exit, self.spec_r)
+                self.early_exit, self.spec_r, self.table_epoch)
 
 
 @dataclasses.dataclass
@@ -467,6 +471,9 @@ class Planner:
         self.devices = int(devices)
         self.doc_shards = int(doc_shards)
         self.spec_m = int(spec_m)
+        # pattern-set generation: Matcher.swap_patterns bumps it so every
+        # post-swap LanePlan keys differently from pre-swap programs
+        self.table_epoch = 0
         self.weights: Optional[np.ndarray] = None
         self.spec_keys: list[int] = []
         self.seq_width = next_pow2(max(4 * self.num_chunks - 1, 1))
@@ -542,7 +549,8 @@ class Planner:
         """
         return LanePlan(kind=bucket.kind, width=bucket.width,
                         chunk_len=bucket.chunk_len, entry=entry,
-                        early_exit=early_exit, spec_r=spec_r)
+                        early_exit=early_exit, spec_r=spec_r,
+                        table_epoch=self.table_epoch)
 
     # -- batch planning -----------------------------------------------------
 

@@ -9,11 +9,17 @@ real positives to find — mirroring the paper's PCRE/PROSITE evaluation data.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+import json
+import pathlib
+from typing import Iterator, Optional
 
 import numpy as np
 
-__all__ = ["CorpusConfig", "generate_documents", "generate_bytes"]
+__all__ = ["CorpusConfig", "generate_documents", "generate_bytes",
+           "load_pattern_fixtures"]
+
+_FIXTURES = (pathlib.Path(__file__).resolve().parents[3]
+             / "tests" / "fixtures" / "pattern_corpus.json")
 
 _WORDS = (b"the quick brown fox jumps over lazy dog state machine parallel "
           b"speculative chunk merge lookahead automaton pattern match input "
@@ -59,3 +65,23 @@ def generate_documents(cfg: CorpusConfig) -> Iterator[bytes]:
 def generate_bytes(total: int, seed: int = 0) -> bytes:
     cfg = CorpusConfig(n_documents=(total // 2048) + 1, seed=seed)
     return b"".join(generate_documents(cfg))[:total]
+
+
+def load_pattern_fixtures(path: Optional[str] = None) -> list[dict]:
+    """Load the checked-in pattern corpus fixtures.
+
+    Each entry is ``{"name", "kind" ("pcre"|"prosite"), "source" (the raw
+    PCRE regex or PROSITE motif), "pattern" (the translated regex actually
+    compiled — also valid Python ``re`` syntax, the conformance oracle),
+    "positive": [str, ...], "negative": [str, ...]}`` with every example
+    pre-verified against ``re.search`` at generation time.  Shared by the
+    conformance suite and the ``pattern_scale`` benchmark so both sweep the
+    same corpus the paper's PCRE/PROSITE evaluation stands in for.
+    """
+    p = pathlib.Path(path) if path is not None else _FIXTURES
+    with open(p) as f:
+        data = json.load(f)
+    entries = data["entries"]
+    if not entries:
+        raise ValueError(f"no fixture entries in {p}")
+    return entries

@@ -34,8 +34,8 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
-from ..core import (Matcher, SpecDFAEngine, compile_regex, make_search_dfa,
-                    pack_dfas)
+from ..core import (BlockedMatcher, Matcher, PatternSet, SpecDFAEngine,
+                    compile_regex, make_search_dfa, pack_dfas)
 
 __all__ = ["CorpusFilter", "FilterStats"]
 
@@ -77,6 +77,14 @@ class CorpusFilter:
     2-D doc x chunk mesh).  Keep/drop decisions are [B] bool and
     bit-identical across all backends, mesh shapes and scan paths
     (``scan_batch`` / ``filter`` / ``scan_stream``).
+
+    Large block lists ride the pattern-set scale tier: ``k_blk`` splits the
+    K patterns into independently-determinized blocks behind a
+    ``core.engine.BlockedMatcher`` (same [B, K] decisions, bounded
+    per-block determinization) and ``prefilter`` gates whole blocks per
+    batch by required-literal fingerprints — documents that cannot contain
+    any of a block's literals never dispatch that block.  Both paths stay
+    bit-identical on decisions; only the gated work is skipped.
     """
 
     def __init__(self, patterns: Iterable[str], *, num_chunks: int = 8,
@@ -84,23 +92,32 @@ class CorpusFilter:
                  lookahead_r: int = 1, batch_tile: int = 64,
                  max_buckets: int = 2, backend: str = "local",
                  capacities=None, mesh=None, mesh_shape=None,
-                 devices=None):
-        self.dfas = [make_search_dfa(compile_regex(".*(" + pat + ")"))
-                     for pat in patterns]
+                 devices=None, k_blk: int | None = None,
+                 prefilter: bool = True):
+        patterns = list(patterns)
+        matcher_kwargs = dict(num_chunks=num_chunks, batch_tile=batch_tile,
+                              max_buckets=max_buckets, backend=backend,
+                              capacities=capacities, mesh=mesh,
+                              mesh_shape=mesh_shape, devices=devices)
+        self.pattern_set: PatternSet | None = None
+        if k_blk is not None and patterns:
+            # PatternSet(search=True) compiles the identical search DFAs the
+            # unblocked path builds below; reuse them for the per-doc engines
+            self.pattern_set = PatternSet(patterns, k_blk=k_blk, search=True)
+            self.dfas = list(self.pattern_set.dfas)
+            self.batch = BlockedMatcher(self.pattern_set,
+                                        prefilter=prefilter,
+                                        **matcher_kwargs)
+        else:
+            self.dfas = [make_search_dfa(compile_regex(".*(" + pat + ")"))
+                         for pat in patterns]
+            # zero patterns = filter nothing, keep everything (no matcher)
+            self.batch = (Matcher(pack_dfas(self.dfas), **matcher_kwargs)
+                          if self.dfas else None)
         self.engines = [
             SpecDFAEngine(dfa, num_chunks=num_chunks, mode=mode,
                           partition=partition, lookahead_r=lookahead_r)
             for dfa in self.dfas]
-        # zero patterns = filter nothing, keep everything (no batch matcher)
-        self.batch = (Matcher(pack_dfas(self.dfas),
-                              num_chunks=num_chunks,
-                              batch_tile=batch_tile,
-                              max_buckets=max_buckets,
-                              backend=backend,
-                              capacities=capacities,
-                              mesh=mesh, mesh_shape=mesh_shape,
-                              devices=devices)
-                      if self.dfas else None)
         self.stats = FilterStats()
 
     # -- per-document path (early exit across patterns) ---------------------
@@ -187,7 +204,8 @@ class CorpusFilter:
         patterns have all absorbed (e.g. a block-list hit) stops being
         scanned entirely; its remaining bytes are only counted.
         """
-        from ..streaming import StreamMatcher, TickPolicy
+        from ..streaming import (BlockedStreamMatcher, StreamMatcher,
+                                 TickPolicy)
 
         if self.batch is None:  # no patterns: keep everything
             open_counts: dict = {}
@@ -202,9 +220,13 @@ class CorpusFilter:
                 yield key, True
             return
 
-        sm = StreamMatcher(self.batch,
-                           policy=TickPolicy(max_batch=max_batch,
-                                             max_delay=max_delay))
+        policy = TickPolicy(max_batch=max_batch, max_delay=max_delay)
+        if self.pattern_set is not None:
+            # blocked filter: one child StreamMatcher per block behind a
+            # single session API, sharing the batch matcher's lowerings
+            sm = BlockedStreamMatcher(self.batch, policy=policy)
+        else:
+            sm = StreamMatcher(self.batch, policy=policy)
         open_sessions: dict = {}
         # device ticks fire while events are consumed, so fold the scheduler
         # stats in even when the consumer abandons the generator early

@@ -108,6 +108,17 @@ class GrammarConstraint:
         self.dfa = dfa
         self.vocab_size = vocab_size
         self.use_kernel = use_kernel
+        self._allow_specials = tuple(allow_specials)
+        self._eos_id = eos_id
+        # the matching runtime facade: its padded transition table has an
+        # identity column at matcher.pad_cls, so state advance runs through
+        # the same engine layers as corpus scanning
+        self.matcher = Matcher(dfa, num_chunks=1, batch_tile=1)
+        self._build_tables()
+
+    def _build_tables(self) -> None:
+        """(Re)build the token mask + token->class tables for ``self.dfa``."""
+        dfa, vocab_size = self.dfa, self.vocab_size
         q = dfa.n_states
         allowed = np.zeros((q, vocab_size), np.uint8)
         byte_cls = dfa.byte_to_class
@@ -117,20 +128,16 @@ class GrammarConstraint:
             tgt = nxt[:, cls]
             ok = (tgt != dfa.sink) if dfa.sink >= 0 else np.ones(q, bool)
             allowed[:, v] = ok
-        for v in allow_specials:
+        for v in self._allow_specials:
             if v < vocab_size:
                 allowed[:, v] = 1
         # termination semantics: accepting states may emit EOS; states with no
         # legal continuation MUST emit EOS (grammar exhausted)
-        if eos_id is not None and eos_id < vocab_size:
-            allowed[dfa.accepting, eos_id] = 1
+        if self._eos_id is not None and self._eos_id < vocab_size:
+            allowed[dfa.accepting, self._eos_id] = 1
             dead = allowed.sum(axis=1) == 0
-            allowed[dead, eos_id] = 1
+            allowed[dead, self._eos_id] = 1
         self.allowed = jnp.asarray(allowed)
-        # the matching runtime facade: its padded transition table has an
-        # identity column at matcher.pad_cls, so state advance runs through
-        # the same engine layers as corpus scanning
-        self.matcher = Matcher(dfa, num_chunks=1, batch_tile=1)
         packed_cls = self.matcher.packed.byte_to_class  # facade class ids
         # token -> class map for state advance; special (non-byte) tokens map
         # to the identity pad class, so they advance no DFA with no masking
@@ -139,6 +146,23 @@ class GrammarConstraint:
         tok_cls[:nb] = packed_cls[:nb]
         self.tok_cls = jnp.asarray(tok_cls)
         self.table_j = self.matcher.dev.table_pad_j
+
+    def swap_grammar(self, dfa: DFA) -> bool:
+        """Swap the constraint grammar in place (a new response schema
+        between requests) without rebuilding the engine stack.
+
+        Rides ``Matcher.swap_patterns``: a signature-equal grammar is a
+        no-op (returns False, every compiled lowering kept); otherwise the
+        facade retables under a bumped plan ``table_epoch`` and the token
+        mask / token->class tables rebuild for the new DFA.  Sequences
+        decoded under the old grammar hold stale states — restart them with
+        ``init_states`` / a fresh ``open_decode``.
+        """
+        if not self.matcher.swap_patterns(dfa):
+            return False
+        self.dfa = dfa
+        self._build_tables()
+        return True
 
     def init_states(self, batch: int) -> jnp.ndarray:
         return jnp.full((batch,), self.dfa.start, jnp.int32)

@@ -52,11 +52,14 @@ of ``launch.serve``.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from ..core.engine.facade import Matcher
-from .checkpoint import (load_sessions_tree, save_sessions_tree,
-                         sessions_tree, table_signature, unpack_cursor)
+from .checkpoint import (load_sessions_tree, pattern_set_signature,
+                         save_sessions_tree, sessions_tree, table_signature,
+                         unpack_cursor)
 from .cursor import (ENTRY_EXACT, MatchCursor, SegmentResult, counting_merges,
                      merge, merge_calls, open_cursor, open_lane_cursor,
                      reset_merge_calls, segment_result)
@@ -73,8 +76,10 @@ __all__ = ["StreamMatcher", "StreamSession", "StreamResult", "TickPolicy",
            "MatchCursor", "SegmentResult", "ENTRY_EXACT", "open_cursor",
            "open_lane_cursor", "segment_result", "merge", "merge_calls",
            "reset_merge_calls", "counting_merges", "FaultPlan",
-           "InjectedFault", "table_signature", "sessions_tree",
+           "InjectedFault", "table_signature", "pattern_set_signature",
+           "sessions_tree",
            "save_sessions_tree", "load_sessions_tree", "unpack_cursor",
+           "BlockedStreamMatcher", "BlockedStreamSession",
            "OooStreamMatcher", "OooStream", "OooStats", "OooPolicy",
            "ReorderBufferFull", "SequenceGapError", "OooIntegrityError",
            "segment_fingerprint"]
@@ -134,6 +139,11 @@ class StreamMatcher:
         self._next_sid = 0
         self._sessions: dict[int, StreamSession] = {}
         self._snapshot_step = 0
+        # snapshot identity override: a BlockedStreamMatcher stamps the
+        # full-set pattern_set_signature here so each per-block snapshot
+        # refuses restore when *any* sibling block (or the prefilter)
+        # changed, not merely this block's own table
+        self.snapshot_signature: str | None = None
 
     # -- session lifecycle ---------------------------------------------------
 
@@ -229,6 +239,58 @@ class StreamMatcher:
             byte_count=session.cursor.byte_count,
             segments_fed=session.segments_fed)
 
+    # -- hot pattern swap ----------------------------------------------------
+
+    def _reset_open_cursors(self) -> None:
+        """Re-open every live session's cursor at the new pattern starts.
+
+        The post-swap carry for *changed* tables: old packed state ids are
+        meaningless under the new table, so swapped patterns see only bytes
+        fed after the swap.  ``byte_count`` keeps counting (it is a stream
+        property, not a pattern one); ``segments_fed`` persists on the
+        session; eviction state resets so admission re-evaluates under the
+        new tables (``MicroBatchScheduler.reopen``).
+        """
+        for sess in self._sessions.values():
+            fresh = open_cursor(self.matcher.dev)
+            sess.cursor = dataclasses.replace(
+                fresh, byte_count=sess.cursor.byte_count)
+            self.scheduler.reopen(sess)
+
+    def swap_patterns(self, source) -> bool:
+        """Hot-swap the pattern set at a tick boundary; True iff changed.
+
+        Semantics:
+
+        * **Identical tables** (same ``packed_signature``): a guaranteed
+          no-op — returns False and in-flight cursors carry over
+          bit-identically (nothing is touched).
+        * **Changed tables**: pending bytes first flush through the *old*
+          tables (the tick boundary), then the underlying
+          ``Matcher.swap_patterns`` rebuilds device tables and every open
+          exact session re-opens at the new starts
+          (``_reset_open_cursors``).
+        * **Candidate-keyed sessions** (``open_at``): refused while any is
+          open — a [K, S] restricted map cannot be re-keyed onto different
+          tables; close them (``close_map``) first.
+
+        Block-granular carry — unchanged blocks keeping their cursors
+        mid-stream while siblings swap — lives in
+        ``BlockedStreamMatcher.swap_patterns``.
+        """
+        lanes = [s for s in self._sessions.values() if not s.cursor.exact]
+        if lanes:
+            raise ValueError(
+                f"{len(lanes)} candidate-keyed session(s) are open; their "
+                "[K, S] maps cannot be re-keyed onto new tables — close_map "
+                "them before swap_patterns")
+        if self.scheduler.pending_streams:
+            self.scheduler.tick()
+        if not self.matcher.swap_patterns(source):
+            return False
+        self._reset_open_cursors()
+        return True
+
     # -- failover ------------------------------------------------------------
 
     def snapshot(self, directory: str, *, step: int | None = None) -> str:
@@ -244,7 +306,8 @@ class StreamMatcher:
         """
         sessions = sorted((s for s in self._sessions.values() if not s.closed),
                           key=lambda s: s.sid)
-        tree = sessions_tree(sessions, self.matcher.packed, self._next_sid)
+        tree = sessions_tree(sessions, self.matcher.packed, self._next_sid,
+                             signature=self.snapshot_signature)
         if step is None:
             step = self._snapshot_step
         self._snapshot_step = step + 1
@@ -263,7 +326,9 @@ class StreamMatcher:
         Refuses a snapshot taken against a different packed pattern set, or
         one whose session ids collide with sessions already open here.
         """
-        tree, step = load_sessions_tree(directory, self.matcher, step=step)
+        tree, step = load_sessions_tree(
+            directory, self.matcher, step=step,
+            expect_signature=self.snapshot_signature)
         sids = [int(s) for s in tree["sid"]]
         clash = [sid for sid in sids if sid in self._sessions]
         if clash:
@@ -295,3 +360,7 @@ class StreamMatcher:
     @property
     def n_patterns(self) -> int:
         return self.matcher.n_patterns
+
+
+# imported last: blocked.py builds on StreamMatcher above
+from .blocked import BlockedStreamMatcher, BlockedStreamSession  # noqa: E402

@@ -29,12 +29,12 @@ import hashlib
 
 import numpy as np
 
-from ..core.automata import PackedDFA
+from ..core.automata import PackedDFA, packed_signature
 from ..training.checkpoint import restore_checkpoint, save_checkpoint
 from .cursor import MatchCursor
 
-__all__ = ["table_signature", "sessions_tree", "save_sessions_tree",
-           "load_sessions_tree", "unpack_cursor"]
+__all__ = ["table_signature", "pattern_set_signature", "sessions_tree",
+           "save_sessions_tree", "load_sessions_tree", "unpack_cursor"]
 
 # One leaf per field; the tree structure is the restore contract (the
 # ``like`` argument of restore_checkpoint only needs matching keys).
@@ -44,26 +44,48 @@ TREE_KEYS = ("sig", "next_sid", "sid", "lane", "lane_width", "entry_class",
 
 
 def table_signature(packed: PackedDFA) -> str:
-    """Content hash of the packed pattern set a snapshot was taken against.
+    """Content hash of the packed table a snapshot was taken against.
 
-    Covers the transition table, start/accepting vectors and the byte->class
-    map — everything a cursor's packed state ids are meaningful relative to.
+    Delegates to ``core.automata.packed_signature`` — which also folds in
+    sinks and per-pattern offsets — so checkpoint identity, block-level
+    lowering reuse and hot-swap no-op detection all agree on what "the same
+    pattern set" means.  Covers only *one* packed table; a blocked pattern
+    set snapshots per block with the full-set ``pattern_set_signature``
+    stamped over each block's tree.
+    """
+    return packed_signature(packed)
+
+
+def pattern_set_signature(pattern_set, prefilter=None) -> str:
+    """Content hash of a full K-blocked pattern set (+ prefilter tables).
+
+    ``table_signature`` covers exactly one packed table, which is the fix
+    this function exists for: a blocked streaming runtime snapshots one
+    tree per block, and each block's tree must refuse restore when *any*
+    part of the set changed — a hot-swapped sibling block, a different
+    blocking layout, or a changed required-literal table would all silently
+    re-gate or re-interpret restored traffic.  ``prefilter`` is the
+    ``core.prefilter.Prefilter`` in force, or None when gating is off.
     """
     h = hashlib.sha1()
-    for arr in (packed.table, packed.starts, packed.accepting,
-                packed.byte_to_class):
-        a = np.ascontiguousarray(arr)
-        h.update(str(a.shape).encode())
-        h.update(a.tobytes())
+    h.update(f"k_blk={pattern_set.k_blk};".encode())
+    for sig in pattern_set.block_signatures:
+        h.update(sig.encode())
+    h.update(b"|pf:")
+    if prefilter is not None:
+        h.update(prefilter.signature().encode())
     return h.hexdigest()
 
 
-def sessions_tree(sessions, packed: PackedDFA, next_sid: int) -> dict:
+def sessions_tree(sessions, packed: PackedDFA, next_sid: int, *,
+                  signature: str | None = None) -> dict:
     """Pack open sessions into the fixed checkpoint tree (pure host numpy).
 
     Cursor lane axes may differ (exact cursors carry S=1, candidate-keyed
     ones S=i_max); lanes pad to the widest and ``lane_width`` records each
     cursor's real width.  Pending bytes concatenate with [B+1] offsets.
+    ``signature`` overrides the embedded identity (a blocked runtime stamps
+    the full-set ``pattern_set_signature`` instead of this one block's).
     """
     b = len(sessions)
     k = packed.n_patterns
@@ -96,8 +118,9 @@ def sessions_tree(sessions, packed: PackedDFA, next_sid: int) -> dict:
     if b:
         off[1:] = np.cumsum([len(p) for p in pend])
     pending = np.frombuffer(b"".join(pend), np.uint8).copy()
+    sig = signature if signature is not None else table_signature(packed)
     return {
-        "sig": np.frombuffer(table_signature(packed).encode(), np.uint8).copy(),
+        "sig": np.frombuffer(sig.encode(), np.uint8).copy(),
         "next_sid": np.int64(next_sid),
         "sid": sid, "lane": lane, "lane_width": lane_width,
         "entry_class": entry_class, "absorbed": absorbed,
@@ -112,7 +135,8 @@ def save_sessions_tree(directory: str, tree: dict, step: int) -> str:
     return save_checkpoint(directory, tree, step)
 
 
-def load_sessions_tree(directory: str, matcher, *, step=None
+def load_sessions_tree(directory: str, matcher, *, step=None,
+                       expect_signature: str | None = None
                        ) -> tuple[dict, int]:
     """Load (and verify) the latest complete snapshot for ``matcher``.
 
@@ -134,7 +158,8 @@ def load_sessions_tree(directory: str, matcher, *, step=None
     tree, step = restore_checkpoint(directory, like, step=step,
                                     shardings=shardings)
     tree = {key: np.asarray(val) for key, val in tree.items()}
-    want = table_signature(matcher.packed)
+    want = (expect_signature if expect_signature is not None
+            else table_signature(matcher.packed))
     got = bytes(tree["sig"].astype(np.uint8)).decode()
     if got != want:
         raise ValueError(

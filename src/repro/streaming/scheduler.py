@@ -285,6 +285,18 @@ class MicroBatchScheduler:
                 and self._clock() - oldest._pending_wall
                 >= self.policy.max_delay_s)
 
+    def reopen(self, session) -> None:
+        """Clear a session's eviction state after a hot pattern swap.
+
+        ``StreamMatcher.swap_patterns`` re-opens cursors at the *new*
+        pattern starts, so a session evicted as fully absorbed under the old
+        tables is live again — admission must re-evaluate it.  If it
+        re-absorbs under the new tables it is evicted (and counted in
+        ``stats.evicted``) anew; the eager-eviction invariant above is per
+        table generation, not per stream lifetime.
+        """
+        session._evicted = False
+
     def readmit(self, session) -> None:
         """Re-admit a restored session's unflushed pending bytes.
 

@@ -34,3 +34,23 @@ def _isolate_merge_counter():
     from repro.streaming.cursor import reset_merge_calls
     reset_merge_calls()
     yield
+
+# -- deterministic hypothesis profiles (docs/architecture.md, "Testing") ----
+# CI runs derandomized with a bounded example budget so conformance failures
+# reproduce exactly from the printed blob; local runs keep hypothesis's
+# random exploration but drop its wall-clock deadline (device dispatch
+# latency is noisy under jit).  hypothesis is an optional dev dependency —
+# when absent the property-based half of tests/test_conformance.py skips
+# itself (pytest.importorskip) and this block is a no-op.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-ci", derandomize=True, deadline=None, max_examples=30,
+        print_blob=True,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.register_profile("repro-dev", deadline=None)
+    settings.load_profile("repro-ci" if os.environ.get("CI") else "repro-dev")
+except ImportError:  # pragma: no cover - optional dev dependency
+    pass

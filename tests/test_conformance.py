@@ -1,0 +1,242 @@
+"""Differential conformance: the engine vs Python's ``re`` as oracle.
+
+Every fixture pattern (tests/fixtures/pattern_corpus.json — PCRE-style +
+PROSITE, each with ``re``-verified positive/negative examples) and seeded
+random documents are matched by the full engine stack and compared
+decision-for-decision against ``re.fullmatch`` / ``re.search``:
+
+* ``search=True`` pattern sets (absorbing search DFAs) must agree with
+  ``re.search(pattern, doc, re.DOTALL)`` — the corpus-filter semantics;
+* bare ``compile_regex`` DFAs must agree with ``re.fullmatch`` — the
+  membership-test semantics of the paper;
+* the verdicts are identical on every backend (local / pallas / sharded on
+  1x1, 2x4 and 8x1 meshes), with and without K-blocking, with and without
+  the prefilter gate, and after a hot ``swap_patterns``.
+
+Oracle convention: documents are bytes; the oracle decodes latin-1 (a
+byte-transparent bijection) and compiles with ``re.DOTALL`` because the
+engine's ``.`` and negated classes match any byte including newline.
+
+The property-based half (random chunk splits, random documents) runs only
+when ``hypothesis`` is installed — the profiles live in conftest.py; CI is
+derandomized ("repro-ci") so failures replay exactly.
+"""
+
+import re
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (BlockedMatcher, Matcher, PatternSet, compile_regex)
+from repro.data import load_pattern_fixtures
+from repro.launch.mesh import make_matcher_mesh
+
+FIXTURES = load_pattern_fixtures()
+ALL_PATTERNS = {e["name"]: e["pattern"] for e in FIXTURES}
+ALL_DOCS = sorted({s.encode() for e in FIXTURES
+                   for s in e["positive"] + e["negative"]})
+# compact cross-backend slice: half pcre / half prosite, short docs
+SMALL_PATTERNS = {e["name"]: e["pattern"]
+                  for e in (FIXTURES[:4] + FIXTURES[-4:])}
+SMALL_DOCS = [d for d in ALL_DOCS if len(d) <= 24][:48]
+
+ENGINE_KW = dict(num_chunks=4, batch_tile=16, max_buckets=2,
+                 lookahead_r="auto")
+
+BACKENDS = [
+    pytest.param(("local", None), id="local"),
+    pytest.param(("pallas", None), id="pallas"),
+    pytest.param(("sharded", (1, 1)), id="sharded-1x1"),
+    pytest.param(("sharded", (2, 4)), id="sharded-2x4"),
+    pytest.param(("sharded", (8, 1)), id="sharded-8x1"),
+]
+
+
+def _matcher(source, backend_spec, **kw):
+    backend, shape = backend_spec
+    kwargs = {**ENGINE_KW, **kw}
+    if backend == "sharded":
+        if len(jax.devices()) < shape[0] * shape[1]:
+            pytest.skip(f"needs {shape[0] * shape[1]} host devices")
+        kwargs.update(mesh=make_matcher_mesh(shape=shape))
+    return Matcher(source, backend=backend, **kwargs)
+
+
+def _search_oracle(patterns, docs):
+    """[B, K] bool: does pattern k occur anywhere in doc b?"""
+    rxs = [re.compile(p, re.DOTALL) for p in patterns]
+    return np.array([[rx.search(d.decode("latin-1")) is not None
+                      for rx in rxs] for d in docs])
+
+
+def _fullmatch_oracle(patterns, docs):
+    rxs = [re.compile(p, re.DOTALL) for p in patterns]
+    return np.array([[rx.fullmatch(d.decode("latin-1")) is not None
+                      for rx in rxs] for d in docs])
+
+
+def _random_docs(rng, n, alphabet, max_len=64):
+    return [bytes(rng.choice(alphabet, size=int(rng.integers(0, max_len + 1)))
+                  .astype(np.uint8)) for _ in range(n)]
+
+
+# --------------------------------------------------------------------------
+# fixture corpus, full pattern sweep (local) and slice (every backend)
+
+
+def test_fixture_corpus_search_local():
+    """All 34 fixture patterns x all fixture docs on the local backend."""
+    ps = PatternSet(ALL_PATTERNS, k_blk=1 << 30, search=True)
+    got = Matcher(ps, **ENGINE_KW).accepts_batch(ALL_DOCS)
+    want = _search_oracle(list(ALL_PATTERNS.values()), ALL_DOCS)
+    assert (got == want).all()
+    # the fixtures promise at least one positive per pattern
+    assert want.any(axis=0).all()
+
+
+@pytest.mark.parametrize("backend_spec", BACKENDS)
+def test_fixture_corpus_search_backends(backend_spec):
+    ps = PatternSet(SMALL_PATTERNS, k_blk=1 << 30, search=True)
+    got = _matcher(ps, backend_spec).accepts_batch(SMALL_DOCS)
+    want = _search_oracle(list(SMALL_PATTERNS.values()), SMALL_DOCS)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("backend_spec", BACKENDS)
+def test_seeded_random_fullmatch(backend_spec):
+    """Bare DFAs == re.fullmatch on seeded random docs (every backend)."""
+    patterns = ["(ab|ba){2,6}", "[0-9]+", "a[ab]*b", "x+y",
+                "([a-y]0)*", "b.y"]
+    dfas = [compile_regex(p) for p in patterns]
+    rng = np.random.default_rng(7)
+    docs = _random_docs(rng, 48, np.frombuffer(b"ab01xy", np.uint8))
+    got = _matcher(dfas, backend_spec).accepts_batch(docs)
+    want = _fullmatch_oracle(patterns, docs)
+    assert (got == want).all()
+    assert want.any()  # the alphabet is chosen so some docs do match
+
+
+@pytest.mark.parametrize("backend_spec", BACKENDS)
+def test_seeded_random_search(backend_spec):
+    """search=True PatternSet == re.search on seeded random docs."""
+    patterns = {"p0": "(ab|ba){2}", "p1": "[0-9]{3}", "p2": "x+y"}
+    ps = PatternSet(patterns, k_blk=1 << 30, search=True)
+    rng = np.random.default_rng(11)
+    docs = _random_docs(rng, 48, np.frombuffer(b"abxy0189", np.uint8))
+    got = _matcher(ps, backend_spec).accepts_batch(docs)
+    want = _search_oracle(list(patterns.values()), docs)
+    assert (got == want).all()
+    assert want.any()
+
+
+# --------------------------------------------------------------------------
+# K-blocking and the prefilter gate preserve conformance
+
+
+@pytest.mark.parametrize("prefilter", [True, False],
+                         ids=["prefilter", "noprefilter"])
+def test_blocked_conformance(prefilter):
+    bm = BlockedMatcher(ALL_PATTERNS, k_blk=4, prefilter=prefilter,
+                        **ENGINE_KW)
+    assert bm.n_blocks > 1
+    got = bm.accepts_batch(ALL_DOCS)
+    want = _search_oracle(list(ALL_PATTERNS.values()), ALL_DOCS)
+    assert (got == want).all()
+
+
+def test_conformance_after_hot_swap():
+    """The oracle still agrees after swap_patterns rebuilt changed blocks."""
+    names = list(ALL_PATTERNS)
+    bm = BlockedMatcher(ALL_PATTERNS, k_blk=4, **ENGINE_KW)
+    swapped = {names[0]: "zz[0-9]+zz", names[9]: "(qu)+x"}
+    new_ps = bm.pattern_set.with_patterns(swapped)
+    info = bm.swap_patterns(new_ps)
+    assert info["reused"] and info["rebuilt"]  # partial rebuild, not full
+    new_patterns = {**ALL_PATTERNS, **swapped}
+    docs = ALL_DOCS + [b"zz123zz", b"ququx yes", b"zz zz"]
+    got = bm.accepts_batch(docs)
+    want = _search_oracle(list(new_patterns.values()), docs)
+    assert (got == want).all()
+    assert want[len(ALL_DOCS):, [0, 9]].any()  # swapped patterns exercised
+
+
+def test_streaming_conformance():
+    """Chunk-fed streams agree with the oracle (and with batch)."""
+    from repro.streaming import BlockedStreamMatcher, TickPolicy
+
+    bm = BlockedMatcher(SMALL_PATTERNS, k_blk=3, **ENGINE_KW)
+    sm = BlockedStreamMatcher(
+        bm, policy=TickPolicy(max_batch=4, max_delay=2))
+    docs = [d for d in SMALL_DOCS if d][:12]
+    sessions = [sm.open() for _ in docs]
+    # interleaved chunk arrival: every doc lands in two rounds, split at a
+    # per-row offset, so ticks coalesce partial segments of many streams
+    for rnd in range(2):
+        for i, (s, d) in enumerate(zip(sessions, docs)):
+            cut = 1 + i % max(1, len(d) - 1)
+            piece = d[:cut] if rnd == 0 else d[cut:]
+            if piece:
+                s.feed(piece)
+    got = np.stack([s.close().accepted for s in sessions])
+    want = _search_oracle(list(SMALL_PATTERNS.values()), docs)
+    assert (got == want).all()
+
+
+# --------------------------------------------------------------------------
+# property-based half (requires hypothesis; profiles in conftest.py)
+
+
+def _hyp():
+    hyp = pytest.importorskip("hypothesis")
+    return hyp, pytest.importorskip("hypothesis.strategies")
+
+
+_HYP_PS = None
+
+
+def _fixture_matcher():
+    global _HYP_PS
+    if _HYP_PS is None:
+        _HYP_PS = Matcher(PatternSet(SMALL_PATTERNS, k_blk=1 << 30,
+                                     search=True), **ENGINE_KW)
+    return _HYP_PS
+
+
+def test_hypothesis_random_documents():
+    hyp, st = _hyp()
+
+    @hyp.given(st.lists(st.binary(max_size=64), min_size=1, max_size=8))
+    def check(docs):
+        got = _fixture_matcher().accepts_batch(docs)
+        want = _search_oracle(list(SMALL_PATTERNS.values()), docs)
+        assert (got == want).all()
+
+    check()
+
+
+def test_hypothesis_chunk_split_invariance():
+    """Any chunking of a doc streams to the same verdict as one batch call."""
+    hyp, st = _hyp()
+    from repro.streaming import StreamMatcher, TickPolicy
+
+    m = _fixture_matcher()
+    sm = StreamMatcher(m, policy=TickPolicy(max_batch=1, max_delay=0))
+
+    @hyp.given(st.binary(min_size=1, max_size=64),
+               st.lists(st.integers(1, 63), max_size=4))
+    def check(doc, cuts):
+        sess = sm.open()
+        last = 0
+        for c in sorted(set(min(c, len(doc)) for c in cuts)):
+            if c > last:
+                sess.feed(doc[last:c])
+                last = c
+        if last < len(doc):
+            sess.feed(doc[last:])
+        got = sess.close().accepted
+        want = m.accepts_batch([doc])[0]
+        assert (got == want).all()
+
+    check()

@@ -230,7 +230,10 @@ def test_lane_plan_validation():
     with pytest.raises(ValueError):
         LanePlan(kind="seq", width=8, chunk_len=0, entry="bogus")
     p = LanePlan(kind="spec", width=32, chunk_len=8, entry=ENTRY_STARTS)
-    assert p.key == ("spec", 32, 8, ENTRY_STARTS, True, 1)
+    assert p.key == ("spec", 32, 8, ENTRY_STARTS, True, 1, 0)
+    p_epoch = LanePlan(kind="spec", width=32, chunk_len=8,
+                       entry=ENTRY_STARTS, table_epoch=1)
+    assert p_epoch.key != p.key  # swapped tables fork the program
     p2 = LanePlan(kind="spec", width=32, chunk_len=8, entry=ENTRY_STARTS,
                   spec_r=2)
     assert p2.key != p.key  # the r choice forks the compiled program

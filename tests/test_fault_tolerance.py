@@ -462,3 +462,71 @@ def test_calibrated_capacities_returns_copies(monkeypatch):
     caps[0] = 99.0
     assert profiling.calibrated_capacities(jax.devices()[:1])[0] == 1.0
     profiling.clear_calibration_cache()
+
+
+# --------------------------------------------------------------------------
+# regression (ISSUE 9): checkpoint identity must cover the *full* pattern
+# set — a hot-swapped table, a swapped sibling block, or a changed prefilter
+# literal table each invalidate every tree of the snapshot
+# --------------------------------------------------------------------------
+
+
+def test_restore_refused_after_hot_swap(tmp_path):
+    from repro.core import compile_regex, make_search_dfa
+
+    sm = StreamMatcher(_dfas(), policy=LAZY)
+    s = sm.open()
+    s.feed(b"abba")
+    sm.flush()
+    sm.snapshot(str(tmp_path))
+    assert sm.swap_patterns(
+        [make_search_dfa(compile_regex(".*zz[0-9]+"))]) is True
+    with pytest.raises(ValueError, match="different packed pattern set"):
+        sm.restore(str(tmp_path))
+
+
+def test_blocked_restore_refused_after_sibling_block_swap(tmp_path):
+    """The pre-fix hole: per-block table signatures alone would accept a
+    snapshot whose *other* blocks were swapped.  The full-set signature
+    stamped over every block's tree must refuse it."""
+    from repro.core import PatternSet
+    from repro.streaming import BlockedStreamMatcher
+
+    ps = PatternSet({"a": "ab+", "b": "[0-9]x", "c": "yy", "d": "x+y"},
+                    k_blk=2, search=True)
+    sm = BlockedStreamMatcher(ps, policy=LAZY, num_chunks=4)
+    s = sm.open()
+    s.feed(b"abb 3x")
+    sm.flush()
+    sm.snapshot(str(tmp_path))
+    # swap only block 1; block 0's own table bytes are untouched...
+    info = sm.swap_patterns(ps.with_patterns({"d": "qq+"}))
+    assert info["reused"] == [0] and info["rebuilt"] == [1]
+    # ...yet restoring block 0's tree must refuse too: its signature covers
+    # the whole set, and the in-flight swap changed a sibling block
+    fresh = BlockedStreamMatcher(sm.blocked, policy=LAZY)
+    with pytest.raises(ValueError, match="different packed pattern set"):
+        fresh.restore(str(tmp_path))
+    # a runtime still on the original set restores and resumes
+    back = BlockedStreamMatcher(ps, policy=LAZY, num_chunks=4)
+    (sess,) = back.restore(str(tmp_path))
+    sess.feed(b"y")
+    res = sess.close()
+    assert res.byte_count == 7
+    assert res.accepted.tolist() == [True, True, False, True]
+
+
+def test_blocked_snapshot_covers_prefilter_tables(tmp_path):
+    """Same tables, different prefilter config -> different identity."""
+    from repro.core import PatternSet
+    from repro.streaming import BlockedStreamMatcher
+
+    ps = PatternSet({"a": "abc", "b": "def"}, k_blk=1, search=True)
+    sm_on = BlockedStreamMatcher(ps, policy=LAZY, prefilter=True)
+    sm_off = BlockedStreamMatcher(ps, policy=LAZY, prefilter=False)
+    s = sm_on.open()
+    s.feed(b"ab")
+    sm_on.flush()
+    sm_on.snapshot(str(tmp_path))
+    with pytest.raises(ValueError, match="different packed pattern set"):
+        sm_off.restore(str(tmp_path))

@@ -1,0 +1,189 @@
+"""Pattern-set scale tier: K-blocked plans, prefilter gate, hot swap.
+
+The acceptance bar (ISSUE 9): a K=2048 pattern set runs through K-blocked
+plans with verdicts bit-identical — accepted *and* global final states — to
+an unblocked reference on the shared pattern prefix, with the required-
+literal prefilter skipping the blocks whose literals are absent; and a hot
+``swap_patterns`` rebuilds only the changed blocks, with at least one
+bucket lowering cache-hit surviving the swap (asserted on the executors'
+trace counters below).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (BlockedMatcher, Matcher, PatternSet, Prefilter,
+                        compile_regex, required_literal, window_fingerprints)
+from repro.streaming import BlockedStreamMatcher, StreamMatcher, TickPolicy
+from repro.streaming.ooo.fingerprint import segment_fingerprint
+
+KW = dict(num_chunks=4, lookahead_r=1, batch_tile=16)
+LAZY = TickPolicy(max_batch=1 << 30, max_delay=1 << 30)
+
+
+# --------------------------------------------------------------------------
+# tentpole acceptance: K=2048 blocked == unblocked K=32 on the shared prefix
+
+
+def test_k2048_blocked_prefix_identity():
+    pats = [f"K{i:03x}" for i in range(2048)]
+    bm = BlockedMatcher(pats, k_blk=32, **KW)
+    assert (bm.n_blocks, bm.n_patterns) == (64, 2048)
+    docs = [b"xx K000 yy", b"K7ff at end", b"nothing here", b"K020 K021"]
+    res = bm.membership_batch(docs)
+    # the gate leaves exactly the blocks whose literals occur: 0, 1, 63
+    assert bm.prefilter_skipped_blocks == 61
+    hits = np.flatnonzero(res.accepted.any(axis=0))
+    assert hits.tolist() == [0, 0x20, 0x21, 0x7FF]
+    # bit-identity on the shared prefix against an unblocked K=32 reference
+    ref = Matcher(PatternSet(pats[:32], k_blk=1 << 30, search=True), **KW)
+    rres = ref.membership_batch(docs)
+    assert (res.accepted[:, :32] == rres.accepted).all()
+    assert (res.final_states[:, :32] == rres.final_states).all()
+
+
+def test_blocked_full_bit_identity_no_prefilter():
+    """K=64 / k_blk=16, gate off: the whole [B, K] result — accepted and
+    re-based global final states — equals one unblocked pack."""
+    pats = [f"p{i:02d}x" for i in range(60)] + \
+           ["(ab|ba)+", "[0-9]{2}", "zz.?q", "w+"]
+    rng = np.random.default_rng(3)
+    docs = [bytes(rng.choice(np.frombuffer(b"abp019 zqwx", np.uint8),
+                             size=int(rng.integers(1, 48))).astype(np.uint8))
+            for _ in range(24)] + [b"p07x", b"abab 42 zzq www"]
+    bm = BlockedMatcher(pats, k_blk=16, prefilter=False, **KW)
+    ref = Matcher(PatternSet(pats, k_blk=1 << 30, search=True), **KW)
+    res, rres = bm.membership_batch(docs), ref.membership_batch(docs)
+    assert (res.accepted == rres.accepted).all()
+    assert (res.final_states == rres.final_states).all()
+    assert rres.accepted.any()
+
+
+def test_prefilter_soundness():
+    """The gate never changes a verdict, only skips guaranteed non-matches."""
+    pats = {f"n{i}": f"lit{i:02d}" for i in range(12)}
+    pats["free"] = "[xy]+z"  # no literal -> its block stays ungated
+    rng = np.random.default_rng(5)
+    frags = [f"lit{i:02d}".encode() for i in range(12)] + [b"xyz", b"qq "]
+    docs = [b"".join(frags[j] for j in rng.integers(0, len(frags), size=4))
+            for _ in range(32)]
+    on = BlockedMatcher(pats, k_blk=4, prefilter=True, **KW)
+    off = BlockedMatcher(pats, k_blk=4, prefilter=False, **KW)
+    assert (on.accepts_batch(docs) == off.accepts_batch(docs)).all()
+    assert off.prefilter_skipped_blocks == 0
+
+
+# --------------------------------------------------------------------------
+# prefilter building blocks
+
+
+def test_required_literal_units():
+    assert required_literal("foobar") == b"foobar"
+    assert required_literal(".*(foobar)") == b"foobar"       # search wrapper
+    assert required_literal("a[0-9]+barbaz[xy]?") == b"barbaz"
+    assert required_literal("(ab){3}") == b"ababab"           # exact repeat
+    assert required_literal("x(ab)+y") == b"ab"               # lo>=1 repeat
+    assert required_literal("[ab]+") is None                  # class, no run
+    assert required_literal("abc|abd") is None                # alternation
+    assert required_literal("(abc)end") == b"abcend"          # 1-option Alt
+
+
+def test_window_fingerprints_match_segment_fingerprint():
+    rng = np.random.default_rng(9)
+    data = rng.integers(0, 256, size=64).astype(np.uint8)
+    for length in (1, 3, 8):
+        got = window_fingerprints(data, length)
+        want = np.array([segment_fingerprint(bytes(data[i:i + length]))
+                         for i in range(len(data) - length + 1)],
+                        np.uint64)
+        assert (got == want).all()
+
+
+def test_prefilter_gating_matrix():
+    ps = PatternSet({"a": "needle", "b": "[ab]+"}, k_blk=1, search=True)
+    pf = Prefilter.from_pattern_set(ps)
+    assert pf.gated.tolist() == [True, False]  # block 1 has no literal
+    arrs = [np.frombuffer(b"hay needle hay", np.uint8),
+            np.frombuffer(b"no match", np.uint8)]
+    can = pf.can_match(arrs)
+    assert can.tolist() == [[True, True], [False, True]]
+
+
+# --------------------------------------------------------------------------
+# hot swap: partial rebuild, lowering-cache survival, epochs
+
+
+def test_swap_preserves_lowering_cache():
+    pats = {f"q{i:02d}": f"pat{i:02d}" for i in range(8)}
+    bm = BlockedMatcher(pats, k_blk=2, **KW)
+    docs = [b"xx pat03 pat06", b"pat00", b"none"]
+    before = bm.accepts_batch(docs)
+    traces0 = [m.executor.traces for m in bm.matchers]
+    info = bm.swap_patterns(bm.pattern_set.with_patterns({"q06": "NEW[0-9]"}))
+    assert info == {"reused": [0, 1, 2], "rebuilt": [3], "dropped": 0}
+    after = bm.accepts_batch(docs + [b"NEW7!"])
+    traces1 = [m.executor.traces for m in bm.matchers]
+    # acceptance bar: unchanged blocks' compiled lowerings survive the swap
+    # — re-running the same shapes through blocks 0..2 traces nothing new
+    assert traces1[:3] == traces0[:3]
+    assert traces1[3] > traces0[3]  # the rebuilt block really retraced
+    want = before.copy()
+    want[:, 6] = False  # q06 no longer matches "pat06"
+    assert (after[:3] == want).all()
+    assert after[3, 6] and after[3].sum() == 1  # new pattern live
+    epochs = bm.perf_report()["table_epochs"]
+    assert epochs == [0, 0, 0, 1]
+
+
+def test_matcher_swap_unit():
+    m = Matcher(compile_regex("ab+"), **KW)
+    assert m.accepts_batch([b"abb"])[0, 0]
+    assert m.swap_patterns(compile_regex("ab+")) is False  # signature-equal
+    assert m.planner.table_epoch == 0
+    assert m.swap_patterns(compile_regex("cd?")) is True
+    assert m.planner.table_epoch == 1
+    assert m.perf_report()["table_epoch"] == 1
+    assert m.perf_report()["prefilter_skipped_blocks"] is None
+    got = m.accepts_batch([b"abb", b"cd", b"c"])
+    assert got[:, 0].tolist() == [False, True, True]
+
+
+def test_matcher_refuses_multiblock_pattern_set():
+    ps = PatternSet(["aa", "bb", "cc"], k_blk=2, search=True)
+    with pytest.raises(ValueError, match="BlockedMatcher"):
+        Matcher(ps, **KW)
+    assert Matcher(PatternSet(["aa"], k_blk=2, search=True),
+                   **KW).accepts_batch([b"aa"])[0, 0]
+
+
+def test_stream_swap_carries_unchanged_blocks():
+    """Mid-stream hot swap: untouched blocks keep their cursors (and their
+    full byte history) bit-identically; swapped ones see post-swap bytes."""
+    ps = PatternSet({"a": "hello", "b": "wor", "c": "abc", "d": "wld"},
+                    k_blk=2, search=True)
+    sm = BlockedStreamMatcher(ps, policy=LAZY, **KW)
+    sess = sm.open()
+    sess.feed(b"hello wor")
+    sm.flush()
+    keep = sess.parts[0].cursor.lane_states.copy()
+    info = sm.swap_patterns(ps.with_patterns({"d": "world"}))
+    assert info["reused"] == [0] and info["rebuilt"] == [1]
+    # unchanged block 0: cursor untouched by the swap, bit for bit
+    assert (sess.parts[0].cursor.lane_states == keep).all()
+    sess.feed(b"ld!")
+    res = sess.close()
+    # "hello" matched pre-swap history; swapped "world" only saw "ld!"
+    assert res.accepted.tolist() == [True, True, False, False]
+    assert res.byte_count == 12
+
+
+def test_stream_swap_refuses_candidate_sessions():
+    """A [K, S] restricted map cannot be re-keyed onto new tables."""
+    m = Matcher(compile_regex(".*(ab)"), **KW)
+    sm = StreamMatcher(m, policy=LAZY, lane_ticks=True)
+    sess = sm.open_at(entry_class=0)
+    sess.feed(b"ab")
+    with pytest.raises(ValueError, match="candidate-keyed"):
+        sm.swap_patterns(compile_regex(".*(cd)"))
+    sm.close_map(sess)  # once closed, the swap goes through
+    assert sm.swap_patterns(compile_regex(".*(cd)")) is True
