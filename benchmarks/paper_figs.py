@@ -273,6 +273,15 @@ def bench_capacity_balance(d: int = 8, n_docs: int = 32,
     measure raggedness, not the balancing mechanism.  Wall clock: the
     mesh-sharded executor end to end on however many local devices exist
     (1 in this container; the layouts still differ).
+
+    Doc axis (PR 10): on a 2-D (doc x chunk) mesh the same Eq. 7 applies to
+    the *document count* of a tile — ``MeshLayout.tile_rows`` packs real
+    documents raggedly into the fixed physical row-blocks.  The skewed rows
+    here put the slow mesh rows first (the hard case: uniform positional
+    front-fill loads them before any fast row sees a document) on a
+    partially-filled tile (full row-blocks cannot shed documents), and the
+    per-row wall-clock-proxy skew ``(work_r / cap_r).max() / mean`` must
+    drop toward 1.0 under the ragged placement.
     """
     from repro.core import (ChunkLayout, Matcher, compile_regex,
                             make_search_dfa, profile_workers,
@@ -319,6 +328,38 @@ def bench_capacity_balance(d: int = 8, n_docs: int = 32,
         us = time_us(lambda: m.membership_batch(docs), repeats=2)
         emit(f"capacity_balance/sharded_{name}/D{d_loc}/docs_per_s",
              us / n_docs, n_docs / (us / 1e6))
+
+    # doc-axis raggedness (plan level, like the chunk rows above): slow mesh
+    # rows FIRST so uniform front-fill is maximally wrong, and a partial
+    # tile (m < tile) so placement has slack to move
+    from repro.core import capacity_weights
+    from repro.core.engine import MeshLayout
+    dd, dc = 4, 2
+    doc_caps = np.repeat([1.0, 2.0], (dd * dc) // 2)    # slow rows first
+    caps2 = doc_caps.reshape(dd, dc)
+    row_caps = caps2.sum(axis=1)
+    mesh_rows = tuple(ChunkLayout.weighted(width, 2 * dc, dc,
+                                           capacity_weights(caps2[r]))
+                      for r in range(dd))
+    tile, m = 16, 10
+    lens = np.full(m, doc_len, np.int64)
+    doc_skews = {}
+    for name, layout in (
+            ("uniform", MeshLayout(width, mesh_rows)),
+            ("ragged", MeshLayout(width, mesh_rows, row_weights=tuple(
+                capacity_weights(row_caps))))):
+        rowpos = layout.tile_rows(m, tile)
+        full = np.zeros(tile, np.int64)
+        full[rowpos] = lens
+        work = layout.device_work(full).astype(np.float64)
+        rwork = work.reshape(dd, dc).sum(axis=1) / row_caps
+        doc_skews[name] = float(rwork.max() / rwork.mean())
+        emit(f"capacity_balance/doc_axis/{name}/row_skew", 0.0,
+             doc_skews[name])
+        emit(f"capacity_balance/doc_axis/{name}/docs_on_slow_rows", 0.0,
+             float((rowpos < (dd // 2) * (tile // dd)).sum()))
+    emit("capacity_balance/doc_axis/skew_reduction", 0.0,
+         doc_skews["uniform"] / max(doc_skews["ragged"], 1e-9))
 
 
 # --------------------------------------------------------------------------
@@ -521,6 +562,13 @@ def bench_ooo_throughput(doc_len: int = 2048, seg_len: int = 256,
     flush / close must perform *zero* host-side compositions
     (``streaming.cursor.merge_calls``); the run aborts otherwise.
     ``smoke=True`` shrinks sizes for CI.
+
+    compose_scan microbench (PR 10): the gap-close bulk fold
+    (``Matcher.compose_lane_maps``) in isolation over a runs x run-length
+    sweep of real segment maps, jnp associative scan (local backend) vs the
+    Pallas scan-compose kernel (pallas backend).  Both lowerings must be
+    bit-identical (asserted in place) and the pallas lowering must actually
+    be the kernel (``perf_report()["compose_lowering"]``).
     """
     from repro.core import Matcher, compile_regex, make_search_dfa
     from repro.core.patterns import PCRE_PATTERNS
@@ -594,6 +642,70 @@ def bench_ooo_throughput(doc_len: int = 2048, seg_len: int = 256,
             f"host-merge regression: the out-of-order data path performed "
             f"{host_merges} host-side merges (must be 0 — composition "
             "belongs on device; see streaming.cursor.merge_calls)")
+
+    # compose_scan microbench: the bulk fold in isolation — jnp associative
+    # scan vs both Pallas kernels (grid-carry and in-kernel Blelloch tree)
+    sweep = ((8, 4), (8, 16)) if smoke else ((32, 4), (32, 16), (8, 64))
+    outs, rates = {}, {}
+    variants = (("jnp", "local", None), ("kernel_carry", "pallas", "carry"),
+                ("kernel_tree", "pallas", "tree"))
+    for label, backend, mode in variants:
+        mc = Matcher(dfas, num_chunks=1, batch_tile=64, backend=backend)
+        if mode is not None:
+            mc.executor.compose_mode = mode
+        cands = np.asarray(mc.dev.tables.candidates, np.int32)
+        for b, n in sweep:
+            prng = np.random.default_rng(53)
+            segs, keys = [], []
+            for _ in range(b):
+                # 2 prefix bytes so the run's first entry key is valid for
+                # any lookahead depth r <= 2
+                d = prng.integers(0, 256, size=2 + n * seg_len,
+                                  dtype=np.uint8).tobytes()
+                key, kseq = mc.dev.advance_key(-1, d[:2]), []
+                for i in range(n):
+                    p = d[2 + i * seg_len:2 + (i + 1) * seg_len]
+                    segs.append(p)
+                    kseq.append(key)
+                    key = mc.dev.advance_key(key, p)
+                keys.append(kseq)
+            keys = np.asarray(keys, np.int32)
+            flat = keys.reshape(-1)
+            # identity lanes at each entry key -> result lanes ARE the
+            # segments' restricted maps (the _match_batch construction)
+            res = mc.advance_cursors(
+                segs, np.ascontiguousarray(cands[flat], np.int32), flat)
+            maps = np.asarray(res.lane_states, np.int32)
+            maps = maps.reshape(b, n, *maps.shape[1:])
+            # bit-identity below is asserted on real candidate lanes only:
+            # pad lanes of composed maps hold evaluation-order-dependent
+            # passthrough (sequential carry vs tree reduction) and are
+            # never addressable through cand_index
+            cidx = np.asarray(mc.dev.tables.cand_index)
+            k0 = keys[:, 0]
+            s = cands.shape[-1]
+            feas = (np.take_along_axis(
+                cidx[k0], cands[k0].reshape(b, -1), axis=1)
+                .reshape(b, *cands.shape[1:]) == np.arange(s))
+            outs[(label, b, n)] = np.where(feas, np.asarray(
+                mc.compose_lane_maps(maps, keys)), -1)   # warm + compile
+            us = time_us(lambda: np.asarray(
+                mc.compose_lane_maps(maps, keys)), repeats=2)
+            rates[(label, b, n)] = (b * n) / (us / 1e6)
+            emit(f"ooo_throughput/compose_scan/{label}/R{b}xN{n}"
+                 f"/segments_per_s", us / (b * n), rates[(label, b, n)])
+        rep = mc.perf_report()
+        meta_note(f"ooo_throughput/compose_scan/{label}", rep)
+        want = "compose-scan" if mode is None else f"compose-kernel-{mode}"
+        assert rep["compose_lowering"] == want, \
+            f"{label}: unexpected compose lowering {rep['compose_lowering']}"
+    for label, _, _ in variants[1:]:
+        for b, n in sweep:
+            assert np.array_equal(outs[("jnp", b, n)],
+                                  outs[(label, b, n)]), \
+                f"compose lowerings disagree: {label} at R{b}xN{n}"
+            emit(f"ooo_throughput/compose_scan/{label}_vs_jnp/R{b}xN{n}",
+                 0.0, rates[(label, b, n)] / max(rates[("jnp", b, n)], 1e-9))
 
 
 # --------------------------------------------------------------------------

@@ -166,6 +166,22 @@ class LaneExecutor:
         """
         self.layout_epoch += 1
 
+    def invalidate_block_sizes(self) -> None:
+        """Drop compiled programs that baked a ``spec_l_blk`` choice.
+
+        The observed-traffic retune path (``Matcher.maybe_retune``) updates
+        ``spec_l_blk`` after construction; only the Pallas spec lowerings
+        consult it (at lowering time, as a static block shape), so only
+        entries whose kind starts with ``spec-kernel`` drop — everything
+        else (seq scans, jnp spec, compose lowerings) keeps its program and
+        the new block size takes effect on the next dispatch of each shape.
+        """
+        stale = [key for key, kind in self.lowering_kinds.items()
+                 if kind.startswith("spec-kernel")]
+        for key in stale:
+            self._lowered.pop(key, None)
+            self.lowering_kinds.pop(key, None)
+
     def retable(self, tables: DeviceTables) -> None:
         """Swap the constant matcher tables underneath the executor (the
         hot pattern swap, ``Matcher.swap_patterns``).
@@ -453,10 +469,15 @@ class LocalExecutor(LaneExecutor):
     """
 
     def __init__(self, tables: DeviceTables, *, num_chunks: int,
-                 use_kernel: bool = False, early_exit_segments: int = 4):
+                 use_kernel: bool = False, early_exit_segments: int = 4,
+                 compose_mode: str = "carry"):
         super().__init__(tables, num_chunks=num_chunks,
                          early_exit_segments=early_exit_segments)
         self.use_kernel = bool(use_kernel)
+        # which spec_compose_lanes kernel the OOO gap-close fold rides:
+        # "carry" (block-sequential grid carry) or "tree" (in-kernel
+        # Blelloch reduce); benchmarks measure both
+        self.compose_mode = compose_mode
         # device arrays of per-doc skipped symbol blocks, appended per kernel
         # dispatch and summed lazily (no sync on the hot path)
         self._skipped_log: list = []
@@ -471,6 +492,39 @@ class LocalExecutor(LaneExecutor):
         while self._skipped_log:
             self._skipped_total += int(np.asarray(self._skipped_log.pop()).sum())
         return self._skipped_total
+
+    def compose_lane_maps(self, lane_maps, entry_keys) -> jnp.ndarray:
+        """OOO gap-close fold, lowered to the ``spec_compose_lanes`` Pallas
+        kernel when this executor runs the kernel backend.
+
+        Same contract as the base jnp lowering (``("compose_scan", N)``):
+        ragged runs arrive right-padded with ``pad_key`` identities and only
+        the whole-run composition returns.  The kernel program is cached per
+        ``("compose_kernel", N)`` and shows up as ``"compose-kernel"`` in
+        ``lowering_kinds`` — ``Matcher.perf_report()`` surfaces which one
+        the OOO tick actually rode (CI asserts no silent jnp fallback on
+        the Pallas backend).
+        """
+        if not self.use_kernel:
+            return super().compose_lane_maps(lane_maps, entry_keys)
+        key = ("compose_kernel", int(lane_maps.shape[1]))
+        fn = self._lowered.get(key)
+        if fn is None:
+            from ...kernels import ops as kops
+
+            t = self.t
+            mode = self.compose_mode
+
+            def body(lanes, keys):
+                return kops.spec_compose_lanes(
+                    lanes, keys, t.cidx_pad_j, t.sinks_j,
+                    pad_key=t.pad_key, mode=mode)
+
+            fn = self._jit_lowering(body)
+            self._lowered[key] = fn
+            self.lowering_kinds[key] = f"compose-kernel-{mode}"
+        return fn(jnp.asarray(lane_maps, jnp.int32),
+                  jnp.asarray(entry_keys, jnp.int32))
 
     def _lower(self, plan: LanePlan, layout, batch: int):
         if plan.kind == "seq":

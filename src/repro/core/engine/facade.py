@@ -233,7 +233,7 @@ class Matcher:
                 capacities = calibrated_capacities(self._mesh_devices,
                                                    n_symbols=20_000, repeats=3)
             if capacities is None:
-                self.capacities = weights = None
+                self.capacities = weights = row_weights = None
             else:
                 caps = np.asarray(capacities, np.float64)
                 if caps.size != n_dev:
@@ -241,10 +241,12 @@ class Matcher:
                                      f"device), got {caps.size}")
                 self.capacities = caps
                 weights = self._row_weights(caps)
+                row_weights = self._doc_row_weights(caps)
             self.planner = Planner(num_chunks=num_chunks,
                                    max_buckets=max_buckets,
                                    devices=chunk_shards, weights=weights,
-                                   spec_m=spec_m, doc_shards=doc_shards)
+                                   spec_m=spec_m, doc_shards=doc_shards,
+                                   row_weights=row_weights)
             from .sharded import ShardedExecutor
             self.executor = ShardedExecutor(
                 self.dev, num_chunks=self.planner.num_chunks, mesh=mesh,
@@ -277,6 +279,15 @@ class Matcher:
         # call — lets the OOO tier assert "one associative_scan per
         # contiguous run", the same way merge_calls() guards the tick path
         self.compose_calls = 0
+        # observed-traffic accounting: every dispatched tile feeds a bounded
+        # (fill, length) reservoir; maybe_retune re-runs the autotuner on a
+        # probe shaped like this traffic once it drifts from what the
+        # current shapes were tuned on (the synthetic probe at cold start)
+        from ..profiling import TrafficProfile, synthetic_traffic
+        self.traffic = TrafficProfile()
+        self._tuned_traffic = (synthetic_traffic()
+                               if self._tuned is not None else None)
+        self.retunes = 0
 
     @staticmethod
     def _pack_source(source) -> PackedDFA:
@@ -360,6 +371,15 @@ class Matcher:
         return np.stack([capacity_weights(caps2[r])
                          for r in range(self._doc_shards)])
 
+    def _doc_row_weights(self, caps: np.ndarray) -> Optional[np.ndarray]:
+        # Eq. 1 on the doc axis: a mesh row's aggregate capacity (its chunk
+        # devices matching in parallel) sets how many *documents* it should
+        # host per tile — the ragged doc-tiling weights
+        if self._doc_shards <= 1:
+            return None
+        caps2 = caps.reshape(self._doc_shards, self._chunk_shards)
+        return capacity_weights(caps2.sum(axis=1))
+
     def rebalance(self, capacities: Sequence[float]) -> None:
         """Re-derive the capacity-weighted chunk layouts from new measured
         capacities (sharded backend only).
@@ -384,7 +404,8 @@ class Matcher:
         if not np.all(np.isfinite(caps)) or (caps <= 0).any():
             raise ValueError("capacities must be finite and > 0")
         self.capacities = caps
-        self.planner.set_weights(self._row_weights(caps))
+        self.planner.set_weights(self._row_weights(caps),
+                                 row_weights=self._doc_row_weights(caps))
         self.executor.invalidate_layouts()
 
     def recalibrate(self, *, n_symbols: int = 20_000,
@@ -404,6 +425,59 @@ class Matcher:
                                      repeats=repeats, refresh=True)
         self.rebalance(caps)
         return caps
+
+    # -- observed-traffic autotuning -----------------------------------------
+
+    def traffic_profile(self):
+        """Signature of the traffic dispatched so far (``ObservedTraffic``),
+        or None before any dispatch."""
+        return self.traffic.snapshot()
+
+    def maybe_retune(self, *, drift_threshold: float = 1.0,
+                     min_docs: int = 64, force: bool = False,
+                     time_fn=None) -> bool:
+        """Re-run the shape autotuner on the *observed* traffic when it has
+        drifted from what the current shapes were tuned on.
+
+        The construction-time tune measured a synthetic probe (8 x 2048-byte
+        documents); once real dispatches have accumulated ``min_docs``
+        documents and their ``ObservedTraffic`` signature has drifted
+        ``drift_threshold`` doublings or more (median length or tile fill,
+        ``ObservedTraffic.drift``) from the last-tuned traffic, the tuner
+        re-times candidates on a probe corpus shaped like the real traffic
+        and applies the winning ``l_blk`` — the one shape axis that can move
+        post-construction (``num_chunks`` and the mesh are baked into the
+        planner and executor; the tuned values still land in
+        ``perf_report()["autotune"]`` for the next cold start, and the disk
+        cache remembers them).  Returns True iff a retune ran.  ``force``
+        skips the drift gate (not the traffic requirement); ``time_fn`` is
+        the autotuner's deterministic measurement override for tests.
+        Requires ``autotune=True`` at construction; callers must invoke it
+        between batches, never mid-dispatch.
+        """
+        if not self.autotune:
+            raise ValueError("maybe_retune requires Matcher(autotune=True)")
+        obs = self.traffic.snapshot()
+        if obs is None or self.traffic.n_docs < int(min_docs):
+            return False
+        if not force and self._tuned_traffic is not None \
+                and self._tuned_traffic.drift(obs) < float(drift_threshold):
+            return False
+        from ..profiling import autotune_spec_shapes
+        mesh_shape = (None if self.backend != "sharded"
+                      else (self._doc_shards, self._chunk_shards))
+        self._tuned = autotune_spec_shapes(
+            self.packed, backend=self.backend,
+            num_chunks_candidates=sorted({4, 8, int(self.num_chunks)}),
+            mesh_shape=mesh_shape,
+            devices=(self.n_devices if self.backend == "sharded" else None),
+            lookahead_r=self._lookahead_r, observed=obs, time_fn=time_fn)
+        self._tuned_traffic = obs
+        self.retunes += 1
+        if self._tuned.l_blk:
+            self.executor.spec_l_blk[0] = int(self._tuned.l_blk)
+            self.executor.invalidate_block_sizes()
+        return True
 
     # -- public API ---------------------------------------------------------
 
@@ -445,15 +519,26 @@ class Matcher:
                       else 1)
             lane = self.planner.lane_plan(bucket, entry=entry_mode,
                                           spec_r=spec_r)
+            ragged = (spec and isinstance(layout, MeshLayout)
+                      and layout.is_ragged)
             for lo in range(0, bucket.doc_idx.size, self.batch_tile):
                 sel = bucket.doc_idx[lo:lo + self.batch_tile]
+                # ragged doc tiling: capacity-weighted layouts place real
+                # documents into mesh row-blocks proportionally (Eq. 7 on
+                # the doc axis) — slow rows get more zero-length pad rows.
+                # rowpos[r] is doc sel[r]'s physical tile row; results come
+                # back through the same (invertible) placement, so answers
+                # are bit-identical to the dense front-fill by construction
+                rowpos = (layout.tile_rows(sel.size, self.batch_tile)
+                          if ragged else np.arange(sel.size))
                 buf = np.zeros((self.batch_tile, bucket.width), np.uint8)
                 lens = np.zeros(self.batch_tile, np.int32)
                 for r, i in enumerate(sel):
-                    buf[r, :lengths[i]] = arrs[i]
-                    lens[r] = lengths[i]
+                    buf[rowpos[r], :lengths[i]] = arrs[i]
+                    lens[rowpos[r]] = lengths[i]
                 if tile_hook is not None:
                     tile_hook(bucket, layout, sel, lens)
+                self.traffic.record(sel.size, lengths[sel])
                 # operands stay host numpy: jit transfers them once at call
                 # time, where an eager jnp.asarray per operand costs an extra
                 # device round-trip each on the streaming hot path
@@ -462,7 +547,7 @@ class Matcher:
                     # pad rows scan from the pattern starts (ignored)
                     ent = np.tile(self.packed.starts,
                                   (self.batch_tile, 1)).astype(np.int32)
-                    ent[:sel.size] = entry[sel]
+                    ent[rowpos] = entry[sel]
                 elif entry_mode == ENTRY_LANES:
                     # pad rows carry in-range lanes and the pad boundary key,
                     # which the device merge composes as the identity
@@ -470,21 +555,21 @@ class Matcher:
                     ent = np.broadcast_to(
                         self.packed.starts.astype(np.int32)[None, :, None],
                         (self.batch_tile, k, s)).copy()
-                    ent[:sel.size] = entry[sel]
+                    ent[rowpos] = entry[sel]
                     ecls = np.full(self.batch_tile, self.dev.pad_key,
                                    np.int32)
-                    ecls[:sel.size] = entry_cls[sel]
+                    ecls[rowpos] = entry_cls[sel]
                 res, pos = self.executor.run(
                     lane, buf, lens, layout=layout,
                     entry=ent, entry_classes=ecls)
                 res, pos = np.asarray(res), np.asarray(pos)
-                out[sel] = res[:sel.size]
+                out[sel] = res[rowpos]
                 # a doc "exited early" if all its lanes hit absorbing states
                 # before its real symbols ran out (spec positions are
                 # chunk-local, so compare against the per-chunk fill)
                 eff = (np.minimum(bucket.chunk_len, lengths[sel]) if spec
                        else lengths[sel])
-                early += int((pos[:sel.size] < eff).sum())
+                early += int((pos[rowpos] < eff).sum())
                 calls += 1
                 rows += self.batch_tile
         return calls, rows, early
@@ -663,6 +748,12 @@ class Matcher:
         ragged runs are padded on the right; element 0's key is never read.
         N is padded to a power of two here to bound retraces (the compiled
         scan is cached per padded N).  ``compose_calls`` counts dispatches.
+
+        All lowerings (jnp scan, Pallas carry/tree kernels, sharded) are
+        bit-identical on real candidate lanes — the only lanes a consumer
+        can address through ``cand_index``.  Pad lanes (filler states
+        repeated to reach width S) hold evaluation-order-dependent
+        passthrough values; see ``kernels.ops.spec_compose_lanes``.
         """
         k = self.packed.n_patterns
         s = self.tables.i_max
@@ -743,7 +834,25 @@ class Matcher:
             "prefilter_skipped_blocks": None,
             "autotune": dataclasses.asdict(self._tuned)
                         if self._tuned is not None else None,
+            # which lowering compose_lane_maps (the OOO gap-close bulk path)
+            # actually rode: "compose-kernel-{carry,tree}" on the pallas
+            # backend, "compose-scan" (jnp associative_scan) elsewhere;
+            # None until the first compose dispatch
+            "compose_lowering": next(
+                (kind for kind in self.executor.lowering_kinds.values()
+                 if kind.startswith("compose")), None),
+            "compose_calls": self.compose_calls,
+            "retunes": self.retunes,
+            "traffic": None,
         }
+        obs = self.traffic.snapshot()
+        if obs is not None:
+            rep["traffic"] = {
+                "n_tiles": self.traffic.n_tiles,
+                "n_docs": self.traffic.n_docs,
+                "batch": obs.batch,
+                "median_len": int(np.median(obs.lengths)),
+            }
         if "tables" in self.dev.__dict__:  # lookahead analysis already ran
             rep["spec_r"] = self.dev.spec_r
             rep["lane_width"] = self.dev.i_max

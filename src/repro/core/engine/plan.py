@@ -299,14 +299,70 @@ class MeshLayout:
     maximum padded chunk buffer over the rows, so the SPMD chunk buffer keeps
     a single shape (shorter chunks tail-pad with the identity class — free in
     state space).
+
+    **Ragged doc rows.**  ``row_weights`` (Eq. 1 weights of each mesh row's
+    *aggregate* capacity) makes the document axis capacity-weighted too:
+    ``doc_counts`` applies Eq. 7 to the *document count* of a tile, and
+    ``tile_rows`` packs real documents into the fixed physical row-blocks
+    raggedly — a slow mesh row receives proportionally fewer real documents
+    (its remaining slots carry zero-length pads, free in the work model and
+    skipped by the early exit).  SPMD shard shapes stay uniform — only the
+    doc -> tile-row *placement* moves, so results are bit-identical to the
+    uniform layout by construction.  ``None`` = uniform placement.
     """
 
     width: int
     rows: tuple[ChunkLayout, ...]
+    row_weights: Optional[tuple[float, ...]] = None
 
     @property
     def doc_shards(self) -> int:
         return len(self.rows)
+
+    @property
+    def is_ragged(self) -> bool:
+        return self.row_weights is not None
+
+    def doc_counts(self, n: int) -> np.ndarray:
+        """Eq. 7 applied to the doc axis: documents per mesh row, summing
+        to ``n`` (uniform rows split evenly)."""
+        if self.row_weights is None:
+            d = self.doc_shards
+            return np.diff(np.linspace(0, n, d + 1).astype(np.int64))
+        part = weighted_partition(n, np.asarray(self.row_weights), 1)
+        return (part.end - part.start).astype(np.int64)
+
+    def tile_rows(self, m: int, tile: int) -> np.ndarray:
+        """Physical tile-row of each of ``m`` real documents ([m] int64).
+
+        The tile keeps ``tile // doc_shards`` physical rows per mesh row
+        (SPMD shard shapes are uniform); real documents pack into the
+        row-blocks per ``doc_counts``, clipped to the block size with the
+        overflow waterfilled into the fastest rows that still have spare
+        slots.  Uniform layouts return ``arange(m)`` — the legacy positional
+        packing, so the ragged path degrades to it exactly.
+        """
+        d = self.doc_shards
+        if tile % d:
+            raise ValueError(f"tile of {tile} rows does not split over "
+                             f"{d} doc shards")
+        if m > tile:
+            raise ValueError(f"{m} documents exceed the {tile}-row tile")
+        if self.row_weights is None:
+            return np.arange(m, dtype=np.int64)
+        rps = tile // d
+        counts = np.minimum(self.doc_counts(m), rps)
+        short = int(m - counts.sum())
+        order = np.argsort(-np.asarray(self.row_weights, np.float64),
+                           kind="stable")
+        while short > 0:
+            for r in order:
+                if short and counts[r] < rps:
+                    counts[r] += 1
+                    short -= 1
+        return np.concatenate(
+            [r * rps + np.arange(counts[r], dtype=np.int64)
+             for r in range(d)]) if m else np.zeros(0, np.int64)
 
     @property
     def num_chunks(self) -> int:
@@ -455,7 +511,8 @@ class Planner:
 
     def __init__(self, *, num_chunks: int = 8, max_buckets: int = 2,
                  devices: int = 1, weights: Optional[np.ndarray] = None,
-                 spec_m: int = 1, doc_shards: int = 1):
+                 spec_m: int = 1, doc_shards: int = 1,
+                 row_weights: Optional[np.ndarray] = None):
         if num_chunks < 1:
             raise ValueError("num_chunks must be >= 1")
         if max_buckets < 1:
@@ -475,13 +532,15 @@ class Planner:
         # post-swap LanePlan keys differently from pre-swap programs
         self.table_epoch = 0
         self.weights: Optional[np.ndarray] = None
+        self.row_weights: Optional[np.ndarray] = None
         self.spec_keys: list[int] = []
         self.seq_width = next_pow2(max(4 * self.num_chunks - 1, 1))
         self._layouts: dict[int, ChunkLayout | MeshLayout] = {}
-        if weights is not None:
-            self.set_weights(weights)
+        if weights is not None or row_weights is not None:
+            self.set_weights(weights, row_weights=row_weights)
 
-    def set_weights(self, weights: Optional[np.ndarray]) -> None:
+    def set_weights(self, weights: Optional[np.ndarray], *,
+                    row_weights: Optional[np.ndarray] = None) -> None:
         """Replace the per-device capacity weights; drop cached layouts.
 
         The between-tick rebalance path (``Matcher.rebalance``) lands here:
@@ -490,7 +549,23 @@ class Planner:
         and the compiled seq width survive (only chunk boundaries move, not
         shapes; executors that bake boundaries into lowered programs key
         their cache on a layout epoch, see ``executors.LaneExecutor``).
+
+        ``row_weights`` are the Eq. 1 weights of each mesh row's *aggregate*
+        capacity ([doc_shards]) — they make the document axis of every
+        emitted ``MeshLayout`` ragged (capacity-proportional per-row document
+        counts via ``MeshLayout.doc_counts``/``tile_rows``).  ``None`` keeps
+        the uniform doc split.
         """
+        if row_weights is None:
+            self.row_weights = None
+        else:
+            rw = np.asarray(row_weights, np.float64).reshape(-1)
+            if rw.shape != (self.doc_shards,):
+                raise ValueError(f"need one row weight per doc shard: "
+                                 f"expected {self.doc_shards}, got {rw.size}")
+            if not np.all(np.isfinite(rw)) or (rw <= 0).any():
+                raise ValueError("row weights must be finite and > 0")
+            self.row_weights = rw
         if weights is None:
             self.weights = None
         else:
@@ -529,10 +604,13 @@ class Planner:
             if self.doc_shards == 1:
                 self._layouts[chunk_len] = row_layout(0)
             else:
+                rw = (tuple(float(w) for w in self.row_weights)
+                      if self.row_weights is not None else None)
                 self._layouts[chunk_len] = MeshLayout(
                     width=width,
                     rows=tuple(row_layout(r)
-                               for r in range(self.doc_shards)))
+                               for r in range(self.doc_shards)),
+                    row_weights=rw)
         return self._layouts[chunk_len]
 
     # -- lane programs ------------------------------------------------------

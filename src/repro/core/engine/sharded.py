@@ -13,7 +13,13 @@ executor is the device-mesh lowering of the one ``LanePlan`` (see
   * the **document axis is sharded over "doc"**: mesh row ``r`` owns tile
     row-block ``r`` outright, so batch sizes beyond one host's memory scale
     along "doc" with no extra traffic — speculative documents no longer
-    replicate on every device;
+    replicate on every device.  Physical row-blocks keep the uniform
+    ``batch_tile / Dd`` SPMD shape even under capacity-weighted *document*
+    placement: ragged doc tiling (``plan.MeshLayout.tile_rows``) assigns
+    capacity-proportional document *counts* per row by routing real
+    documents to row-blocks host-side — a slow row simply receives more
+    zero-length pad rows, and this lowering never sees the difference (the
+    facade inverts the placement when scattering results);
   * chunk boundaries come from the planner's layout — uniform, or
     capacity-weighted via the paper's Eqs. 2–7 so a device with twice the
     measured capacity receives twice the real symbols.  On a 2-D mesh each

@@ -16,6 +16,14 @@ synthetic probe corpus and applies the measured winner.  Results cache per
 (DFA, candidates, fleet, backend) key — in-process by default, on disk when
 ``$REPRO_AUTOTUNE_CACHE`` names a JSON path (so repeated cold starts on the
 same host skip the measurement entirely).
+
+The synthetic probe is only the cold-start guess.  ``TrafficProfile``
+accumulates the (batch fill, document length) distribution of *real*
+dispatches; its ``snapshot()`` — an ``ObservedTraffic`` signature — can be
+fed back through ``autotune_spec_shapes(observed=...)`` so the probe corpus
+mirrors what the matcher actually serves, and ``ObservedTraffic.drift``
+tells ``Matcher.maybe_retune`` when the live distribution has moved far
+enough from the one the current shapes were tuned on to justify re-timing.
 """
 
 from __future__ import annotations
@@ -25,6 +33,7 @@ import hashlib
 import json
 import os
 import time
+from collections import deque
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -38,7 +47,8 @@ from .partition import capacity_weights
 
 __all__ = ["profile_capacity", "profile_workers", "synthetic_capacities",
            "calibrated_capacities", "clear_calibration_cache",
-           "TunedShape", "autotune_spec_shapes", "clear_autotune_cache"]
+           "TunedShape", "autotune_spec_shapes", "clear_autotune_cache",
+           "ObservedTraffic", "TrafficProfile", "synthetic_traffic"]
 
 
 def profile_capacity(dfa: DFA | None = None, *, n_symbols: int = 200_000,
@@ -135,6 +145,92 @@ def profile_workers(capacities: np.ndarray | list[float]) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
+# observed traffic (autotune feedback loop)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ObservedTraffic:
+    """Compact signature of dispatch traffic: the probe corpus to tune on.
+
+    ``batch`` is the median real-document fill of a dispatched tile;
+    ``lengths`` a sorted quantile sample of real document lengths (one probe
+    document per entry).  Hashable, so it extends the autotune cache key.
+    """
+
+    batch: int
+    lengths: tuple
+
+    def drift(self, other: "ObservedTraffic") -> float:
+        """Symmetric distribution distance, in doublings.
+
+        The max of |log2| ratios of the median document length and of the
+        tile fill — 1.0 means the traffic halved or doubled on some axis,
+        which is the scale at which a different ``l_blk`` / ``num_chunks``
+        starts winning.
+        """
+        def ratio(a: float, b: float) -> float:
+            return abs(float(np.log2(max(a, 1.0) / max(b, 1.0))))
+
+        med_a = float(np.median(self.lengths)) if self.lengths else 1.0
+        med_b = float(np.median(other.lengths)) if other.lengths else 1.0
+        return max(ratio(med_a, med_b),
+                   ratio(float(self.batch), float(other.batch)))
+
+
+def synthetic_traffic(probe_docs: int = 8,
+                      probe_bytes: int = 2048) -> ObservedTraffic:
+    """The traffic signature of the default synthetic probe corpus.
+
+    ``Matcher(autotune=True)`` seeds its drift baseline with this, so the
+    first ``maybe_retune`` compares real traffic against what the cold-start
+    tuning actually measured.
+    """
+    return ObservedTraffic(batch=int(probe_docs),
+                           lengths=(int(probe_bytes),) * int(probe_docs))
+
+
+class TrafficProfile:
+    """Bounded reservoir of observed (tile fill, document length) samples.
+
+    ``Matcher._dispatch`` records every dispatched tile; ``snapshot()``
+    collapses the reservoir into an ``ObservedTraffic`` signature (median
+    fill + length quantiles).  Bounded deques keep long-running servers at
+    O(max_samples) memory while tracking the *recent* distribution — which
+    is exactly what drift detection wants.
+    """
+
+    def __init__(self, max_samples: int = 4096):
+        if max_samples < 1:
+            raise ValueError("max_samples must be >= 1")
+        self.max_samples = int(max_samples)
+        self._lengths: deque = deque(maxlen=self.max_samples)
+        self._batches: deque = deque(maxlen=self.max_samples)
+        self.n_tiles = 0
+        self.n_docs = 0
+
+    @property
+    def n_samples(self) -> int:
+        return len(self._lengths)
+
+    def record(self, batch: int, lengths) -> None:
+        """One dispatched tile: ``batch`` real docs with these lengths."""
+        self.n_tiles += 1
+        self.n_docs += int(batch)
+        self._batches.append(int(batch))
+        self._lengths.extend(int(x) for x in np.asarray(lengths).ravel())
+
+    def snapshot(self, probe_docs: int = 8) -> Optional[ObservedTraffic]:
+        """Current signature, or None before any traffic was recorded."""
+        if not self._lengths:
+            return None
+        lens = np.asarray(self._lengths, dtype=np.float64)
+        qs = np.quantile(lens, np.linspace(0.0, 1.0, int(probe_docs)))
+        lengths = tuple(int(max(1, round(q))) for q in qs)
+        batch = int(max(1, round(float(np.median(self._batches)))))
+        return ObservedTraffic(batch=batch, lengths=lengths)
+
+
+# --------------------------------------------------------------------------
 # shape autotuner (Matcher(autotune=True))
 # --------------------------------------------------------------------------
 
@@ -167,12 +263,14 @@ def clear_autotune_cache() -> None:
 
 
 def _autotune_key(packed, backend: str, nc_cands, lb_cands, mesh_shape,
-                  devices, lookahead_r) -> str:
+                  devices, lookahead_r, observed=None) -> str:
     h = hashlib.sha256()
     h.update(packed.table.tobytes())
     h.update(packed.starts.tobytes())
+    obs_sig = None if observed is None else (int(observed.batch),
+                                             tuple(observed.lengths))
     h.update(repr((backend, tuple(nc_cands), tuple(lb_cands),
-                   mesh_shape, devices, lookahead_r,
+                   mesh_shape, devices, lookahead_r, obs_sig,
                    tuple(str(d) for d in jax.devices()))).encode())
     return h.hexdigest()[:24]
 
@@ -204,15 +302,24 @@ def _probe_corpus(num_docs: int, doc_bytes: int, n_alpha: int = 8):
             for _ in range(num_docs)]
 
 
+def _observed_corpus(observed: ObservedTraffic, n_alpha: int = 8):
+    """Synthetic bytes shaped like the observed traffic (deterministic)."""
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, n_alpha, size=max(1, int(n))).astype(np.uint8)
+            for n in observed.lengths]
+
+
 def _measure_config(packed, probe, *, backend: str, num_chunks: int,
                     mesh_shape, devices, l_blk: int, lookahead_r,
-                    repeats: int) -> float:
+                    repeats: int, batch_tile: Optional[int] = None) -> float:
     from .engine.facade import Matcher  # lazy: facade imports this module
     kw = {}
     if backend == "sharded":
         kw.update(mesh_shape=mesh_shape, devices=devices)
+    if batch_tile is None:
+        batch_tile = max(8, len(probe))
     m = Matcher(packed, num_chunks=num_chunks, backend=backend,
-                batch_tile=max(8, len(probe)), lookahead_r=lookahead_r, **kw)
+                batch_tile=int(batch_tile), lookahead_r=lookahead_r, **kw)
     if l_blk:
         m.executor.spec_l_blk[0] = int(l_blk)
     m.membership_batch(probe)  # warmup: trace + compile outside the clock
@@ -232,6 +339,7 @@ def autotune_spec_shapes(packed, *, backend: str = "local",
                          probe_docs: int = 8, probe_bytes: int = 2048,
                          repeats: int = 2,
                          time_fn: Optional[Callable[[dict], float]] = None,
+                         observed: Optional[ObservedTraffic] = None,
                          refresh: bool = False) -> TunedShape:
     """Measure candidate speculative shapes and return the fastest.
 
@@ -251,6 +359,14 @@ def autotune_spec_shapes(packed, *, backend: str = "local",
     fleet, backend) key: in-process always, and through the JSON file named
     by ``$REPRO_AUTOTUNE_CACHE`` when set (``refresh=True`` re-measures and
     overwrites both).
+
+    ``observed`` replaces the synthetic ``probe_docs`` x ``probe_bytes``
+    corpus with one shaped like real traffic (an ``ObservedTraffic``
+    snapshot from ``TrafficProfile`` — document-length quantiles become the
+    probe documents, the median tile fill becomes the probe batch tile).
+    The bytes stay synthetic; only the *shape* of the traffic is observed.
+    The signature extends the cache key, so re-tuning after drift never
+    reuses a stale measurement.
     """
     nc_cands = [int(c) for c in num_chunks_candidates if int(c) >= 1]
     if not nc_cands:
@@ -258,7 +374,7 @@ def autotune_spec_shapes(packed, *, backend: str = "local",
     lb_cands = ([int(b) for b in l_blk_candidates if int(b) >= 1]
                 if backend == "pallas" else [])
     key = _autotune_key(packed, backend, nc_cands, lb_cands, mesh_shape,
-                        devices, lookahead_r)
+                        devices, lookahead_r, observed)
     cache_path = os.environ.get(_AUTOTUNE_CACHE_ENV)
     if not refresh:
         if key in _AUTOTUNE_CACHE:
@@ -283,7 +399,12 @@ def autotune_spec_shapes(packed, *, backend: str = "local",
     else:
         mesh_cands = [mesh_shape if backend == "sharded" else None]
 
-    probe = _probe_corpus(probe_docs, probe_bytes)
+    if observed is None:
+        probe = _probe_corpus(probe_docs, probe_bytes)
+        batch_tile = None
+    else:
+        probe = _observed_corpus(observed)
+        batch_tile = max(8, len(probe), int(observed.batch))
     scores: dict[tuple, float] = {}
 
     def cost(nc: int, ms, lb: int) -> float:
@@ -297,7 +418,8 @@ def autotune_spec_shapes(packed, *, backend: str = "local",
                 scores[cfg] = _measure_config(
                     packed, probe, backend=backend, num_chunks=nc,
                     mesh_shape=ms, devices=devices, l_blk=lb,
-                    lookahead_r=lookahead_r, repeats=repeats)
+                    lookahead_r=lookahead_r, repeats=repeats,
+                    batch_tile=batch_tile)
         return scores[cfg]
 
     base_lb = lb_cands[-1] if lb_cands else 0

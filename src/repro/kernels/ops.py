@@ -19,13 +19,14 @@ from . import ref
 from .dfa_match import (spec_match_merge_lanes_pallas,
                         spec_match_merge_pallas, spec_match_pallas)
 from .flash_attn import flash_attn_pallas
-from .lvec_compose import lvec_compose_pallas
+from .lvec_compose import (lvec_compose_pallas, spec_compose_lanes_pallas,
+                           spec_compose_lanes_tree_pallas)
 from .onehot_match import onehot_block_maps_pallas
 from .token_mask import token_mask_pallas
 
 __all__ = ["on_tpu", "spec_match", "spec_match_merge",
-           "spec_match_merge_lanes", "lvec_compose", "onehot_block_maps",
-           "token_mask", "mxu_profitable", "flash_attn"]
+           "spec_match_merge_lanes", "spec_compose_lanes", "lvec_compose",
+           "onehot_block_maps", "token_mask", "mxu_profitable", "flash_attn"]
 
 
 def on_tpu() -> bool:
@@ -190,6 +191,55 @@ def spec_match_merge_lanes(table: jnp.ndarray, chunks: jnp.ndarray,
         interpret=interpret)
     k = sinks.shape[0]
     return out.reshape(out.shape[0], k, -1), skipped, l_blk
+
+
+def spec_compose_lanes(lane_maps: jnp.ndarray, entry_keys: jnp.ndarray,
+                       cand_index: jnp.ndarray, sinks: jnp.ndarray, *,
+                       pad_key: int, mode: str = "carry", n_blk: int = 8,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Fold [B, N, K, S] keyed lane-map runs in one kernel launch.
+
+    The OOO gap-close compose (``Matcher.compose_lane_maps``): per batch
+    element, element 0's lanes seed the carry and elements 1..N-1 fold in
+    keyed by ``entry_keys`` (``pad_key`` elements are identities, so ragged
+    runs arrive right-padded).  ``mode="carry"`` rides the block-sequential
+    grid-carry kernel (N padded to an ``n_blk`` multiple); ``mode="tree"``
+    rides the in-kernel Blelloch reduce (N padded to a power of two).
+    Returns the final composition [B, K, S]; semantics of
+    ``ref.spec_compose_lanes_ref`` == ``spec_merge_lanes_scan_ref[:, -1]``.
+
+    Contract caveat: the combine is associative on *real* candidate lanes
+    (the only lanes ``cand_index`` can ever select for a consumer), where
+    every lowering is bit-identical.  Pad lanes — filler states a key's
+    candidate row repeats to reach width S — pass through the acc-fallback
+    and so carry evaluation-order-dependent values: sequential ``"carry"``
+    matches the oracle everywhere, ``"tree"`` may differ from it on pad
+    lanes only.  No decision path reads a pad lane.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    b, n, k, s = lane_maps.shape
+    assert n >= 1, "empty runs are the caller's fast path"
+    if mode == "tree":
+        n_pad = 1 << max(0, n - 1).bit_length() if n > 1 else 1
+        if n_pad != n:
+            lane_maps = jnp.pad(lane_maps,
+                                ((0, 0), (0, n_pad - n), (0, 0), (0, 0)))
+            entry_keys = jnp.pad(entry_keys, ((0, 0), (0, n_pad - n)),
+                                 constant_values=pad_key)
+        return spec_compose_lanes_tree_pallas(
+            lane_maps, entry_keys, cand_index, sinks, pad_key=pad_key,
+            interpret=interpret)
+    if mode != "carry":
+        raise ValueError(f"unknown compose mode {mode!r}")
+    n_blk, n_pad = _pad_to_block(n, n_blk)
+    if n_pad != n:  # pad_key tail elements compose as identities
+        lane_maps = jnp.pad(lane_maps,
+                            ((0, 0), (0, n_pad - n), (0, 0), (0, 0)))
+        entry_keys = jnp.pad(entry_keys, ((0, 0), (0, n_pad - n)),
+                             constant_values=pad_key)
+    return spec_compose_lanes_pallas(
+        lane_maps, entry_keys, cand_index, sinks, pad_key=pad_key,
+        n_blk=n_blk, interpret=interpret)
 
 
 def lvec_compose(maps: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:

@@ -266,6 +266,20 @@ def spec_merge_lanes_scan_ref(lane_maps: np.ndarray, entry_keys: np.ndarray,
     return out
 
 
+def spec_compose_lanes_ref(lane_maps: np.ndarray, entry_keys: np.ndarray,
+                           cand_index: np.ndarray, sinks: np.ndarray,
+                           *, pad_cls: int) -> np.ndarray:
+    """Final composition of each keyed lane-map run: the gap-close fold.
+
+    The oracle for the ``spec_compose_lanes`` Pallas kernel and the
+    ``("compose_kernel", N)`` executor lowering — the last prefix of
+    :func:`spec_merge_lanes_scan_ref` (``Matcher.compose_lane_maps``
+    consumes only the whole-run composition).  Returns [B, K, S].
+    """
+    return spec_merge_lanes_scan_ref(lane_maps, entry_keys, cand_index,
+                                     sinks, pad_cls=pad_cls)[:, -1]
+
+
 def lvec_compose_ref(maps: jnp.ndarray) -> jnp.ndarray:
     """Left-to-right composition of full maps: out = m_{C-1} o ... o m_0.
 

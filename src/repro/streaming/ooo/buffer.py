@@ -72,12 +72,23 @@ class OooPolicy:
                             before an automatic flush batches them into one
                             ``Matcher.advance_cursors`` dispatch (1 =
                             match every arrival eagerly).
+    cross_stream_dedup_window : entries of the *global* (fingerprint,
+                            n_bytes, boundary key) -> matched-map LRU shared
+                            across streams (``fingerprint
+                            .FingerprintWindow``): identical content fed on
+                            different streams reuses the already-matched
+                            ``[K, S]`` map instead of re-dispatching —
+                            compute dedup, never drop dedup, so every
+                            stream's decisions stay bit-identical.  0
+                            (default) disables; the window is ephemeral
+                            across checkpoints.
     """
 
     max_buffered_segments: int = 1024
     max_buffered_bytes: int = 1 << 22
     dedup_window: int = 256
     match_batch: int = 32
+    cross_stream_dedup_window: int = 0
 
     def __post_init__(self):
         if self.max_buffered_segments < 1:
@@ -88,6 +99,8 @@ class OooPolicy:
             raise ValueError("dedup_window must be >= 0")
         if self.match_batch < 1:
             raise ValueError("match_batch must be >= 1")
+        if self.cross_stream_dedup_window < 0:
+            raise ValueError("cross_stream_dedup_window must be >= 0")
 
 
 @dataclasses.dataclass

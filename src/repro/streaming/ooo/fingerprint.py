@@ -26,9 +26,12 @@ the pair up to hash collisions (~2^-61 per comparison, non-adversarial).
 
 from __future__ import annotations
 
+from collections import OrderedDict
+
 import numpy as np
 
-__all__ = ["FP_MOD", "segment_fingerprint", "compose_fingerprints"]
+__all__ = ["FP_MOD", "segment_fingerprint", "compose_fingerprints",
+           "FingerprintWindow"]
 
 FP_MOD = (1 << 61) - 1  # Mersenne prime modulus
 
@@ -47,3 +50,55 @@ def compose_fingerprints(fp_a: int, fp_b: int, len_b: int) -> int:
     associative with identity ``(0, 0)``, mirroring Eq. 9 map composition.
     """
     return (fp_a * pow(256, int(len_b), FP_MOD) + fp_b) % FP_MOD
+
+
+class FingerprintWindow:
+    """Bounded LRU map of ``(fingerprint, n_bytes, boundary_key)`` -> value.
+
+    The cross-stream dedup window: many real feeds replay the *same content*
+    on different streams (fan-out topics, mirrored shards, at-least-once
+    transports re-partitioning), and a segment's candidate-keyed ``[K, S]``
+    transition map depends only on its bytes and its entry boundary key —
+    not on which stream carried it.  ``OooStreamMatcher`` therefore caches
+    matched maps here (``OooPolicy.cross_stream_dedup_window`` entries) and
+    reuses them across streams instead of re-matching, a *compute* dedup:
+    every stream still folds its own copy of the bytes, so decisions stay
+    bit-identical — only the device work disappears.
+
+    The window pairs the fingerprint with the byte count (leading-zero
+    blindness, see module docstring) and the boundary key (the map is keyed
+    on its Eq. 11 entry).  It is deliberately **ephemeral**: checkpoints
+    persist per-stream state only, and a restored matcher simply refills
+    the window as traffic flows.
+    """
+
+    __slots__ = ("capacity", "_entries", "hits", "misses")
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, fp: int, n_bytes: int, key: int):
+        """The cached value, or None; a hit refreshes LRU recency."""
+        k = (int(fp), int(n_bytes), int(key))
+        val = self._entries.get(k)
+        if val is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(k)
+        self.hits += 1
+        return val
+
+    def put(self, fp: int, n_bytes: int, key: int, value) -> None:
+        k = (int(fp), int(n_bytes), int(key))
+        self._entries[k] = value
+        self._entries.move_to_end(k)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)

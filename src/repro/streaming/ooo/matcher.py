@@ -19,7 +19,11 @@ and produces results bit-identical to feeding every stream in order:
   * **duplicates dedup** — every delivery is keyed by its Rabin
     fingerprint; a re-delivered ``seq_no`` with identical content drops, a
     conflicting one raises (``OooIntegrityError``).  Nothing is ever
-    double-composed;
+    double-composed.  With ``OooPolicy.cross_stream_dedup_window`` > 0, the
+    same content arriving on *different* streams (fan-out topics, mirrored
+    shards) is also deduped — as a compute dedup: the already-matched map
+    is reused (``fingerprint.FingerprintWindow``), every stream still folds
+    its own copy, decisions stay bit-identical;
   * **memory is bounded** — per-stream ``OooPolicy`` caps with
     ``ReorderBufferFull`` backpressure to the admission path.
 
@@ -39,7 +43,7 @@ from ..cursor import open_cursor
 from ..session import StreamResult
 from .buffer import (BufferedSegment, OooIntegrityError, OooPolicy,
                      ReorderBufferFull, SequenceGapError)
-from .fingerprint import segment_fingerprint
+from .fingerprint import FingerprintWindow, segment_fingerprint
 from .sequencer import Sequencer
 
 __all__ = ["OooStreamMatcher", "OooStream", "OooStats"]
@@ -53,6 +57,7 @@ _TAIL_BYTES = 2
 class OooStats:
     arrivals: int = 0           # feed() deliveries (incl. duplicates)
     duplicates: int = 0         # deliveries dropped by fingerprint dedup
+    cross_stream_hits: int = 0  # maps reused from the cross-stream window
     ooo_arrivals: int = 0       # non-duplicate deliveries ahead of frontier
     bytes_fed: int = 0
     spec_matched: int = 0       # segments matched ahead of sequencing
@@ -165,6 +170,12 @@ class OooStreamMatcher:
             self.matcher = Matcher(source, **matcher_kwargs)
         self.policy = policy or OooPolicy()
         self.stats = OooStats()
+        # cross-stream compute dedup: identical (fp, n_bytes, boundary key)
+        # content on *different* streams reuses the matched [K, S] map
+        # instead of re-dispatching; ephemeral (never checkpointed)
+        self._xwindow = (FingerprintWindow(
+            self.policy.cross_stream_dedup_window)
+            if self.policy.cross_stream_dedup_window else None)
         self._streams: dict[int, Sequencer] = {}
         self._next_sid = 0
         self._since_flush = 0   # accepted arrivals since the last flush
@@ -371,8 +382,36 @@ class OooStreamMatcher:
 
         Each row enters at the Eq. 11 candidates of its entry key (an
         identity lane map), so the result lanes ARE the segment's restricted
-        transition map; the raw payload is released on the spot.
+        transition map; the raw payload is released on the spot.  With a
+        cross-stream dedup window, content already matched under the same
+        (fingerprint, n_bytes, boundary key) — on *any* stream — reuses the
+        cached map and skips the dispatch entirely (the maps are read-only
+        from here on, so sharing one array across streams is safe).  The
+        dedup also collapses duplicates *within* the round, so fan-out
+        topics feeding N mirrored streams dispatch each segment once, not
+        N times.
         """
+        followers: dict = {}
+        if self._xwindow is not None:
+            misses = []
+            for sq, seg in batch:
+                lanes = self._xwindow.get(seg.fp, seg.n_bytes, seg.entry_key)
+                if lanes is not None:
+                    seg.lanes = lanes
+                    sq.buf.release_payload(seg)
+                    self.stats.cross_stream_hits += 1
+                    continue
+                fkey = (seg.fp, seg.n_bytes, seg.entry_key)
+                if fkey in followers:
+                    # same content, same round: ride the leader's dispatch
+                    followers[fkey].append((sq, seg))
+                    self.stats.cross_stream_hits += 1
+                else:
+                    followers[fkey] = []
+                    misses.append((sq, seg))
+            batch = misses
+            if not batch:
+                return
         cands = self.matcher.dev.tables.candidates
         segs = [seg.data for _, seg in batch]
         lanes = np.ascontiguousarray(
@@ -382,6 +421,13 @@ class OooStreamMatcher:
         for i, (sq, seg) in enumerate(batch):
             seg.lanes = np.asarray(res.lane_states[i], np.int32)
             sq.buf.release_payload(seg)
+            if self._xwindow is not None:
+                self._xwindow.put(seg.fp, seg.n_bytes, seg.entry_key,
+                                  seg.lanes)
+                for sq2, seg2 in followers[(seg.fp, seg.n_bytes,
+                                            seg.entry_key)]:
+                    seg2.lanes = seg.lanes
+                    sq2.buf.release_payload(seg2)
         self.stats.spec_matched += len(batch)
         self.stats.match_rounds += 1
         self.stats.bucket_calls += res.bucket_calls

@@ -1,0 +1,386 @@
+"""PR 10 perf tier: the batched scan-compose Pallas kernel, ragged
+capacity-weighted doc tiling, and observed-traffic autotuning.
+
+Covers the PR's guarantees end to end:
+
+  * ``ops.spec_compose_lanes`` (both the block-sequential grid-carry kernel
+    and the in-kernel Blelloch tree) is bit-identical to
+    ``ref.spec_compose_lanes_ref`` on *real* candidate tables — the compose
+    combine is associative only when sinks absorb, so random tables would
+    be a vacuous oracle — under r=1 and r=2 keys and ragged
+    (right-pad_key-padded) run lengths;
+  * ``Matcher.compose_lane_maps`` lowers to the kernel on the pallas
+    backend (``("compose_kernel", N)``, visible in ``perf_report()``), to
+    the jnp associative scan everywhere else, and every lowering agrees
+    bit-for-bit across backends and mesh shapes;
+  * ``MeshLayout.doc_counts`` / ``tile_rows`` apply Eq. 7 to the document
+    axis: capacity-proportional placement into fixed physical row-blocks,
+    degrading to positional packing on uniform layouts, and the sharded
+    matcher's results are bit-identical with and without ragged placement
+    (seeded and under hypothesis when installed);
+  * ``TrafficProfile`` / ``ObservedTraffic`` accumulate per-dispatch
+    (batch, lengths) samples, ``drift`` measures log2 distance, and
+    ``Matcher.maybe_retune`` re-tunes on the observed distribution once it
+    drifts — applying ``l_blk`` in place and invalidating the spec-kernel
+    lowerings so the next dispatch recompiles at the tuned shape.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Matcher, compile_regex, make_search_dfa
+from repro.core.engine.plan import MeshLayout, ChunkLayout
+from repro.core.partition import capacity_weights
+from repro.core.profiling import (ObservedTraffic, TrafficProfile,
+                                  clear_autotune_cache, synthetic_traffic)
+from repro.kernels import ops, ref
+
+PATTERNS = [".*(ab|ba){2}", ".*[0-9]{3}", ".*x+y"]
+ALPHABET = list(b"abxy0189")
+
+
+def _matcher(backend="local", r="auto", **kw):
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    kw.setdefault("num_chunks", 2)
+    kw.setdefault("batch_tile", 8)
+    return Matcher(dfas, backend=backend, lookahead_r=r, **kw)
+
+
+def _lane_runs(m, rng, lens, seg_len=48):
+    """Real-table lane-map runs from random traffic over ALPHABET.
+
+    ``lens[i]`` is row i's run length; rows shorter than ``max(lens)``
+    right-pad with ``pad_key`` identities (zero maps, never read).
+    Returns ``maps [B, N, K, S]`` and ``keys [B, N]``.
+    """
+    b, n = len(lens), max(lens)
+    k, s = m.packed.n_patterns, m.dev.tables.i_max
+    cands = np.asarray(m.dev.tables.candidates, np.int32)
+    maps = np.zeros((b, n, k, s), np.int32)
+    keys = np.full((b, n), m.dev.pad_key, np.int32)
+    segs, flat_keys, where = [], [], []
+    for i in range(b):
+        data = bytes(rng.choice(ALPHABET, size=2 + lens[i] * seg_len)
+                     .astype(np.uint8))
+        key = m.dev.advance_key(-1, data[:2])
+        for j in range(lens[i]):
+            p = data[2 + j * seg_len:2 + (j + 1) * seg_len]
+            segs.append(p)
+            flat_keys.append(key)
+            where.append((i, j))
+            keys[i, j] = key
+            key = m.dev.advance_key(key, p)
+    fk = np.asarray(flat_keys, np.int32)
+    res = m.advance_cursors(segs, np.ascontiguousarray(cands[fk]), fk)
+    for (i, j), lm in zip(where, np.asarray(res.lane_states, np.int32)):
+        maps[i, j] = lm
+    return maps, keys
+
+
+def _mask_pad_lanes(m, out, keys0, fill=-7):
+    """Restrict composed maps to the lanes the contract covers.
+
+    A composed run's entry axis is keyed on its first element's boundary
+    key; consumers always select a lane through ``cand_index``, which only
+    ever addresses *real* candidate lanes.  Pad lanes (duplicated filler
+    states that are not candidates of the key) hold passthrough values that
+    depend on evaluation order — sequential folds and tree reductions
+    legitimately disagree there, never on a readable lane.
+    """
+    t = m.dev.tables
+    cidx = np.asarray(t.cand_index)
+    cands = np.asarray(t.candidates)
+    b, (k, s) = len(keys0), cands.shape[1:]
+    mask = (np.take_along_axis(cidx[keys0], cands[keys0].reshape(b, -1),
+                               axis=1).reshape(b, k, s)
+            == np.arange(s))
+    return np.where(mask, out, fill)
+
+
+# --------------------------------------------------------------------------
+# ops-level: both kernels vs the sequential-fold oracle, real tables
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r", [1, 2])
+@pytest.mark.parametrize("mode", ["carry", "tree"])
+def test_spec_compose_lanes_matches_ref(mode, r):
+    rng = np.random.default_rng(80 + r)
+    m = _matcher("local", r)
+    for lens in ([4, 4, 4], [1, 5, 3, 7], [2], [6, 1]):  # ragged runs
+        maps, keys = _lane_runs(m, rng, lens)
+        want = np.asarray(ref.spec_compose_lanes_ref(
+            maps, keys, np.asarray(m.dev.cidx_pad_j),
+            np.asarray(m.packed.sinks), pad_cls=m.dev.pad_key))
+        got = np.asarray(ops.spec_compose_lanes(
+            maps, keys, m.dev.cidx_pad_j, m.dev.sinks_j,
+            pad_key=m.dev.pad_key, mode=mode))
+        if mode == "carry":
+            # the grid-carry kernel is a sequential left fold, like the
+            # oracle: every lane agrees, even unreadable pad lanes
+            np.testing.assert_array_equal(got, want, err_msg=f"carry r={r}")
+        np.testing.assert_array_equal(
+            _mask_pad_lanes(m, got, keys[:, 0]),
+            _mask_pad_lanes(m, want, keys[:, 0]),
+            err_msg=f"{mode} r={r}")
+
+
+def test_spec_compose_lanes_rejects_unknown_mode():
+    m = _matcher()
+    maps, keys = _lane_runs(m, np.random.default_rng(81), [2, 2])
+    with pytest.raises(ValueError, match="mode"):
+        ops.spec_compose_lanes(maps, keys, m.dev.cidx_pad_j, m.dev.sinks_j,
+                               pad_key=m.dev.pad_key, mode="bogus")
+
+
+# --------------------------------------------------------------------------
+# facade: lowering choice per backend + cross-backend bit-identity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r", [1, 2])
+def test_compose_lane_maps_lowerings_agree(r):
+    rng = np.random.default_rng(82 + r)
+    ms = {"local": _matcher("local", r), "pallas": _matcher("pallas", r),
+          "sharded": _matcher("sharded", r, mesh_shape=(2, 4),
+                              devices=8, num_chunks=4)}
+    mt = _matcher("pallas", r)
+    mt.executor.compose_mode = "tree"
+    ms["pallas-tree"] = mt
+    for lens in ([3, 3], [1, 6, 4], [5]):
+        maps, keys = _lane_runs(ms["local"], rng, lens)
+        outs = {name: _mask_pad_lanes(ms["local"],
+                                      np.asarray(m.compose_lane_maps(
+                                          maps, keys)), keys[:, 0])
+                for name, m in ms.items()}
+        for name, out in outs.items():
+            np.testing.assert_array_equal(out, outs["local"],
+                                          err_msg=f"{name} lens={lens}")
+    assert ms["local"].perf_report()["compose_lowering"] == "compose-scan"
+    assert ms["sharded"].perf_report()["compose_lowering"] == "compose-scan"
+    assert (ms["pallas"].perf_report()["compose_lowering"]
+            == "compose-kernel-carry")
+    assert (ms["pallas-tree"].perf_report()["compose_lowering"]
+            == "compose-kernel-tree")
+    assert all(m.compose_calls > 0 for m in ms.values())
+
+
+def test_ooo_pallas_tick_rides_compose_kernel():
+    """The OOO gap-close fold itself (not just the API) rides the kernel."""
+    from repro.streaming import OooPolicy, OooStreamMatcher
+
+    rng = np.random.default_rng(83)
+    m = _matcher("pallas")
+    doc = bytes(rng.choice(ALPHABET, size=512).astype(np.uint8))
+    want = m.membership_batch([doc])
+    ooo = OooStreamMatcher(m, policy=OooPolicy(match_batch=4))
+    s = ooo.open()
+    segs = [doc[i * 64:(i + 1) * 64] for i in range(8)]
+    for i in (3, 5, 7, 2, 6, 4, 1):  # arrive out of order, 0 last
+        s.feed(i, segs[i], prev_tail=doc[i * 64 - 2:i * 64])
+    s.feed(0, segs[0])
+    ooo.flush()
+    got = s.close()
+    np.testing.assert_array_equal(got.final_states, want.final_states[0])
+    assert m.compose_calls > 0
+    rep = m.perf_report()
+    assert str(rep["compose_lowering"]).startswith("compose-kernel"), rep
+
+
+# --------------------------------------------------------------------------
+# MeshLayout: Eq. 7 on the document axis
+# --------------------------------------------------------------------------
+
+def _mesh_layout(dd, dc, row_caps=None, width=64):
+    rows = tuple(ChunkLayout.uniform(width, dc, dc) for _ in range(dd))
+    rw = (tuple(capacity_weights(np.asarray(row_caps, np.float64)))
+          if row_caps is not None else None)
+    return MeshLayout(width, rows, row_weights=rw)
+
+
+def test_doc_counts_sums_and_weighting():
+    lay = _mesh_layout(4, 2, row_caps=[1, 1, 2, 2])
+    for n in (0, 1, 7, 12, 100):
+        counts = lay.doc_counts(n)
+        assert counts.sum() == n and (counts >= 0).all()
+    # fast rows get proportionally more documents
+    counts = lay.doc_counts(12)
+    assert counts[2] + counts[3] == 8 and counts[0] + counts[1] == 4
+    # uniform layouts split evenly
+    uni = _mesh_layout(4, 2)
+    np.testing.assert_array_equal(uni.doc_counts(8), [2, 2, 2, 2])
+    assert not uni.is_ragged and lay.is_ragged
+
+
+def test_tile_rows_places_and_waterfills():
+    lay = _mesh_layout(4, 2, row_caps=[1, 1, 2, 2])
+    rowpos = lay.tile_rows(10, 16)  # rps = 4
+    assert rowpos.shape == (10,) and len(set(rowpos.tolist())) == 10
+    per_row = np.bincount(rowpos // 4, minlength=4)
+    assert per_row.sum() == 10 and (per_row <= 4).all()
+    # slow rows hold fewer real documents than fast rows
+    assert per_row[:2].sum() < per_row[2:].sum()
+    # a full tile cannot be ragged: every slot is real
+    full = lay.tile_rows(16, 16)
+    assert sorted(full.tolist()) == list(range(16))
+    # uniform placement is exactly positional
+    np.testing.assert_array_equal(_mesh_layout(4, 2).tile_rows(10, 16),
+                                  np.arange(10))
+    with pytest.raises(ValueError):
+        lay.tile_rows(17, 16)    # m > tile
+    with pytest.raises(ValueError):
+        lay.tile_rows(4, 10)     # tile does not split over doc shards
+
+
+# --------------------------------------------------------------------------
+# ragged vs uniform doc placement: bit-identical end to end
+# --------------------------------------------------------------------------
+
+def _skewed_caps(dd, dc, rng):
+    """Per-device capacities with deliberately skewed per-row aggregates."""
+    row = rng.permutation(np.linspace(1.0, 2.5, dd))
+    return np.repeat(row, dc) * rng.uniform(0.9, 1.1, dd * dc)
+
+
+@pytest.mark.parametrize("mesh_shape", [(2, 4), (4, 2), (8, 1)])
+def test_ragged_doc_layout_bit_identical(mesh_shape):
+    dd, dc = mesh_shape
+    rng = np.random.default_rng(84 + dd)
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS]
+    kw = dict(num_chunks=max(2, dc), batch_tile=16, mesh_shape=mesh_shape,
+              devices=8)
+    uni = Matcher(dfas, backend="sharded", **kw)
+    rag = Matcher(dfas, backend="sharded",
+                  capacities=_skewed_caps(dd, dc, rng), **kw)
+    assert (rag.planner.row_weights is not None) == (dd > 1)
+    loc = Matcher(dfas, num_chunks=max(2, dc), batch_tile=16)
+    # partial tiles (m < batch_tile) are where placement has slack; a
+    # >1-tile batch covers the full-tile path too
+    for m_docs in (5, 11, 16, 23):
+        docs = [bytes(rng.choice(ALPHABET,
+                                 size=int(rng.integers(10, 300)))
+                      .astype(np.uint8)) for _ in range(m_docs)]
+        want = loc.membership_batch(docs)
+        for mm in (uni, rag):
+            got = mm.membership_batch(docs)
+            np.testing.assert_array_equal(got.final_states,
+                                          want.final_states)
+            np.testing.assert_array_equal(got.accepted, want.accepted)
+
+
+def test_ragged_doc_layout_bit_identical_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    dfas = [make_search_dfa(compile_regex(p)) for p in PATTERNS[:2]]
+    kw = dict(num_chunks=4, batch_tile=8, mesh_shape=(2, 4), devices=8)
+    uni = Matcher(dfas, backend="sharded", **kw)
+    rag = Matcher(dfas, backend="sharded",
+                  capacities=[1.0, 1.1, 0.9, 1.0, 2.1, 1.9, 2.0, 2.2], **kw)
+
+    @hyp.settings(max_examples=15, deadline=None)
+    @hyp.given(docs=st.lists(st.binary(min_size=0, max_size=120),
+                             min_size=1, max_size=7))
+    def check(docs):
+        got_u = uni.membership_batch(docs)
+        got_r = rag.membership_batch(docs)
+        np.testing.assert_array_equal(got_r.final_states,
+                                      got_u.final_states)
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# observed-traffic autotuning
+# --------------------------------------------------------------------------
+
+def test_traffic_profile_snapshot_and_drift():
+    p = TrafficProfile(max_samples=64)
+    assert p.snapshot() is None
+    for _ in range(10):
+        p.record(4, np.full(4, 256))
+    obs = p.snapshot()
+    assert obs.batch == 4 and int(np.median(obs.lengths)) == 256
+    assert p.n_tiles == 10 and p.n_docs == 40
+    # drift is symmetric-ish log2 distance: 256 -> 2048 is 3 octaves
+    far = ObservedTraffic(batch=4, lengths=(2048,) * 4)
+    assert obs.drift(far) == pytest.approx(3.0, abs=0.1)
+    assert obs.drift(obs) == pytest.approx(0.0, abs=1e-9)
+    syn = synthetic_traffic()
+    assert syn.batch == 8 and len(syn.lengths) == 8
+
+
+def test_maybe_retune_requires_autotune():
+    m = _matcher()
+    with pytest.raises(ValueError, match="autotune"):
+        m.maybe_retune()
+
+
+@pytest.fixture
+def fast_autotune(monkeypatch):
+    """Real autotuner, deterministic clock: construction-time tunes (which
+    would otherwise measure real probe workloads) take the injected
+    ``time_fn`` path unless the caller supplies their own."""
+    import repro.core.profiling as prof
+
+    real = prof.autotune_spec_shapes
+
+    def wrapped(packed, **kw):
+        kw.setdefault("time_fn", lambda cfg: 1.0)
+        if kw["time_fn"] is None:
+            kw["time_fn"] = lambda cfg: 1.0
+        return real(packed, **kw)
+
+    monkeypatch.setattr(prof, "autotune_spec_shapes", wrapped)
+    yield
+
+
+def test_maybe_retune_applies_observed_shape(fast_autotune):
+    clear_autotune_cache()
+    m = _matcher("pallas", autotune=True)
+    assert m.retunes == 0
+    # no traffic yet: nothing to retune on
+    assert not m.maybe_retune(time_fn=lambda c: 1.0)
+    rng = np.random.default_rng(85)
+    docs = [bytes(rng.choice(ALPHABET, size=4096).astype(np.uint8))
+            for _ in range(8)]
+    for _ in range(16):
+        m.membership_batch(docs)
+    assert m.traffic.n_docs >= 64
+    obs = m.traffic_profile()
+    assert obs is not None and int(np.median(obs.lengths)) == 4096
+    # observed 4096-byte docs vs the 2048-byte synthetic probe: 1 octave,
+    # below the default threshold -> gated; force ignores the gate
+    assert not m.maybe_retune(drift_threshold=1.5, time_fn=lambda c: 1.0)
+
+    def prefer_big_blocks(cfg):
+        return {0: 10.0, 128: 5.0, 256: 3.0, 512: 1.0}.get(
+            cfg.get("l_blk", 0), 10.0)
+
+    assert m.maybe_retune(drift_threshold=0.5, time_fn=prefer_big_blocks)
+    assert m.retunes == 1 and m.executor.spec_l_blk[0] == 512
+    # spec-kernel lowerings were dropped so the tuned shape takes effect
+    kinds = set(m.executor.lowering_kinds.values())
+    assert not any(k.startswith("spec-kernel") for k in kinds)
+    m.membership_batch(docs)  # recompiles at the tuned shape, bit-identical
+    kinds = set(m.executor.lowering_kinds.values())
+    assert any(k.startswith("spec-kernel") for k in kinds)
+    # freshly re-tuned: the same traffic no longer drifts
+    assert not m.maybe_retune(drift_threshold=0.5, time_fn=lambda c: 1.0)
+    clear_autotune_cache()
+
+
+def test_retune_keeps_results_bit_identical(fast_autotune):
+    clear_autotune_cache()
+    rng = np.random.default_rng(86)
+    docs = [bytes(rng.choice(ALPHABET, size=int(n)).astype(np.uint8))
+            for n in rng.integers(100, 2000, size=12)]
+    m = _matcher("pallas", autotune=True)
+    want = m.membership_batch(docs)
+    for _ in range(8):
+        m.membership_batch(docs)
+    assert m.maybe_retune(force=True,
+                          time_fn=lambda c: float(c.get("l_blk") or 64))
+    got = m.membership_batch(docs)
+    np.testing.assert_array_equal(got.final_states, want.final_states)
+    assert m.perf_report()["retunes"] == 1
+    assert m.perf_report()["traffic"]["n_docs"] >= 96
+    clear_autotune_cache()

@@ -485,3 +485,84 @@ def test_lane_ticks_scheduler_matches_host_reference(backend, shape):
         assert got[cls].n_bytes == want.byte_count
     with pytest.raises(ValueError, match="lane_ticks"):
         StreamMatcher(m).open_at(0)
+
+# --------------------------------------------------------------------------
+# cross-stream dedup: compute dedup, never drop dedup (PR 10)
+# --------------------------------------------------------------------------
+
+def test_cross_stream_dedup_bit_identical_and_hits():
+    """Identical content replayed on many streams reuses the matched map
+    (cross_stream_hits) without changing any stream's decision."""
+    rng = random.Random(11)
+    m = _matcher("local", None)
+    doc = _doc(rng, 40)
+    segs = _segments(rng, doc, with_empty=False)
+    offs = _offsets(segs)
+    order = list(range(len(segs)))[::-1]  # every non-frontier seg parks
+    n_streams = 4
+    results = {}
+    for window in (0, 64):
+        pol = OooPolicy(match_batch=4, cross_stream_dedup_window=window)
+        ooo = OooStreamMatcher(_matcher("local", None), policy=pol)
+        streams = [ooo.open() for _ in range(n_streams)]
+        for i in order:
+            tail = doc[max(0, offs[i] - 2):offs[i]]
+            for s in streams:
+                s.feed(i, segs[i], prev_tail=tail)
+            ooo.flush()
+        results[window] = [s.close() for s in streams]
+        if window:
+            assert ooo.stats.cross_stream_hits > 0
+            # the reused maps dispatched fewer device rows, not fewer answers
+            assert ooo.stats.spec_matched < n_streams * len(order)
+        else:
+            assert ooo.stats.cross_stream_hits == 0
+    want = _oracle(m, doc)
+    for window, res in results.items():
+        for r in res:
+            np.testing.assert_array_equal(r.final_states, want,
+                                          err_msg=f"window={window}")
+
+
+def test_cross_stream_dedup_keys_on_boundary_key():
+    """Same bytes at a different boundary key must NOT share a map."""
+    from repro.streaming.ooo.fingerprint import FingerprintWindow
+
+    w = FingerprintWindow(8)
+    w.put(123, 4, 2, "map-at-key-2")
+    assert w.get(123, 4, 2) == "map-at-key-2"
+    assert w.get(123, 4, 3) is None          # other key: miss
+    assert w.get(123, 5, 2) is None          # other length: miss
+    assert w.hits == 1 and w.misses == 2
+
+
+def test_fingerprint_window_lru_bound():
+    from repro.streaming.ooo.fingerprint import FingerprintWindow
+
+    w = FingerprintWindow(2)
+    w.put(1, 1, 0, "a")
+    w.put(2, 1, 0, "b")
+    assert w.get(1, 1, 0) == "a"             # refresh 1 -> 2 is LRU
+    w.put(3, 1, 0, "c")                      # evicts 2
+    assert len(w) == 2
+    assert w.get(2, 1, 0) is None
+    assert w.get(1, 1, 0) == "a" and w.get(3, 1, 0) == "c"
+    with pytest.raises(ValueError):
+        FingerprintWindow(0)
+
+
+def test_cross_stream_window_not_persisted():
+    """The window is ephemeral: policy round-trips through a checkpoint but
+    the cached maps do not (a restored matcher refills as traffic flows)."""
+    import tempfile
+
+    pol = OooPolicy(match_batch=1, cross_stream_dedup_window=16)
+    ooo = OooStreamMatcher(_matcher("local", None), policy=pol)
+    s = ooo.open()
+    s.feed(1, b"abab", prev_tail=b"xy")      # parks + matches via window path
+    assert ooo._xwindow is not None and len(ooo._xwindow) > 0
+    with tempfile.TemporaryDirectory() as d:
+        ooo.snapshot(d)
+        fresh = OooStreamMatcher(_matcher("local", None), policy=pol)
+        fresh.restore(d)
+        assert fresh._xwindow is not None and len(fresh._xwindow) == 0

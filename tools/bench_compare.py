@@ -12,11 +12,14 @@ with host load; the throughput rows are what the raw-speed tier promises.
 Usage:
     python tools/bench_compare.py BENCH_fresh.json [--baselines DIR]
         [--threshold 0.25] [--update]
+    python tools/bench_compare.py --trend [--baselines DIR]
 
 Exit codes: 0 = within budget, 1 = regression, 2 = usage/IO error.
 ``--update`` additionally copies the fresh artifact into the baselines
 directory (under its own basename) after a passing comparison — how a PR
-commits a new post-seed baseline.
+commits a new post-seed baseline.  ``--trend`` skips gating entirely and
+prints each throughput row's trajectory across every committed baseline
+(sorted by name), so a PR's perf claim is one table instead of archaeology.
 """
 
 from __future__ import annotations
@@ -48,9 +51,45 @@ def best_baselines(paths: list[str]) -> dict[str, tuple[float, str]]:
     return best
 
 
+def print_trend(baselines_dir: str) -> int:
+    """Per-row throughput across every committed baseline, oldest first.
+
+    Baselines sort by filename (``BENCH_pr<N>`` orders naturally up to
+    pr9 -> pr10 where lexicographic order breaks, so sort by the numeric
+    suffix when every file carries one).  Rows a baseline predates print
+    as ``-``; the final column is last/first growth.
+    """
+    paths = sorted(glob.glob(os.path.join(baselines_dir, "*.json")))
+
+    def order(p):
+        base = os.path.splitext(os.path.basename(p))[0]
+        digits = "".join(ch for ch in base if ch.isdigit())
+        return (int(digits) if digits else -1, base)
+
+    paths.sort(key=order)
+    if not paths:
+        print(f"bench_compare: no baselines under {baselines_dir}",
+              file=sys.stderr)
+        return 2
+    per_file = {os.path.basename(p): load_throughput_rows(p) for p in paths}
+    names = sorted({n for rows in per_file.values() for n in rows})
+    cols = list(per_file)
+    print("row\t" + "\t".join(cols) + "\tgrowth")
+    for name in names:
+        vals = [per_file[c].get(name) for c in cols]
+        present = [v for v in vals if v is not None]
+        growth = (f"{present[-1] / present[0]:.2f}x"
+                  if len(present) > 1 and present[0] > 0 else "-")
+        cells = [f"{v:,.0f}" if v is not None else "-" for v in vals]
+        print(name + "\t" + "\t".join(cells) + "\t" + growth)
+    print(f"bench_compare: {len(names)} row(s) across {len(cols)} baseline(s)")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="freshly produced BENCH_*.json")
     ap.add_argument("--baselines", default="benchmarks/baselines",
                     help="directory of committed baseline artifacts")
     ap.add_argument("--threshold", type=float, default=0.25,
@@ -59,8 +98,23 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="after a passing comparison, copy the fresh "
                          "artifact into the baselines directory")
+    ap.add_argument("--trend", action="store_true",
+                    help="print per-row throughput across all committed "
+                         "baselines instead of gating a fresh artifact")
     args = ap.parse_args(argv)
 
+    if args.trend:
+        if args.fresh is not None or args.update:
+            print("bench_compare: --trend takes no fresh artifact and no "
+                  "--update", file=sys.stderr)
+            return 2
+        try:
+            return print_trend(args.baselines)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"bench_compare: unreadable baseline: {e}", file=sys.stderr)
+            return 2
+    if args.fresh is None:
+        ap.error("fresh artifact required unless --trend")
     if not os.path.isfile(args.fresh):
         print(f"bench_compare: no such artifact: {args.fresh}",
               file=sys.stderr)

@@ -239,16 +239,21 @@ def scenario_snapshot_restore(dfas, docs, oracle, seg_len: int,
     return _verify(name, sessions, docs, oracle, sm2)
 
 
-def scenario_ooo_reorder(dfas, docs, oracle, seg_len: int) -> dict:
+def scenario_ooo_reorder(dfas, docs, oracle, seg_len: int,
+                         backend: str = "local") -> dict:
     """Reordered, duplicated and late-delivered segments through the
     out-of-order tier: arbitrary arrival permutation + at-least-once
     duplicates + one straggler segment per stream held back until the very
     end must still close bit-identical to the in-order oracle, with zero
-    host-side merges."""
+    host-side merges.  On ``backend="pallas"`` the scenario additionally
+    requires every gap-close to ride the Pallas compose kernel (the
+    ``compose-kernel-*`` lowering in ``perf_report``), not the jnp scan —
+    a silent fallback is a failure, not a slowdown."""
     from repro.streaming import OooPolicy, OooStreamMatcher, merge_calls
 
     rng = np.random.default_rng(1234)
-    ooo = OooStreamMatcher(dfas, policy=OooPolicy(match_batch=8))
+    ooo = OooStreamMatcher(dfas, policy=OooPolicy(match_batch=8),
+                           backend=backend)
     segs = [_segments(d, seg_len) for d in docs]
     streams = [ooo.open() for _ in docs]
     base = merge_calls()
@@ -269,11 +274,20 @@ def scenario_ooo_reorder(dfas, docs, oracle, seg_len: int) -> dict:
         s.feed(hold, seg, prev_tail=tail)
     finals = np.stack([s.close().final_states for s in streams])
     st = ooo.stats
-    return {"scenario": "ooo_reorder",
-            "ok": bool((finals == oracle).all()) and merge_calls() == base
-                  and st.duplicates > 0 and st.ooo_arrivals > 0,
+    rep = ooo.matcher.perf_report()
+    ok = (bool((finals == oracle).all()) and merge_calls() == base
+          and st.duplicates > 0 and st.ooo_arrivals > 0)
+    if backend == "pallas":
+        # gap-closes must have happened AND ridden the compose kernel
+        ok = (ok and ooo.matcher.compose_calls > 0
+              and str(rep["compose_lowering"]).startswith("compose-kernel"))
+    name = "ooo_reorder" if backend == "local" else f"ooo_reorder_{backend}"
+    return {"scenario": name,
+            "ok": ok,
             "bit_identical": bool((finals == oracle).all()),
             "host_merges": merge_calls() - base,
+            "compose_calls": ooo.matcher.compose_calls,
+            "compose_lowering": rep["compose_lowering"],
             "arrivals": st.arrivals, "duplicates": st.duplicates,
             "ooo_arrivals": st.ooo_arrivals, "spec_matched": st.spec_matched,
             "gap_closes": st.gap_closes, "scan_folds": st.scan_folds,
@@ -297,6 +311,7 @@ def run_faultbench(*, n_streams: int = 8, n_bytes: int = 192,
         scenario_snapshot_restore(dfas, docs, oracle, seg_len,
                                   src_shape=(2, 4), dst_shape=(8, 1)),
         scenario_ooo_reorder(dfas, docs, oracle, seg_len),
+        scenario_ooo_reorder(dfas, docs, oracle, seg_len, backend="pallas"),
     ]
 
 
